@@ -1,0 +1,29 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 2, **kwargs):
+    """Median wall time in microseconds (post-warmup, block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times)), out
+
+
+def moving_average(x: np.ndarray, w: int = 10) -> np.ndarray:
+    if len(x) < w:
+        return x
+    c = np.cumsum(np.insert(x, 0, 0.0, axis=0), axis=0)
+    return (c[w:] - c[:-w]) / w

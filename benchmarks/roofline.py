@@ -1,0 +1,94 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw               (819e9 B/s)
+  collective term = collective_bytes_per_device / ICI link bw   (~50e9 B/s)
+
+HLO numbers come from the calibrated dry-run records (cost_analysis is
+per-device under SPMD; scan bodies were calibrated via unrolled compiles).
+Also derives MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per device
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core.budget import V5E
+
+def _default_dir():
+    # prefer the optimized artifacts when present; baseline is preserved in
+    # experiments/dryrun_baseline (see EXPERIMENTS.md §Perf)
+    for d in ("experiments/dryrun_opt", "experiments/dryrun",
+              "experiments/dryrun_baseline"):
+        if os.path.isdir(d) and os.listdir(d):
+            return d
+    return "experiments/dryrun"
+
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR") or _default_dir()
+
+
+def model_flops_per_device(arch: str, shape: str, devices: int) -> float:
+    cfg = get_config(arch)
+    seq, batch, kind = INPUT_SHAPES[shape]
+    n = cfg.active_param_count()
+    if kind == "train":
+        tokens = seq * batch
+        return 6.0 * n * tokens / devices
+    if kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n * tokens / devices
+    # decode: one token per sequence
+    return 2.0 * n * batch / devices
+
+
+def analyze(record: dict) -> dict:
+    dev = record["devices"]
+    flops = record["flops"]
+    bytes_acc = record["bytes_accessed"]
+    coll = record["collective_total_bytes"]
+    t_compute = flops / V5E.peak_flops
+    t_memory = bytes_acc / V5E.hbm_bw
+    t_coll = coll / V5E.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(record["arch"], record["shape"], dev)
+    return {
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.removesuffix("_s"),
+        "model_flops_per_device": mf,
+        "useful_ratio": round(mf / flops, 4) if flops else None,
+        "bound_time_s": round(max(terms.values()), 6),
+    }
+
+
+def run():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        a = analyze(rec)
+        tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        rows.append((f"roofline_{tag}_bound_{a['dominant']}", 0.0,
+                     a["bound_time_s"]))
+    if not rows:
+        rows.append(("roofline_no_dryrun_artifacts_found", 0.0, 0))
+    return rows
+
+
+def full_table() -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        out.append({"arch": rec["arch"], "shape": rec["shape"],
+                    "mesh": rec["mesh"], **analyze(rec)})
+    return out

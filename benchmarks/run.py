@@ -1,0 +1,40 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig2  goodput_estimation   — estimated vs realized goodput fidelity
+  fig3  time_distribution    — wall-time decomposition vs baselines
+  fig4  utility_convergence  — U(x_bar) convergence + gap to fluid optimum
+  tblI  scheduler_bench      — GOODSPEED-SCHED solver timings + C* budgets
+  e2e   engine_e2e           — real-model Algorithm-1 rounds
+  ablations                  — utility-family / budget / top-k sweeps
+  roofline                   — terms from the dry-run artifacts (§Roofline)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablations, engine_e2e, goodput_estimation,
+                            roofline, scheduler_bench, time_distribution,
+                            utility_convergence)
+    modules = [goodput_estimation, time_distribution, utility_convergence,
+               scheduler_bench, engine_e2e, ablations, roofline]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in modules:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{mod.__name__},ERROR,0", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"{failed} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

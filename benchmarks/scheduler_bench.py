@@ -1,0 +1,46 @@
+"""Scheduler microbenchmark (supports paper Table I deployment configs).
+
+Times GOODSPEED-SCHED solves at the paper's configurations (N=4, C=24/28;
+N=8, C=16/20) and at production scale (N=256 draft servers), for both the
+exact greedy and the threshold-bisection solver, plus the TPU-adapted
+budget derivation C* for each assigned verify-model architecture."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.configs import ARCHITECTURES
+from repro.core.budget import derive_budget
+from repro.core.scheduler import solve_greedy, solve_threshold
+
+CONFIGS = [(4, 24), (4, 28), (8, 16), (8, 20), (64, 256), (256, 1024)]
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for n, c in CONFIGS:
+        alpha = jax.random.uniform(key, (n,), minval=0.1, maxval=0.95)
+        w = jnp.ones((n,))
+        us_t, out_t = time_call(
+            lambda a=alpha, ww=w, cc=c: solve_threshold(a, ww, cc), iters=20)
+        rows.append((f"sched_threshold_N{n}_C{c}", round(us_t, 1),
+                     int(jnp.sum(out_t.S))))
+        if c <= 64:
+            us_g, out_g = time_call(
+                lambda a=alpha, ww=w, cc=c: solve_greedy(a, ww, cc), iters=20)
+            rows.append((f"sched_greedy_N{n}_C{c}", round(us_g, 1),
+                         round(float(out_g.objective), 3)))
+
+    # Table-I analogue: v5e-adapted budget C* per verify model
+    for name in ("qwen3-8b", "stablelm-12b", "deepseek-v2-lite-16b"):
+        cfg = ARCHITECTURES[name]
+        kvb = (cfg.num_kv_heads * cfg.resolved_head_dim * 2 * 2
+               * cfg.num_layers)  # bytes per token of KV, bf16
+        c_star = derive_budget(n_servers=8, params=cfg.param_count(),
+                               kv_bytes_per_token=kvb, max_prefix_len=2048,
+                               chips=8)
+        rows.append((f"tableI_budget_{name}_8chip", 0.0, c_star))
+    return rows

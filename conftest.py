@@ -1,0 +1,6 @@
+import os
+import sys
+
+# make `tests.proptest` and `benchmarks.*` importable regardless of how
+# pytest is invoked (the documented command is `PYTHONPATH=src pytest tests/`)
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,66 @@
+"""Train a ~100M-parameter draft model on the synthetic workload.
+
+Demonstrates the training substrate end-to-end: config -> Model -> AdamW ->
+jit'd train_step -> checkpoint save/restore.  Loss should fall from
+~ln(vocab) toward the Zipf-mixture entropy.  (Training better draft models
+raises alpha_i, which is exactly what GoodSpeed's scheduler rewards.)
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data.pipeline import token_stream
+from repro.models import Model
+from repro.training import checkpoint
+from repro.training.optimizer import AdamW
+from repro.training.train_state import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/goodspeed_draft_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-param qwen3-family draft model
+    cfg = get_reduced("qwen3-8b", num_layers=8, d_model=512, num_heads=8,
+                      num_kv_heads=4, head_dim=64, d_ff=2048,
+                      vocab_size=8192)
+    model = Model(cfg)
+    print(f"model: {cfg.name}-reduced  params~{cfg.param_count()/1e6:.1f}M")
+
+    opt = AdamW(learning_rate=3e-4, warmup_steps=20, total_steps=args.steps)
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, opt, remat=False))
+
+    losses = []
+    t0 = time.time()
+    for i, batch in enumerate(token_stream(cfg.vocab_size, args.batch,
+                                           args.seq, args.steps)):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss={losses[-1]:.4f}  "
+                  f"lr={float(metrics['lr']):.2e}  "
+                  f"gnorm={float(metrics['grad_norm']):.2f}  "
+                  f"({(time.time() - t0):.0f}s)")
+    assert losses[-1] < losses[0], "loss must decrease"
+
+    checkpoint.save(args.ckpt, state.params, {"step": args.steps,
+                                              "config": cfg.name})
+    restored = checkpoint.restore(args.ckpt, state.params)
+    leaves_equal = all(
+        bool((a == b).all()) for a, b in zip(
+            jax.tree.leaves(state.params), jax.tree.leaves(restored)))
+    print(f"checkpoint round-trip OK: {leaves_equal}  -> {args.ckpt}.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Fast perf-iteration probe: per-group calibrated costs WITHOUT the full
+scanned compile.  Usage:
+  PYTHONPATH=src python experiments/perf_probe.py <arch> <shape>
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+import sys
+
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh
+from repro.distributed.sharding import SERVE_RULES, TRAIN_RULES
+from repro.configs import INPUT_SHAPES, get_config
+import dataclasses
+
+arch, shape = sys.argv[1], sys.argv[2]
+cfg = get_config(arch)
+cfg = dataclasses.replace(cfg, dtype="bfloat16", param_dtype="bfloat16")
+if len(sys.argv) > 3 and sys.argv[3] == "--ep":
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, shard_map_ep=True))
+    print("(shard_map expert parallelism ON)")
+mesh = make_production_mesh()
+kind = INPUT_SHAPES[shape][2]
+rules = TRAIN_RULES if kind == "train" else SERVE_RULES
+flops, bytes_acc, coll, meta = dryrun._calibrated_costs(cfg, shape, mesh, rules)
+print(f"arch={arch} shape={shape}")
+print(f"  flops/dev          {flops:.4e}  ({flops/197e12:.3f}s)")
+print(f"  bytes/dev          {bytes_acc:.4e}  ({bytes_acc/819e9:.3f}s)")
+print(f"  collective B/dev   {coll:.4e}  ({coll/50e9:.3f}s)")
+print(f"  meta {meta}")

@@ -1,0 +1,7 @@
+"""GoodSpeed: fair-goodput adaptive speculative decoding (JAX, TPU-native).
+
+Reproduction + production framework for Tran et al., CS.DC 2025.
+See README.md for the public API tour.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,57 @@
+"""Architecture registry: the 10 assigned archs + paper-experiment configs."""
+from __future__ import annotations
+
+from repro.configs.base import (EncoderConfig, MLAConfig, ModelConfig,
+                                MoEConfig, reduced)
+from repro.configs.deepseek_v2_lite_16b import CONFIG as deepseek_v2_lite_16b
+from repro.configs.h2o_danube_3_4b import CONFIG as h2o_danube_3_4b
+from repro.configs.internvl2_2b import CONFIG as internvl2_2b
+from repro.configs.olmo_1b import CONFIG as olmo_1b
+from repro.configs.qwen3_8b import CONFIG as qwen3_8b
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as qwen3_moe_235b_a22b
+from repro.configs.recurrentgemma_9b import CONFIG as recurrentgemma_9b
+from repro.configs.stablelm_12b import CONFIG as stablelm_12b
+from repro.configs.whisper_base import CONFIG as whisper_base
+from repro.configs.xlstm_350m import CONFIG as xlstm_350m
+
+ARCHITECTURES: dict[str, ModelConfig] = {
+    c.name: c for c in (
+        whisper_base, h2o_danube_3_4b, internvl2_2b, olmo_1b, xlstm_350m,
+        stablelm_12b, qwen3_moe_235b_a22b, recurrentgemma_9b, qwen3_8b,
+        deepseek_v2_lite_16b,
+    )
+}
+
+# Input shapes assigned to this paper (name -> (seq_len, global_batch, kind))
+INPUT_SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ARCHITECTURES[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHITECTURES)}")
+
+
+def get_reduced(name: str, **overrides) -> ModelConfig:
+    return reduced(get_config(name), **overrides)
+
+
+def shape_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """Gate per DESIGN §4: long_500k only for sub-quadratic archs."""
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, ("full attention: 500k decode cache is quadratic-cost/"
+                       "linear-memory prohibitive; see DESIGN.md §4")
+    return True, ""
+
+
+__all__ = [
+    "ARCHITECTURES", "INPUT_SHAPES", "ModelConfig", "MoEConfig", "MLAConfig",
+    "EncoderConfig", "get_config", "get_reduced", "reduced",
+    "shape_supported",
+]

@@ -1,0 +1,216 @@
+"""Unified architecture configuration.
+
+One ``ModelConfig`` dataclass describes every assigned architecture
+(dense / MoE / SSM / hybrid / VLM / audio enc-dec).  Block composition is
+expressed by ``block_pattern`` — a tuple of block kinds cycled over the
+layer stack — so heterogeneous stacks (RecurrentGemma's 1 local-attention :
+2 RG-LRU, xLSTM's mLSTM/sLSTM mix) use the same machinery as homogeneous
+transformers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0            # intermediate size of the shared path
+    capacity_factor: float = 1.25   # GShard-style dense dispatch capacity
+    router_aux_weight: float = 0.01 # load-balance loss weight
+    # shard_map expert parallelism (§Perf it.1e): shard-local routing +
+    # dispatch, explicit all-to-alls to the expert-owning model shards.
+    # Off by default (pjit/GSPMD path); the dry-run/probe flips it on.
+    shard_map_ep: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V2 Multi-head Latent Attention."""
+    kv_lora_rank: int = 512
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+    q_lora_rank: int = 0            # 0 = no query compression (V2-Lite)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec models (Whisper)."""
+    num_layers: int
+    source_len: int                 # e.g. 1500 audio frames after the conv stub
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // num_heads
+
+    # block composition: cycled over the stack.  kinds:
+    #   attn | sliding_attn | local_attn | mlstm | slstm | rglru
+    block_pattern: tuple = ("attn",)
+    window: int = 0                 # sliding/local attention window
+    logit_softcap: float = 0.0      # attention tanh soft-capping
+    final_logit_softcap: float = 0.0  # output-logit soft-capping (RecurrentGemma)
+
+    # attention details
+    qk_norm: bool = False           # Qwen3-style per-head RMSNorm on q,k
+    rope_theta: float = 10000.0
+    rope_pct: float = 1.0           # partial rotary (StableLM-2: 0.25)
+    pos_embedding: str = "rope"     # rope | learned | none
+    mla: Optional[MLAConfig] = None
+
+    # norms / block wiring
+    norm_type: str = "rmsnorm"      # rmsnorm | layernorm | nonparam_ln
+    parallel_block: bool = False    # attn and MLP share the input (StableLM-2)
+    mlp_act: str = "swiglu"         # swiglu | gelu | geglu
+    tie_embeddings: bool = False
+
+    # MoE / enc-dec / frontend
+    moe: Optional[MoEConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    frontend: Optional[str] = None  # audio | vision: stubbed embedding input
+    num_prefix_embeds: int = 0      # VLM: patch embeddings prepended to text
+
+    # SSM internals
+    ssm_num_heads: int = 4          # xLSTM heads
+    ssm_proj_factor: float = 2.0    # mLSTM up-projection factor
+    rglru_d_rnn: int = 0            # RG-LRU recurrent width (0 -> d_model)
+    conv1d_width: int = 4           # temporal conv in recurrent blocks
+
+    # numerics
+    dtype: str = "float32"          # activation dtype
+    param_dtype: str = "float32"
+
+    # dry-run cost calibration: run the layer stack as an unrolled python
+    # loop instead of lax.scan (XLA's cost_analysis counts a while body
+    # ONCE, so scanned stacks under-report FLOPs; the dry-run compiles
+    # unrolled G=1 and G=2 variants and extrapolates linearly)
+    unroll_scan: bool = False
+
+    # citation for the assigned pool entry
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 (MXU lane alignment and
+        16-way model-axis divisibility)."""
+        return int(math.ceil(self.vocab_size / 256) * 256)
+
+    @property
+    def layer_kinds(self) -> tuple:
+        """block kind of every layer (pattern cycled)."""
+        p = self.block_pattern
+        return tuple(p[i % len(p)] for i in range(self.num_layers))
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder is not None
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode memory is sub-linear in context (sliding/local
+        attention, recurrent state) — gate for the long_500k shape."""
+        full_attn = any(k == "attn" for k in self.layer_kinds)
+        return not full_attn
+
+    def param_count(self) -> float:
+        """Approximate parameter count (embeddings + blocks), for roofline
+        MODEL_FLOPS and budget derivation."""
+        d, hd = self.d_model, self.resolved_head_dim
+        h, kv = self.num_heads, self.num_kv_heads
+        n_embed = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        per = {}
+        if self.mla is not None:
+            m = self.mla
+            q_in = m.q_lora_rank or d
+            attn = (d * q_in if m.q_lora_rank else 0) \
+                + q_in * h * (m.qk_nope_head_dim + m.qk_rope_head_dim) \
+                + d * (m.kv_lora_rank + m.qk_rope_head_dim) \
+                + m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim) \
+                + h * m.v_head_dim * d
+        else:
+            attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        per["attn"] = per["sliding_attn"] = per["local_attn"] = attn
+        mlp = 3 * d * self.d_ff if self.mlp_act in ("swiglu", "geglu") \
+            else 2 * d * self.d_ff
+        if self.moe is not None:
+            mo = self.moe
+            expert = 3 * d * mo.d_ff_expert
+            mlp = mo.num_experts * expert + d * mo.num_experts \
+                + mo.num_shared_experts * 3 * d * mo.d_ff_shared
+        d_rnn = self.rglru_d_rnn or d
+        per["rglru"] = 2 * d * d_rnn + d_rnn * d + d_rnn * self.conv1d_width \
+            + 2 * d_rnn
+        d_in = int(d * self.ssm_proj_factor)
+        per["mlstm"] = 2 * d * d_in + d_in * d + 3 * d_in * d_in // self.ssm_num_heads
+        per["slstm"] = 4 * d * d + 2 * d * self.d_ff if self.d_ff else 8 * d * d
+        total = n_embed
+        for k in self.layer_kinds:
+            blk = per.get(k, attn)
+            if k in ("attn", "sliding_attn", "local_attn") and self.d_ff:
+                blk = blk + mlp
+            total += blk
+        if self.encoder is not None:
+            total += self.encoder.num_layers * (attn + mlp)
+        return float(total)
+
+    def active_param_count(self) -> float:
+        """Parameters touched per token (MoE: only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        mo = self.moe
+        # MoE replaces the MLP of every attention-bearing layer
+        moe_layers = sum(1 for k in self.layer_kinds
+                         if k in ("attn", "sliding_attn", "local_attn"))
+        unused = (mo.num_experts - mo.top_k) * 3 * self.d_model * mo.d_ff_expert
+        return self.param_count() - float(unused) * moe_layers
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test variant: same family, tiny dims (<=2 layers, d<=512, <=4
+    experts), per the assignment's reduced-config smoke-test rule."""
+    pattern = cfg.block_pattern
+    n_layers = max(2, len(pattern)) if len(pattern) > 1 else 2
+    small = dict(
+        num_layers=n_layers,
+        d_model=min(cfg.d_model, 128),
+        num_heads=min(cfg.num_heads, 4),
+        num_kv_heads=min(cfg.num_kv_heads, 2),
+        head_dim=32,
+        d_ff=min(cfg.d_ff, 256) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        window=min(cfg.window, 16) if cfg.window else 0,
+        rglru_d_rnn=min(cfg.rglru_d_rnn, 128) if cfg.rglru_d_rnn else 0,
+        num_prefix_embeds=min(cfg.num_prefix_embeds, 8),
+    )
+    if cfg.moe is not None:
+        # capacity_factor = E/k makes capacity >= T: no token is ever
+        # dropped, so prefill/decode exactly reproduce train logits (the
+        # full configs keep the paper-realistic 1.25 dropping capacity).
+        small["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=2, d_ff_expert=64,
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1),
+            d_ff_shared=64 if cfg.moe.num_shared_experts else 0,
+            capacity_factor=2.0)
+    if cfg.encoder is not None:
+        small["encoder"] = EncoderConfig(num_layers=2, source_len=16)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,29 @@
+"""deepseek-v2-lite-16b [moe] — MLA (kv_lora=512) + 2 shared + 64 routed top-6.
+
+27L d_model=2048 16H (kv=16) d_ff=1408/expert vocab=102400  [arXiv:2405.04434]
+MLA caches the 512-dim latent + 64-dim rope key instead of full K/V — the
+paper's KV-cache compression.  The pool entry lists both "64e" and "160
+routed"; we use the self-consistent lite dims (64 routed, top-6, 2 shared).
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b",
+    arch_type="moe",
+    num_layers=27,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,                    # per-expert intermediate size
+    vocab_size=102400,
+    block_pattern=("attn",),
+    norm_type="rmsnorm",
+    mlp_act="swiglu",
+    mla=MLAConfig(kv_lora_rank=512, qk_rope_head_dim=64,
+                  qk_nope_head_dim=128, v_head_dim=128, q_lora_rank=0),
+    moe=MoEConfig(num_experts=64, top_k=6, d_ff_expert=1408,
+                  num_shared_experts=2, d_ff_shared=1408,
+                  capacity_factor=1.25),
+    source="arXiv:2405.04434",
+)

@@ -1,0 +1,23 @@
+"""h2o-danube-3-4b [dense] — llama+mistral mix with sliding-window attention.
+
+24L d_model=3840 32H (GQA kv=8) d_ff=10240 vocab=32000  [arXiv:2401.16818]
+SWA (window 4096) makes this the one *dense* arch eligible for long_500k.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    arch_type="dense",
+    num_layers=24,
+    d_model=3840,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=120,
+    d_ff=10240,
+    vocab_size=32000,
+    block_pattern=("sliding_attn",),
+    window=4096,
+    norm_type="rmsnorm",
+    mlp_act="swiglu",
+    source="arXiv:2401.16818",
+)

@@ -1,0 +1,25 @@
+"""internvl2-2b [vlm] — InternLM2 language backbone + stubbed InternViT.
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553  [arXiv:2404.16821]
+The vision encoder + MLP projector are stubbed: ``input_specs`` supplies 256
+patch embeddings [B, 256, 2048] prepended to the text tokens.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    arch_type="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    block_pattern=("attn",),
+    norm_type="rmsnorm",
+    mlp_act="swiglu",
+    frontend="vision",
+    num_prefix_embeds=256,
+    source="arXiv:2404.16821",
+)

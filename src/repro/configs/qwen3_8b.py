@@ -1,0 +1,23 @@
+"""qwen3-8b [dense] — qk-norm GQA.
+
+36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936  [hf:Qwen/Qwen3-8B]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    arch_type="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=151936,
+    block_pattern=("attn",),
+    qk_norm=True,
+    rope_theta=1e6,
+    norm_type="rmsnorm",
+    mlp_act="swiglu",
+    source="hf:Qwen/Qwen3-8B",
+)

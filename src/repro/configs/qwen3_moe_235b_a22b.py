@@ -1,0 +1,26 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts, top-8, qk-norm GQA.
+
+94L d_model=4096 64H (GQA kv=4) d_ff=1536/expert vocab=151936
+[hf:Qwen/Qwen3-30B-A3B family scaled to 235B-A22B dims]
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    arch_type="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,                    # per-expert intermediate size
+    vocab_size=151936,
+    block_pattern=("attn",),
+    qk_norm=True,
+    rope_theta=1e6,
+    norm_type="rmsnorm",
+    mlp_act="swiglu",
+    moe=MoEConfig(num_experts=128, top_k=8, d_ff_expert=1536,
+                  capacity_factor=1.25),
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

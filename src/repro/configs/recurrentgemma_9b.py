@@ -1,0 +1,27 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, 1 attn : 2 recurrent.
+
+38L d_model=4096 16H (GQA kv=1, MQA) d_ff=12288 vocab=256000
+[arXiv:2402.19427]  38 = 12x(rglru,rglru,local_attn) + 2 remainder rglru.
+Local window 2048; recurrent state O(1) — runs long_500k.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    arch_type="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,               # MQA in the local-attention layers
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    block_pattern=("rglru", "rglru", "local_attn"),
+    window=2048,
+    rglru_d_rnn=4096,
+    conv1d_width=4,
+    norm_type="rmsnorm",
+    mlp_act="geglu",
+    final_logit_softcap=30.0,
+    source="arXiv:2402.19427",
+)

@@ -1,0 +1,25 @@
+"""stablelm-12b [dense] — StableLM-2 family: parallel attn/MLP blocks,
+partial rotary (25%), LayerNorm.
+
+40L d_model=5120 32H (GQA kv=8) d_ff=13824 vocab=100352
+[hf:stabilityai/stablelm-2-1_6b scaled to the assigned 12B dims]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    arch_type="dense",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=160,
+    d_ff=13824,
+    vocab_size=100352,
+    block_pattern=("attn",),
+    norm_type="layernorm",
+    rope_pct=0.25,                # StableLM-2 partial rotary
+    parallel_block=True,          # attn + MLP share the pre-norm input
+    mlp_act="swiglu",
+    source="hf:stabilityai/stablelm-2-1_6b",
+)

@@ -1,0 +1,26 @@
+"""whisper-base [audio] — encoder-decoder with stubbed conv/mel frontend.
+
+6L d_model=512 8H (kv=8) d_ff=2048 vocab=51865  [arXiv:2212.04356]
+The mel-spectrogram + conv feature extractor is a stub: ``input_specs``
+supplies precomputed frame embeddings [B, 1500, 512] to the encoder.
+"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    arch_type="audio",
+    num_layers=6,                 # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,               # MHA
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    block_pattern=("attn",),
+    pos_embedding="learned",
+    norm_type="layernorm",
+    mlp_act="gelu",
+    encoder=EncoderConfig(num_layers=6, source_len=1500),
+    frontend="audio",
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,26 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks, attention-free.
+
+24L d_model=1024 4H (kv=4) d_ff=0 vocab=50304  [arXiv:2405.04517]
+d_ff=0: blocks carry their own up/down projections (mLSTM proj_factor=2).
+Pattern follows the paper's xLSTM[7:1] ratio: 7 mLSTM then 1 sLSTM per 8.
+Recurrent state is O(1) in context — runs long_500k.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    arch_type="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    norm_type="rmsnorm",
+    ssm_num_heads=4,
+    ssm_proj_factor=2.0,
+    tie_embeddings=True,
+    source="arXiv:2405.04517",
+)

@@ -1,0 +1,27 @@
+"""GoodSpeed core: the paper's contribution as composable JAX modules."""
+from repro.core.budget import TpuSpec, V5E, derive_budget, ridge_tokens
+from repro.core.coordinator import Coordinator, RoundLog, RoundState, simulate
+from repro.core.estimator import EstimatorState, GoodputEstimator, StepSchedule
+from repro.core.fluid import integrate_fluid, optimal_goodput
+from repro.core.goodput import expected_goodput, marginal_gain
+from repro.core.latency import LatencyModel
+from repro.core.scheduler import (SchedulerOutput, fixed_s, make_scheduler,
+                                  objective_value, random_s, solve_greedy,
+                                  solve_threshold)
+from repro.core.speculative import (VerifyResult, acceptance_probability,
+                                    draft_tokens_from_logits, verify)
+from repro.core.utility import LOG_UTILITY, UtilitySpec, make_utility
+
+__all__ = [
+    "TpuSpec", "V5E", "derive_budget", "ridge_tokens",
+    "Coordinator", "RoundLog", "RoundState", "simulate",
+    "EstimatorState", "GoodputEstimator", "StepSchedule",
+    "integrate_fluid", "optimal_goodput",
+    "expected_goodput", "marginal_gain",
+    "LatencyModel",
+    "SchedulerOutput", "fixed_s", "make_scheduler", "objective_value",
+    "random_s", "solve_greedy", "solve_threshold",
+    "VerifyResult", "acceptance_probability", "draft_tokens_from_logits",
+    "verify",
+    "LOG_UTILITY", "UtilitySpec", "make_utility",
+]

@@ -1,0 +1,70 @@
+"""Verify-server token-budget C derivation, adapted to TPU v5e (DESIGN §2).
+
+The paper picks C by profiling an H100 (HBM memory headroom + latency
+tolerance).  On TPU we derive C from first principles using the roofline
+model of the batched verify forward pass:
+
+* Each verify pass runs the target model over T = sum_i (S_i + 1) <= C + N
+  tokens.  The matmul FLOPs grow ~ 2 * P * T (P = parameter count) while the
+  weight traffic is ~ bytes(P) regardless of T — so small T is memory-bound
+  and per-token cost is ~free until arithmetic intensity reaches the ridge
+  point  I* = peak_flops / hbm_bw  (~240 FLOP/byte for v5e bf16).
+
+* C* = the token count at the knee: beyond it, verify latency grows linearly
+  with T and longer drafts stop being "free", so the budget should sit at
+  the knee (same reasoning as the paper's "ideal number of tokens per
+  forward pass to fully utilize both compute and memory bandwidth").
+
+* A memory cap analogous to the paper's 75%-of-HBM rule bounds the KV-cache
+  + activation footprint of the verify batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    """Per-chip TPU v5e constants used throughout the repo."""
+
+    peak_flops: float = 197e12       # bf16 FLOP/s
+    hbm_bw: float = 819e9            # bytes/s
+    hbm_bytes: float = 16e9          # v5e HBM capacity
+    ici_bw: float = 50e9             # bytes/s per link
+    headroom: float = 0.75           # paper's <=75% memory rule
+
+
+V5E = TpuSpec()
+
+
+def ridge_tokens(bytes_per_param: int = 2, spec: TpuSpec = V5E) -> int:
+    """Tokens per forward pass at the roofline ridge point.
+
+    Per token the dense stack does ~2 FLOPs per parameter; the pass streams
+    each parameter once (bytes_per_param).  Compute time >= weight-traffic
+    time  <=>  2 * P * T / peak >= P * bpp / bw  <=>  T >= bpp/2 * peak/bw.
+    """
+    return int(round(bytes_per_param / 2 * spec.peak_flops / spec.hbm_bw))
+
+
+def derive_budget(
+    n_servers: int,
+    params: float,
+    kv_bytes_per_token: float,
+    max_prefix_len: int,
+    chips: int = 1,
+    bytes_per_param: int = 2,
+    spec: TpuSpec = V5E,
+) -> int:
+    """TPU-adapted C: min(roofline knee, memory-headroom cap) - N bonus slots.
+
+    ``chips`` scales both capacity and bandwidth for a sharded verify server.
+    """
+    knee = ridge_tokens(bytes_per_param, spec) * chips
+    weight_bytes = params * bytes_per_param
+    free = spec.headroom * spec.hbm_bytes * chips - weight_bytes
+    # every verified token needs a KV slot against the longest prefix
+    mem_cap = free / max(kv_bytes_per_token * (max_prefix_len + 1), 1.0) \
+        if free > 0 else 0
+    c = int(max(min(float(knee), mem_cap) - n_servers, n_servers))
+    return c

@@ -1,0 +1,175 @@
+"""Algorithm 1 — the GoodSpeed round loop, bound into a jit-able simulator.
+
+The coordinator owns the verification-server state (estimator + current
+allocation) and advances one *round* per call:
+
+  (1) draft servers generate S_i(t) tokens           [done by the caller or
+  (2) drafts are sent to the verifier                 the synthetic world]
+  (3) batching
+  (4) rejection-sampling verification                -> speculative.verify
+      computing x_i(t), updating alpha_hat (Eq.3) and X^beta (Eq.4)
+  (5) GOODSPEED-SCHED solve for S(t+1)               -> scheduler.solve_*
+  (6) allocation broadcast back
+
+Two drivers are provided:
+
+* ``simulate_analytic`` — the acceptance channel is sampled directly from
+  its law (truncated geometric with the true time-varying alpha_i(t)); the
+  workload is an arbitrary alpha trajectory.  This is the fast path used
+  for the Fig. 2/4 convergence experiments (thousands of rounds, jit'd
+  scan).
+
+* ``run_round_logits`` — the faithful path: takes real draft/target logits,
+  runs full rejection-sampling verification, feeds Eq.3 with the actual
+  min(1, p/q) indicators.  serving/engine.py drives this with transformer
+  models; tests drive it with synthetic logit pairs of controlled TV
+  distance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimator import EstimatorState, GoodputEstimator
+from repro.core.goodput import expected_goodput
+from repro.core.latency import LatencyModel
+from repro.core.scheduler import fixed_s, random_s, solve_threshold
+from repro.core.speculative import VerifyResult, verify
+from repro.core.utility import UtilitySpec
+
+Array = jnp.ndarray
+
+
+class RoundState(NamedTuple):
+    est: EstimatorState
+    S: Array            # i32[N] current allocation (drafted this round)
+    key: Array
+    remaining: Array    # i32[N] tokens left before each request completes
+
+
+class RoundLog(NamedTuple):
+    S: Array               # allocation used this round
+    realized: Array        # x_i(t) tokens emitted
+    goodput_est: Array     # X^beta after update
+    alpha_hat: Array       # after update
+    utility: Array         # U(X^beta)
+    wall: Array            # (total, receive, verify, send) seconds
+
+
+@dataclasses.dataclass(frozen=True)
+class Coordinator:
+    n: int
+    C: int
+    estimator: GoodputEstimator = GoodputEstimator()
+    utility: UtilitySpec = UtilitySpec(alpha=1.0)
+    latency: LatencyModel = LatencyModel()
+    policy: str = "goodspeed"   # goodspeed | fixed | random
+    vocab: int = 32000          # used only by the latency payload model
+    # paper §IV-A2: requests have a max token length (50 or 150); tokens
+    # drafted past a request's completion are wasted verification work.
+    # GoodSpeed passes remaining-length caps to the solver (s_max);
+    # Fixed-S / Random-S ignore them — the source of the paper's ~5%
+    # verification-time saving.  0 disables completion tracking.
+    max_new_tokens: int = 0
+
+    def init(self, key: Array) -> RoundState:
+        est = self.estimator.init(self.n)
+        S0 = fixed_s(self.n, self.C)  # warm start: uniform
+        rem = jnp.full((self.n,), max(self.max_new_tokens, 1), jnp.int32)
+        return RoundState(est=est, S=S0, key=key, remaining=rem)
+
+    # -- step (5): next allocation under the configured policy -------------
+    def schedule(self, est: EstimatorState, key: Array,
+                 remaining: Array | None = None) -> Array:
+        if self.policy == "goodspeed":
+            w = self.utility.grad(est.goodput)
+            cap = None
+            if self.max_new_tokens > 0 and remaining is not None:
+                cap = jnp.maximum(remaining, 0)
+            return solve_threshold(est.alpha_hat, w, self.C, s_max=cap).S
+        if self.policy == "fixed":
+            return fixed_s(self.n, self.C)
+        if self.policy == "random":
+            return random_s(key, self.n, self.C)
+        raise ValueError(f"unknown policy {self.policy!r}")
+
+    # -- steps (3)(4)(5)(6) given verification outcomes ---------------------
+    def finish_round(self, state: RoundState, accept_ratio_sum: Array,
+                     realized: Array, key_sched: Array,
+                     jitter: Array) -> tuple[RoundState, RoundLog]:
+        remaining = state.remaining
+        if self.max_new_tokens > 0:
+            # tokens past request completion are wasted (not goodput)
+            realized = jnp.minimum(realized,
+                                   remaining.astype(realized.dtype))
+            remaining = remaining - realized.astype(jnp.int32)
+            # completed requests are immediately replaced (continuous batching)
+            remaining = jnp.where(remaining <= 0, self.max_new_tokens,
+                                  remaining)
+        est = self.estimator.update(state.est, accept_ratio_sum, state.S,
+                                    realized)
+        S_next = self.schedule(est, key_sched, remaining)
+        total, (r, v, s) = self.latency.round_time(
+            state.S, realized, self.vocab, jitter)
+        log = RoundLog(S=state.S, realized=realized, goodput_est=est.goodput,
+                       alpha_hat=est.alpha_hat, utility=self.utility.value(est.goodput),
+                       wall=jnp.stack([total, r, v, s]))
+        return RoundState(est=est, S=S_next, key=state.key,
+                          remaining=remaining), log
+
+    # -- faithful round with explicit logits --------------------------------
+    def run_round_logits(self, state: RoundState, draft_tokens: Array,
+                         q_logits: Array, p_logits: Array
+                         ) -> tuple[RoundState, RoundLog, VerifyResult]:
+        key, k_verify, k_sched, k_jit = jax.random.split(state.key, 4)
+        res = verify(k_verify, draft_tokens, q_logits, p_logits, state.S)
+        jitter = jax.random.uniform(k_jit, (self.n,), minval=-1.0, maxval=1.0)
+        new_state, log = self.finish_round(
+            state._replace(key=key), res.accept_ratio_sum,
+            res.num_emitted.astype(jnp.float32), k_sched, jitter)
+        return new_state, log, res
+
+    # -- analytic acceptance channel ----------------------------------------
+    def _analytic_round(self, state: RoundState, alpha_true: Array
+                        ) -> tuple[RoundState, RoundLog]:
+        key, k_acc, k_sched, k_jit, k_ind = jax.random.split(state.key, 5)
+        S = state.S
+        s_max = self.C  # padded width for the uniform draws
+        u = jax.random.uniform(k_acc, (self.n, s_max))
+        pos = jnp.arange(s_max)[None, :]
+        in_draft = pos < S[:, None]
+        accept = jnp.where(in_draft, u <= alpha_true[:, None], False)
+        rejected = ~accept
+        any_rej = jnp.any(rejected, axis=-1)
+        m = jnp.where(any_rej, jnp.argmax(rejected, axis=-1), s_max)
+        m = jnp.minimum(m, S)
+        realized = (m + 1).astype(jnp.float32)
+        # Eq.3 indicators: E[min(1,p/q)] = alpha; model the per-position
+        # indicator noise as Beta-like around alpha via bounded uniform.
+        noise = 0.1 * jax.random.uniform(k_ind, (self.n, s_max), minval=-1., maxval=1.)
+        ind = jnp.clip(alpha_true[:, None] + noise, 0.0, 1.0)
+        ratio_sum = jnp.sum(jnp.where(in_draft, ind, 0.0), axis=-1)
+        jitter = jax.random.uniform(k_jit, (self.n,), minval=-1.0, maxval=1.0)
+        return self.finish_round(state._replace(key=key), ratio_sum,
+                                 realized, k_sched, jitter)
+
+    def simulate_analytic(self, key: Array, alpha_traj: Array
+                          ) -> tuple[RoundState, RoundLog]:
+        """Scan the analytic round over alpha_traj f32[T, N]; returns stacked
+        RoundLog over T rounds."""
+        state = self.init(key)
+
+        def step(st, alpha_t):
+            st, log = self._analytic_round(st, alpha_t)
+            return st, log
+
+        return jax.lax.scan(step, state, alpha_traj)
+
+
+@functools.partial(jax.jit, static_argnames=("coord",))
+def simulate(coord: Coordinator, key: Array, alpha_traj: Array):
+    return coord.simulate_analytic(key, alpha_traj)

@@ -1,0 +1,88 @@
+"""Online estimators for acceptance rates and goodput (paper Eqs. 3-4).
+
+The verification server maintains, per draft server i:
+
+* smoothed acceptance rate  alpha_hat_i(t)  (Eq. 3):
+      alpha_hat(t) = (1-eta) alpha_hat(t-1)
+                   + eta * mean_j min(1, p_j(s_j) / q_{i,j}(s_j))
+  where the mean runs over the S_i(t) verified draft positions.
+
+* smoothed goodput  X_i^beta(t)  (Eq. 4):
+      X(t) = (1-beta) X(t-1) + beta x_i(t)
+  with x_i(t) the realized goodput (accepted tokens + 1 correction/bonus).
+
+Assumption 3 of the paper takes decaying step sizes eta = O(1/t^a),
+beta = O(1/t^b) with 0.5 < a,b <= 1 and eta/beta -> 0; we support both the
+constant-step regime used in the experiments (beta = 0.5) and the decaying
+schedules used by the theory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class EstimatorState(NamedTuple):
+    alpha_hat: Array   # f32[N] smoothed acceptance rates, in (0,1)
+    goodput: Array     # f32[N] smoothed goodput X^beta
+    t: Array           # i32[]  round counter
+
+
+@dataclasses.dataclass(frozen=True)
+class StepSchedule:
+    """eta(t) / beta(t) schedules.  exponent=0 -> constant base step."""
+
+    base: float
+    exponent: float = 0.0  # paper Assumption 3 wants (0.5, 1]
+    t0: float = 1.0        # horizon shift so t=0 is well defined
+
+    def __call__(self, t: Array) -> Array:
+        if self.exponent == 0.0:
+            return jnp.asarray(self.base)
+        return self.base / (jnp.asarray(t, jnp.float32) + self.t0) ** self.exponent
+
+
+@dataclasses.dataclass(frozen=True)
+class GoodputEstimator:
+    """Stateless transition function for (alpha_hat, X^beta)."""
+
+    eta: StepSchedule = StepSchedule(0.3)
+    beta: StepSchedule = StepSchedule(0.5)
+    alpha_init: float = 0.5
+    goodput_init: float = 1.0
+
+    def init(self, n: int) -> EstimatorState:
+        return EstimatorState(
+            alpha_hat=jnp.full((n,), self.alpha_init, jnp.float32),
+            goodput=jnp.full((n,), self.goodput_init, jnp.float32),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, state: EstimatorState, accept_ratio_sum: Array,
+               S: Array, realized_goodput: Array) -> EstimatorState:
+        """One verification round.
+
+        accept_ratio_sum: f32[N] sum over verified positions of
+            min(1, p_j(s_j)/q_{i,j}(s_j)) for server i (only the first S_i
+            positions of the padded verify batch contribute).
+        S:               i32[N] this round's draft lengths (Eq. 3 divides by S_i).
+        realized_goodput: f32[N] x_i(t) = accepted + 1.
+        """
+        t = state.t
+        eta = self.eta(t).astype(jnp.float32)
+        beta = self.beta(t).astype(jnp.float32)
+
+        s_f = jnp.maximum(S.astype(jnp.float32), 1.0)
+        empirical = jnp.clip(accept_ratio_sum / s_f, 0.0, 1.0)
+        # Servers scheduled S_i = 0 this round contribute no observation —
+        # hold their estimate (the paper's Eq. 3 is only defined for S_i>0).
+        observed = S > 0
+        alpha_new = (1.0 - eta) * state.alpha_hat + eta * empirical
+        alpha_hat = jnp.where(observed, alpha_new, state.alpha_hat)
+
+        goodput = (1.0 - beta) * state.goodput + beta * realized_goodput
+        return EstimatorState(alpha_hat=alpha_hat, goodput=goodput, t=t + 1)

@@ -1,0 +1,101 @@
+"""Fluid-limit machinery (paper §III-D and Appendix).
+
+Two independent computations of the optimal goodput x* of problem (1):
+
+1. ``optimal_goodput`` — closed-form-ish water-filling.  For log utility the
+   achievable region X is the hull of {mu(k)} over the integer budget
+   simplex; since mu_i(S) = 1 + a + ... + a^S is concave increasing in S,
+   X = { x : x_i <= mu_bar_i(s_i),  sum_i s_i <= C, s >= 0 }
+   with mu_bar the piecewise-linear interpolation of mu at integers
+   (time-sharing two adjacent integer allocations realizes any fractional
+   s).  max sum_i log mu_bar_i(s_i) s.t. sum s_i = C is separable-concave:
+   KKT gives, on segment s = k + f (f in [0,1]), the stationarity condition
+   d/ds log mu_bar = a^(k+1) / (mu(k) + f a^(k+1)) = lam, i.e.
+   f = 1/lam - mu(k)/a^(k+1); bisect the price lam so sum_i s_i(lam) = C.
+
+2. ``integrate_fluid`` — integrates the Lemma-2 fluid dynamics
+        x'(t) = v(t) - x(t),
+        v(t) in argmax_{v in X} sum_i (1/x_i) v_i
+   where the argmax is computed by the *actual* GOODSPEED-SCHED solver
+   (with true alphas), i.e. the same Frank-Wolfe-style vertex oracle the
+   discrete system uses.  Theorem 3 says x(t) -> x*; the tests check both
+   computations agree, which ties the implementation to the theory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.goodput import expected_goodput
+from repro.core.scheduler import solve_threshold
+
+Array = jnp.ndarray
+_EPS = 1e-9
+
+
+def _claims_fractional(lam: Array, alpha: Array, C: int) -> Array:
+    """s_i(lam): fractional slots claimed by each client at price lam."""
+    a = jnp.clip(alpha, _EPS, 1.0 - 1e-6)
+    ks = jnp.arange(C + 1, dtype=jnp.float32)                 # segments k
+    mu_k = expected_goodput(ks[None, :], a[:, None])          # [N, C+1]
+    ga = a[:, None] ** (ks[None, :] + 1.0)                    # segment slope
+    # stationarity f = 1/lam - mu(k)/a^(k+1) on segment k, clipped to [0,1]
+    f = 1.0 / jnp.maximum(lam, _EPS) - mu_k / jnp.maximum(ga, _EPS)
+    f = jnp.clip(f, 0.0, 1.0)
+    # derivative of log mu_bar at segment start: a^(k+1)/mu(k); client walks
+    # fully through segments whose START derivative >= lam is partial where
+    # it straddles.  Equivalent: s_i = sum_k [deriv_start_k >= lam ? (f if
+    # deriv_end_k < lam else 1) : 0].  deriv decreasing across segments.
+    d_start = ga / jnp.maximum(mu_k, _EPS)
+    d_end = ga / jnp.maximum(mu_k + ga, _EPS)
+    full = d_end >= lam
+    partial = (d_start >= lam) & (d_end < lam)
+    s = jnp.sum(jnp.where(full, 1.0, jnp.where(partial, f, 0.0)), axis=-1)
+    return jnp.minimum(s, float(C))
+
+
+@functools.partial(jax.jit, static_argnames=("C", "iters"))
+def optimal_goodput(alpha: Array, C: int, iters: int = 80):
+    """Water-filling solution (s*, x*) of max sum log mu_bar(s) s.t. sum s = C."""
+    a = jnp.clip(alpha, _EPS, 1.0 - 1e-6)
+    lo = jnp.asarray(1e-8)
+    hi = jnp.asarray(1.0)  # max derivative: a/1 <= 1
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = jnp.sqrt(lo * hi)  # geometric bisection (price spans decades)
+        tot = jnp.sum(_claims_fractional(mid, a, C))
+        # tot decreasing in lam: too many slots -> raise price
+        return jnp.where(tot > C, mid, lo), jnp.where(tot > C, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    s_star = _claims_fractional(hi, a, C)
+    # renormalize tiny bisection residue onto clients proportionally
+    s_star = s_star * (C / jnp.maximum(jnp.sum(s_star), _EPS))
+    x_star = expected_goodput(s_star, a)
+    return s_star, x_star
+
+
+@functools.partial(jax.jit, static_argnames=("C", "steps"))
+def integrate_fluid(alpha: Array, C: int, x0: Array, steps: int = 400,
+                    dt: float = 0.05) -> Array:
+    """Euler-integrate x' = v - x with v from the GOODSPEED-SCHED oracle.
+
+    Returns the trajectory x[t] (f32[steps, N]).  Lemma 2's v(t) maximizes
+    sum_i v_i / x_i over X; the maximum over a polytope is attained at a
+    vertex mu(k), and picking k is exactly GOODSPEED-SCHED with weights
+    1/x_i — so we reuse solve_threshold as the vertex oracle.
+    """
+    a = jnp.clip(alpha, _EPS, 1.0 - 1e-6)
+
+    def step(x, _):
+        w = 1.0 / jnp.maximum(x, 1e-6)
+        S = solve_threshold(a, w, C).S
+        v = expected_goodput(S, a)
+        x_new = x + dt * (v - x)
+        return x_new, x_new
+
+    _, traj = jax.lax.scan(step, x0, None, length=steps)
+    return traj

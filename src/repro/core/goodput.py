@@ -1,0 +1,81 @@
+"""Expected-goodput model for speculative decoding (paper §III-B).
+
+For a draft of length S verified by rejection sampling with per-token
+acceptance probability alpha, the number of accepted tokens is a geometric
+random variable truncated at S, and the verifier always emits one extra
+token (either the residual-resampled correction or, when all S drafts are
+accepted, a bonus token from p_{S+1}).  The expected number of tokens
+emitted per round is therefore (Leviathan et al. 2023, Eq. used by the
+paper):
+
+    mu(S; alpha) = (1 - alpha^(S+1)) / (1 - alpha)
+                 = 1 + alpha + alpha^2 + ... + alpha^S.
+
+The *marginal* value of extending a draft from length S to S+1 is
+alpha^(S+1); it is positive and strictly decreasing in S, which makes the
+GOODSPEED-SCHED objective separable-concave over the integer simplex and
+exactly solvable by greedy marginal allocation (see scheduler.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# Acceptance rates are probabilities in (0,1); the paper assumes
+# alpha_max < 1 (Assumption 2).  We clip for numerical safety: at alpha=1
+# mu(S)=S+1 via the limit, handled by jnp.where below.
+_EPS = 1e-7
+
+
+def expected_goodput(S: Array, alpha: Array) -> Array:
+    """mu(S; alpha) = (1 - alpha^(S+1)) / (1 - alpha), elementwise.
+
+    Handles the alpha -> 1 limit (mu = S+1) and alpha -> 0 (mu = 1).
+    ``S`` may be float (fluid relaxation) or integer (actual allocations).
+    """
+    a = jnp.clip(alpha, 0.0, 1.0)
+    s = jnp.asarray(S, dtype=jnp.result_type(float, a.dtype))
+    near_one = a > 1.0 - _EPS
+    a_safe = jnp.where(near_one, 0.5, a)
+    mu = (1.0 - a_safe ** (s + 1.0)) / (1.0 - a_safe)
+    return jnp.where(near_one, s + 1.0, mu)
+
+
+def marginal_gain(S: Array, alpha: Array) -> Array:
+    """mu(S+1) - mu(S) = alpha^(S+1): value of the (S+1)-th draft slot."""
+    a = jnp.clip(alpha, 0.0, 1.0)
+    s = jnp.asarray(S, dtype=jnp.result_type(float, a.dtype))
+    return a ** (s + 1.0)
+
+
+def inverse_marginal(theta: Array, alpha: Array) -> Array:
+    """Largest integer S >= 0 such that marginal_gain(S-1) >= theta, i.e.
+    the number of slots client i claims at price theta:
+
+        S_i(theta) = max{ s in Z+ : alpha^s >= theta } = floor(log theta / log alpha)
+
+    (0 when even the first slot's marginal alpha^1 ... note: slot s has
+    marginal alpha^s for s = 1..S counted after the free correction token;
+    we define slot s's marginal as alpha^s so S_i(theta) counts s with
+    alpha^s >= theta).  Used by the bisection solver.
+    """
+    a = jnp.clip(alpha, _EPS, 1.0 - _EPS)
+    t = jnp.clip(theta, _EPS, 1.0)
+    # alpha^s >= theta  <=>  s <= log(theta)/log(alpha)   (log alpha < 0)
+    smax = jnp.floor(jnp.log(t) / jnp.log(a))
+    return jnp.maximum(smax, 0.0)
+
+
+def simulate_accepts(key, S: int, alpha: float, shape=()) -> Array:
+    """Sample the number of emitted tokens for a length-S draft: truncated
+    geometric + 1 correction/bonus.  Used by simulators and tests."""
+    import jax
+
+    u = jax.random.uniform(key, shape + (S,))
+    rejected = u >= alpha  # True where draft token j is rejected
+    # index of first rejection, or S if none
+    any_rej = jnp.any(rejected, axis=-1)
+    first_rej = jnp.argmax(rejected, axis=-1)
+    m = jnp.where(any_rej, first_rej, S)
+    return m + 1  # +1 correction (m<S) or bonus (m==S) token

@@ -1,0 +1,184 @@
+"""GOODSPEED-SCHED — the paper's gradient scheduling algorithm (Eq. 5).
+
+At every round t the verification server solves
+
+    max_{S}  sum_i  w_i * mu(S_i; alpha_hat_i)      (w_i = dU_i/dx (X_i^beta))
+    s.t.     sum_i S_i <= C,   S_i in Z+ (optionally S_i <= S_max)
+
+with mu(S; a) = (1 - a^(S+1)) / (1 - a)  (goodput.py).  Because the marginal
+value of the s-th slot of client i is  g_i(s) = w_i * a_i^s,  positive and
+strictly decreasing in s, the objective is separable-concave on the integer
+simplex and **greedy marginal allocation is exactly optimal** (the classic
+incremental argument for concave resource allocation; this is also why
+Stolyar's gradient scheduling reduces to a simple rule here).
+
+Two solvers are provided and tested equivalent:
+
+* ``solve_greedy``     — exact: C rounds of argmax over the N current
+                         marginals (lax.while_loop / fori_loop).  O(C·N).
+* ``solve_threshold``  — exact & fast: bisect a price theta on the marginal
+                         value; each client claims S_i(theta) = #{s >= 1 :
+                         w_i a_i^s >= theta} slots in closed form, then the
+                         leftover budget (ties at the threshold) is assigned
+                         greedily.  O(N log(1/eps) + leftover).  This is the
+                         production solver: fully vectorized over clients and
+                         trivially shard-able.
+
+Also implements the paper's baselines: ``fixed_s`` (S_i = C/N) and
+``random_s`` (random split of the budget).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.goodput import expected_goodput
+
+Array = jnp.ndarray
+
+_EPS = 1e-9
+
+
+class SchedulerOutput(NamedTuple):
+    S: Array          # int32[N] draft-length allocation, sum <= C
+    objective: Array  # scalar: sum_i w_i * mu(S_i; alpha_i)
+    price: Array      # scalar: final threshold price (threshold solver; 0 for greedy)
+
+
+def _clip_inputs(alpha: Array, weights: Array):
+    a = jnp.clip(alpha, _EPS, 1.0 - 1e-6)
+    w = jnp.maximum(weights, 0.0)
+    return a, w
+
+
+def objective_value(S: Array, alpha: Array, weights: Array) -> Array:
+    """sum_i w_i mu(S_i; alpha_i) — the Eq. 5 objective."""
+    return jnp.sum(weights * expected_goodput(S, alpha))
+
+
+# ---------------------------------------------------------------------------
+# Exact greedy solver (reference; O(C N))
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("C",))
+def solve_greedy(alpha: Array, weights: Array, C: int,
+                 s_max: Array | None = None) -> SchedulerOutput:
+    """Allocate C slots one at a time to the largest current marginal."""
+    a, w = _clip_inputs(alpha, weights)
+    n = a.shape[0]
+    cap = jnp.full((n,), jnp.iinfo(jnp.int32).max, jnp.int32) if s_max is None \
+        else jnp.asarray(s_max, jnp.int32)
+
+    def body(_, S):
+        # marginal of giving one more slot to i: w_i * a_i^(S_i + 1)
+        g = w * a ** (S.astype(a.dtype) + 1.0)
+        g = jnp.where(S >= cap, -jnp.inf, g)
+        i = jnp.argmax(g)
+        # if best marginal is 0 (w==0 exactly) still allocate deterministically;
+        # objective unaffected.  Guard the all-capped case.
+        take = jnp.where(jnp.isfinite(g[i]), 1, 0).astype(jnp.int32)
+        return S.at[i].add(take)
+
+    S = jax.lax.fori_loop(0, C, body, jnp.zeros((n,), jnp.int32))
+    return SchedulerOutput(S, objective_value(S, a, w), jnp.zeros(()))
+
+
+# ---------------------------------------------------------------------------
+# Threshold / price solver (production; vectorized)
+# ---------------------------------------------------------------------------
+
+def _claims(theta: Array, a: Array, w: Array, cap: Array) -> Array:
+    """S_i(theta) = #{ s >= 1 : w_i a_i^s >= theta }, capped.
+
+    w a^s >= theta  <=>  s <= log(theta / w) / log(a)      (log a < 0)
+    """
+    t = jnp.maximum(theta, _EPS)
+    ratio = jnp.log(t / jnp.maximum(w, _EPS)) / jnp.log(a)  # may be negative
+    s = jnp.floor(ratio + 1e-12)
+    s = jnp.where(w * a >= t, jnp.maximum(s, 1.0), jnp.minimum(s, 0.0))
+    s = jnp.clip(s, 0.0, cap.astype(s.dtype))
+    return s.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("C", "iters"))
+def solve_threshold(alpha: Array, weights: Array, C: int,
+                    s_max: Array | None = None, iters: int = 64) -> SchedulerOutput:
+    """Bisection on the slot price theta + greedy remainder fill (exact)."""
+    a, w = _clip_inputs(alpha, weights)
+    n = a.shape[0]
+    cap = jnp.full((n,), C, jnp.int32) if s_max is None \
+        else jnp.minimum(jnp.asarray(s_max, jnp.int32), C)
+
+    g_hi = jnp.max(w * a)  # largest possible marginal
+
+    # Bisect theta in [0, g_hi]: total claims are non-increasing in theta.
+    # Invariant: claims(hi) <= C <= claims(lo) (lo=0 claims cap-total or C+).
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        tot = jnp.sum(_claims(mid, a, w, cap))
+        return jnp.where(tot > C, mid, lo), jnp.where(tot > C, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (jnp.zeros(()), g_hi + _EPS))
+    S = _claims(hi, a, w, cap)
+
+    # Leftover budget from discreteness/ties: hand out greedily.  The number
+    # of leftover slots is at most N after tight bisection (each client can
+    # straddle the price by < 1 slot), but we bound the loop by C for safety.
+    def cond(state):
+        S, r = state
+        return r > 0
+
+    def fill(state):
+        S, r = state
+        g = w * a ** (S.astype(a.dtype) + 1.0)
+        g = jnp.where(S >= cap, -jnp.inf, g)
+        i = jnp.argmax(g)
+        ok = jnp.isfinite(g[i])
+        S = S.at[i].add(jnp.where(ok, 1, 0).astype(jnp.int32))
+        r = jnp.where(ok, r - 1, 0)
+        return S, r
+
+    S, _ = jax.lax.while_loop(cond, fill, (S, jnp.asarray(C, jnp.int32) - jnp.sum(S)))
+    return SchedulerOutput(S, objective_value(S, a, w), hi)
+
+
+# ---------------------------------------------------------------------------
+# Paper baselines
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("C", "n"))
+def fixed_s(n: int, C: int) -> Array:
+    """Fixed-S baseline: S_i = C // N (uniform; paper §IV-B2)."""
+    return jnp.full((n,), C // n, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("C", "n"))
+def random_s(key: Array, n: int, C: int) -> Array:
+    """Random-S baseline: random composition of the budget across clients
+    (uniform over the simplex grid via multinomial thinning)."""
+    logits = jnp.zeros((n,))
+    # draw C slot owners i.i.d. uniformly — a random allocation summing to C
+    owners = jax.random.categorical(key, logits, shape=(C,))
+    return jnp.zeros((n,), jnp.int32).at[owners].add(1)
+
+
+def make_scheduler(name: str):
+    """Factory used by the serving engine; returns fn(alpha, weights, C, key)->S."""
+    name = name.lower()
+    if name in ("goodspeed", "gradient", "threshold"):
+        return lambda alpha, weights, C, key=None, s_max=None: \
+            solve_threshold(alpha, weights, C, s_max).S
+    if name == "greedy":
+        return lambda alpha, weights, C, key=None, s_max=None: \
+            solve_greedy(alpha, weights, C, s_max).S
+    if name in ("fixed", "fixed-s"):
+        return lambda alpha, weights, C, key=None, s_max=None: \
+            fixed_s(alpha.shape[0], C)
+    if name in ("random", "random-s"):
+        return lambda alpha, weights, C, key=None, s_max=None: \
+            random_s(key, alpha.shape[0], C)
+    raise ValueError(f"unknown scheduler {name!r}")

@@ -1,0 +1,131 @@
+"""Lossless speculative-decoding verification math (paper §II-A2).
+
+Implements the Leviathan et al. (2023) rejection-sampling verification used
+by GoodSpeed's verification server, batched over draft servers with *ragged*
+draft lengths (each server i proposes S_i <= S_max tokens; rows are padded
+to S_max and masked).
+
+Given draft tokens s_1..s_S sampled from q_j(.), and the target model's
+distributions p_j(.) computed in one parallel forward pass:
+
+  accept s_j  iff  u_j <= min(1, p_j(s_j) / q_j(s_j)),  u_j ~ U(0,1)
+  m = index of first rejection (= S if none)
+  emit s_1..s_m plus ONE extra token:
+      m < S: sampled from the residual  norm(max(0, p_{m+1} - q_{m+1}))
+      m = S: sampled from p_{S+1}  (the "bonus" distribution)
+
+This is distribution-lossless: the emitted sequence is an exact sample from
+the target model (tested statistically in tests/test_speculative.py).
+
+Indexing convention: ``p_logits`` has S_max+1 rows — row j in [0, S) is the
+target distribution for draft position j and row S_i is the bonus
+distribution for server i; the extra token is always drawn from row ``m``
+(residual when m < S_i, plain target when m = S_i).
+
+A fused Pallas TPU kernel with identical semantics lives in
+``repro.kernels.spec_verify`` (this module is its jnp oracle and the
+CPU/interpret fallback).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class VerifyResult(NamedTuple):
+    accepted: Array          # i32[N] m_i: number of accepted draft tokens
+    emitted: Array           # i32[N, S_max+1] accepted tokens + extra, -1 padded
+    num_emitted: Array       # i32[N] m_i + 1  (realized goodput x_i(t))
+    extra_token: Array       # i32[N] the correction/bonus token
+    accept_ratio_sum: Array  # f32[N] sum_j min(1, p/q) over j < S_i (Eq. 3 input)
+
+
+def _log_softmax(logits: Array) -> Array:
+    return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def verify(
+    key: Array,
+    draft_tokens: Array,   # i32[N, S_max]
+    q_logits: Array,       # f32[N, S_max, V]     draft distributions
+    p_logits: Array,       # f32[N, S_max+1, V]   target distributions
+    lengths: Array,        # i32[N]               S_i <= S_max
+) -> VerifyResult:
+    """Batched ragged rejection-sampling verification (pure jnp oracle)."""
+    n, s_max = draft_tokens.shape
+    v = q_logits.shape[-1]
+    logq = _log_softmax(q_logits)                      # [N, S, V]
+    logp_all = _log_softmax(p_logits)                  # [N, S+1, V]
+    logp = logp_all[:, :s_max, :]                      # rows for draft positions
+
+    pos = jnp.arange(s_max)[None, :]                   # [1, S]
+    in_draft = pos < lengths[:, None]                  # [N, S]
+
+    tok = jnp.clip(draft_tokens, 0, v - 1)
+    gather = lambda lg: jnp.take_along_axis(lg, tok[..., None], axis=-1)[..., 0]
+    logp_tok = gather(logp)                            # [N, S]
+    logq_tok = gather(logq)
+    ratio = jnp.exp(jnp.minimum(logp_tok - logq_tok, 0.0))  # min(1, p/q)
+
+    key_u, key_x = jax.random.split(key)
+    u = jax.random.uniform(key_u, (n, s_max), jnp.float32)
+    # Outside the drafted range force a rejection so m <= S_i.
+    accept = jnp.where(in_draft, u <= ratio, False)
+
+    rejected = ~accept
+    any_rej = jnp.any(rejected, axis=-1)
+    first_rej = jnp.argmax(rejected, axis=-1)
+    m = jnp.where(any_rej, first_rej, s_max).astype(jnp.int32)  # == S_i if all pass
+
+    # --- extra token: residual (m < S_i) or bonus (m == S_i) --------------
+    rows = jnp.take_along_axis(
+        logp_all, m[:, None, None], axis=1)[:, 0, :]   # [N, V] target at row m
+    q_rows = jnp.take_along_axis(
+        logq, jnp.minimum(m, s_max - 1)[:, None, None], axis=1)[:, 0, :]
+    p_row = jnp.exp(rows)
+    q_row = jnp.exp(q_rows)
+    residual = jnp.maximum(p_row - q_row, 0.0)
+    res_sum = jnp.sum(residual, axis=-1, keepdims=True)
+    # If the residual is (numerically) empty, fall back to the target row —
+    # this only happens when p == q where any sample is exact anyway.
+    res_dist = jnp.where(res_sum > 1e-20, residual / jnp.maximum(res_sum, 1e-20),
+                         jnp.exp(rows))
+    is_bonus = m >= lengths                            # all drafts accepted
+    extra_probs = jnp.where(is_bonus[:, None], jnp.exp(rows), res_dist)
+    extra_logits = jnp.log(jnp.maximum(extra_probs, 1e-30))
+    extra = jax.random.categorical(key_x, extra_logits, axis=-1).astype(jnp.int32)
+
+    # --- assemble outputs --------------------------------------------------
+    out_pos = jnp.arange(s_max + 1)[None, :]
+    keep = out_pos < m[:, None]
+    padded_draft = jnp.concatenate(
+        [draft_tokens, jnp.full((n, 1), -1, draft_tokens.dtype)], axis=-1)
+    emitted = jnp.where(keep, padded_draft, -1)
+    emitted = jnp.where(out_pos == m[:, None], extra[:, None], emitted)
+
+    ratio_sum = jnp.sum(jnp.where(in_draft, ratio, 0.0), axis=-1)
+    return VerifyResult(
+        accepted=m,
+        emitted=emitted.astype(jnp.int32),
+        num_emitted=(m + 1).astype(jnp.int32),
+        extra_token=extra,
+        accept_ratio_sum=ratio_sum,
+    )
+
+
+def draft_tokens_from_logits(key: Array, logits: Array) -> Array:
+    """Ancestral sampling helper for draft servers: logits [.., V] -> tokens."""
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def acceptance_probability(p_logits: Array, q_logits: Array) -> Array:
+    """Analytic per-position acceptance rate  alpha = E_{s~q} min(1, p/q)
+    = sum_s min(p(s), q(s)) = 1 - TV(p, q).  Used for tests and for
+    synthetic workload generation with controlled alpha."""
+    p = jax.nn.softmax(p_logits.astype(jnp.float32), axis=-1)
+    q = jax.nn.softmax(q_logits.astype(jnp.float32), axis=-1)
+    return jnp.sum(jnp.minimum(p, q), axis=-1)

@@ -1,0 +1,81 @@
+"""Utility functions U(x) for the GoodSpeed utility-maximization problem.
+
+The paper (Eq. 1) maximizes ``U(x) = sum_i U_i(x_i)`` over the achievable
+goodput region, with ``U_i`` continuously differentiable, strictly increasing
+and strictly concave.  The experiments use the proportional-fairness utility
+``U_i(x) = log x``.  We implement the standard alpha-fair family, which
+contains log utility (alpha=1), throughput-optimal linear utility in the
+limit alpha->0, and max-min fairness in the limit alpha->inf, plus optional
+per-client weights.
+
+All functions are pure jnp and safe under jit/grad.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+# Numerical floor: gradients 1/x blow up at x=0 (the fluid analysis handles
+# the boundary analytically via Lemma 2's boundary-drift argument; in the
+# discrete implementation we clip, which corresponds to the bounded-gradient
+# variant of Stolyar's algorithm).
+_X_FLOOR = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class UtilitySpec:
+    """alpha-fair utility family with per-client weights.
+
+    alpha=1.0  -> U_i(x) = w_i log(x)          (proportional fairness; paper)
+    alpha=0.0  -> U_i(x) = w_i x               (throughput maximization)
+    otherwise  -> U_i(x) = w_i x^(1-alpha)/(1-alpha)
+    """
+
+    alpha: float = 1.0
+    weights: tuple | None = None  # static per-client weights, broadcastable
+
+    def _w(self, x: Array) -> Array:
+        if self.weights is None:
+            return jnp.ones_like(x)
+        return jnp.asarray(self.weights, dtype=x.dtype)
+
+    def value(self, x: Array) -> Array:
+        """Total utility U(x) = sum_i U_i(x_i)."""
+        xc = jnp.maximum(x, _X_FLOOR)
+        w = self._w(xc)
+        if self.alpha == 1.0:
+            u = jnp.log(xc)
+        elif self.alpha == 0.0:
+            u = xc
+        else:
+            u = xc ** (1.0 - self.alpha) / (1.0 - self.alpha)
+        return jnp.sum(w * u)
+
+    def grad(self, x: Array) -> Array:
+        """Per-component gradient dU_i/dx_i (the scheduler weights)."""
+        xc = jnp.maximum(x, _X_FLOOR)
+        w = self._w(xc)
+        if self.alpha == 1.0:
+            return w / xc
+        if self.alpha == 0.0:
+            return w
+        return w * xc ** (-self.alpha)
+
+
+LOG_UTILITY = UtilitySpec(alpha=1.0)
+LINEAR_UTILITY = UtilitySpec(alpha=0.0)
+
+
+def make_utility(name: str, weights=None) -> UtilitySpec:
+    name = name.lower()
+    if name in ("log", "proportional", "pf"):
+        return UtilitySpec(alpha=1.0, weights=weights)
+    if name in ("linear", "throughput"):
+        return UtilitySpec(alpha=0.0, weights=weights)
+    if name.startswith("alpha:"):
+        return UtilitySpec(alpha=float(name.split(":", 1)[1]), weights=weights)
+    raise ValueError(f"unknown utility {name!r}")

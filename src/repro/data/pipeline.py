@@ -1,0 +1,102 @@
+"""Synthetic data pipeline: token streams for training + a non-stationary
+prompt workload for serving (standing in for the paper's 8 datasets).
+
+The paper assigns a distinct dataset per draft server (Alpaca, CNN/DailyMail,
+GSM8K, SPIDER, ...) giving heterogeneous, drifting acceptance rates.  We
+model each dataset as a *domain*: a Zipf token distribution with its own
+random permutation, mixing temperature, and prompt-length profile; domains
+drift over time (topic shifts) which is what makes alpha_i(t) non-stationary.
+Deterministic given seed — reproducible experiments without downloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+# The paper's eight evaluation datasets (§IV-A2) as named synthetic domains.
+PAPER_DATASETS = ("alpaca", "awesome-prompts", "cnn-dailymail", "openorca",
+                  "chatbot-arena", "gsm8k", "spider", "hle")
+
+_PROFILES = {
+    # name: (zipf_a, mean_prompt_len, base_alpha, alpha_drift)
+    "alpaca": (1.2, 24, 0.80, 0.05),
+    "awesome-prompts": (1.1, 32, 0.75, 0.05),
+    "cnn-dailymail": (1.3, 96, 0.70, 0.08),
+    "openorca": (1.15, 48, 0.65, 0.10),
+    "chatbot-arena": (1.05, 28, 0.60, 0.12),
+    "gsm8k": (1.25, 40, 0.50, 0.10),
+    "spider": (1.4, 36, 0.45, 0.08),
+    "hle": (1.1, 64, 0.35, 0.15),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticDomain:
+    name: str
+    vocab: int
+    seed: int
+
+    def _profile(self):
+        return _PROFILES.get(self.name, (1.2, 32, 0.6, 0.1))
+
+    def zipf_logits(self) -> np.ndarray:
+        a, _, _, _ = self._profile()
+        rng = np.random.default_rng(zlib.crc32(self.name.encode()) + self.seed)
+        ranks = np.arange(1, self.vocab + 1, dtype=np.float64)
+        probs = ranks ** (-a)
+        probs /= probs.sum()
+        return np.log(probs[rng.permutation(self.vocab)]).astype(np.float32)
+
+    def sample_prompt(self, rng: np.random.Generator) -> np.ndarray:
+        _, mean_len, _, _ = self._profile()
+        length = max(4, int(rng.poisson(mean_len)))
+        logits = self.zipf_logits()
+        p = np.exp(logits - logits.max())
+        p /= p.sum()
+        return rng.choice(self.vocab, size=length, p=p).astype(np.int32)
+
+    def alpha_trajectory(self, rounds: int) -> np.ndarray:
+        """Ground-truth acceptance-rate drift used by analytic simulators:
+        base +/- sinusoidal topic drift + OU noise, clipped to (0.05, 0.98)."""
+        _, _, base, drift = self._profile()
+        rng = np.random.default_rng(zlib.crc32(self.name.encode()) + self.seed + 1)
+        t = np.arange(rounds)
+        period = rng.integers(150, 400)
+        wave = drift * np.sin(2 * np.pi * t / period + rng.uniform(0, 6.28))
+        ou = np.zeros(rounds)
+        for i in range(1, rounds):
+            ou[i] = 0.95 * ou[i - 1] + 0.02 * rng.standard_normal()
+        return np.clip(base + wave + ou, 0.05, 0.98).astype(np.float32)
+
+
+def make_workload(n_servers: int, vocab: int, rounds: int, seed: int = 0):
+    """Per-server (domain, alpha trajectory): server i gets dataset i mod 8."""
+    domains = [SyntheticDomain(PAPER_DATASETS[i % len(PAPER_DATASETS)],
+                               vocab, seed) for i in range(n_servers)]
+    alphas = np.stack([d.alpha_trajectory(rounds) for d in domains], axis=1)
+    return domains, jnp.asarray(alphas)  # [rounds, N]
+
+
+def token_stream(vocab: int, batch: int, seq: int, steps: int, seed: int = 0,
+                 n_domains: int = 4):
+    """Deterministic LM training batches: each element drawn from one of
+    ``n_domains`` Zipf domains (so the model has learnable structure)."""
+    rng = np.random.default_rng(seed)
+    doms = [SyntheticDomain(PAPER_DATASETS[i % len(PAPER_DATASETS)], vocab,
+                            seed + i) for i in range(n_domains)]
+    tables = []
+    for d in doms:
+        logits = d.zipf_logits()
+        p = np.exp(logits - logits.max())
+        tables.append(p / p.sum())
+    for _ in range(steps):
+        dom_idx = rng.integers(0, n_domains, size=batch)
+        toks = np.stack([
+            rng.choice(vocab, size=seq, p=tables[k]) for k in dom_idx])
+        yield {"tokens": jnp.asarray(toks, jnp.int32)}

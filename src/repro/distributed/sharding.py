@@ -1,0 +1,263 @@
+"""Logical-axis sharding rules (MaxText-style) for params and activations.
+
+Model code annotates tensors with *logical* axis names; a ``ShardingContext``
+maps logical names to mesh axes, dropping any assignment whose dimension is
+not divisible by the mesh axis size (e.g. whisper's 8 heads on a 16-way
+model axis fall back to replicated).  With no active context every
+annotation is a no-op, so single-device tests never touch device state.
+
+Two built-in rule sets:
+  * ``TRAIN_RULES`` — batch over (pod, data); tensor parallel over model;
+    FSDP: large param matrices additionally shard their d_model axis over
+    data (ZeRO-3-style; GSPMD inserts the per-layer all-gathers).
+  * ``SERVE_RULES`` — batch over data; tensor parallel over model; KV-cache
+    length sequence-sharded over model (flash-decode); experts over data.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jnp.ndarray
+
+_state = threading.local()
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+TRAIN_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "model",   # Megatron-SP style: carry activations sharded on d
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_cap": "data",
+    "vocab": "model",
+    "fsdp": "data",        # param d_model axis, ZeRO-style
+    "cache_len": None,
+    "latent": None,
+    "moe_e": None,         # dispatch-buffer expert axis (scatter-indexed)
+}
+
+SERVE_RULES = {
+    "batch": "data",
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "data",
+    "expert_cap": None,
+    "vocab": "model",
+    "fsdp": None,          # params replicated over data for serving
+    "cache_len": "model",  # sequence-sharded KV (flash-decode)
+    "latent": None,
+    "moe_e": None,
+}
+
+
+class ShardingContext:
+    def __init__(self, mesh: Mesh, rules: dict):
+        self.mesh = mesh
+        self.rules = dict(rules)
+        # drop the pod axis from rules when the mesh doesn't have one
+        if "pod" not in mesh.axis_names:
+            for k, v in self.rules.items():
+                if isinstance(v, tuple):
+                    v = tuple(a for a in v if a in mesh.axis_names)
+                    self.rules[k] = v[0] if len(v) == 1 else (v or None)
+                elif v not in mesh.axis_names:
+                    self.rules[k] = None
+
+    def axis_size(self, mesh_axis) -> int:
+        if mesh_axis is None:
+            return 1
+        if isinstance(mesh_axis, tuple):
+            out = 1
+            for a in mesh_axis:
+                out *= self.mesh.shape[a]
+            return out
+        return self.mesh.shape[mesh_axis]
+
+    def spec(self, logical_axes: tuple, shape: tuple | None = None) -> P:
+        """PartitionSpec for the given logical axes; divisibility-guarded
+        when a concrete shape is supplied."""
+        entries = []
+        used = set()
+        for i, name in enumerate(logical_axes):
+            mesh_axis = self.rules.get(name) if name else None
+            if mesh_axis is None:
+                entries.append(None)
+                continue
+            axes = mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,)
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                entries.append(None)
+                continue
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            if shape is not None and shape[i] % size != 0:
+                entries.append(None)  # not divisible -> replicate
+                continue
+            used.update(axes)
+            entries.append(axes if len(axes) > 1 else axes[0])
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding(self, logical_axes: tuple, shape: tuple | None = None):
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def current() -> ShardingContext | None:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: dict):
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = ShardingContext(mesh, rules)
+    try:
+        yield _state.ctx
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x: Array, *logical_axes) -> Array:
+    """with_sharding_constraint by logical axes; no-op without a context."""
+    ctx = current()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(tuple(logical_axes), x.shape))
+
+
+# ---------------------------------------------------------------------------
+# Param / cache / batch sharding-spec derivation (by leaf name)
+# ---------------------------------------------------------------------------
+
+# logical axes per param leaf name (without any scan-stacking axis)
+PARAM_AXES = {
+    "embedding": ("vocab", "fsdp"),
+    "pos_embedding": (None, None),
+    "w_unembed": ("fsdp", "vocab"),
+    "wq": ("fsdp", "heads", None),
+    "wk": ("fsdp", "kv_heads", None),
+    "wv": ("fsdp", "kv_heads", None),
+    "wo": ("heads", None, "fsdp"),
+    "w_gate": ("fsdp", "mlp"),
+    "w_up": ("fsdp", "mlp"),
+    "w_down": ("mlp", "fsdp"),
+    "w_gate_s": ("fsdp", "mlp"),
+    "w_up_s": ("fsdp", "mlp"),
+    "w_down_s": ("mlp", "fsdp"),
+    "router": ("fsdp", None),
+    "w_gate_e": ("experts", "fsdp", None),
+    "w_up_e": ("experts", "fsdp", None),
+    "w_down_e": ("experts", None, "fsdp"),
+    # MLA
+    "wq_a": ("fsdp", None),
+    "wq_b": (None, "heads", None),
+    "wkv_a": ("fsdp", None),
+    "wk_b": (None, "heads", None),
+    "wv_b": (None, "heads", None),
+    # mLSTM
+    "w_in": ("fsdp", "mlp"),
+    "w_z": ("fsdp", "mlp"),
+    "wq_m": ("mlp", None, None),
+    "wk_m": ("mlp", None, None),
+    "wv_m": ("mlp", None, None),
+    "w_if": ("mlp", None, None),
+    "b_if": (None, None),
+    "w_out": ("mlp", "fsdp"),
+    # sLSTM
+    "w_zi": ("fsdp", None), "w_ii": ("fsdp", None), "w_fi": ("fsdp", None),
+    "w_oi": ("fsdp", None),
+    "r_z": ("fsdp", None), "r_i": ("fsdp", None), "r_f": ("fsdp", None),
+    "r_o": ("fsdp", None),
+    "b_f": (None,),
+    # RG-LRU
+    "w_x": ("fsdp", "mlp"),
+    "conv_w": (None, "mlp"),
+    "w_a": ("mlp", None),
+    "w_i": ("mlp", None),
+    "lambda_param": ("mlp",),
+    # misc
+    "frontend_proj": ("fsdp", None),
+    "scale": (None,),
+    "bias": (None,),
+}
+
+# cache/state leaves by NamedTuple field name
+CACHE_AXES = {
+    "k": ("batch", "cache_len", "kv_heads", None),
+    "v": ("batch", "cache_len", "kv_heads", None),
+    "ckv": ("batch", "cache_len", None),
+    "kpe": ("batch", "cache_len", None),
+    "pos_arr": ("batch", "cache_len"),
+    "next_pos": ("batch",),
+    "C": ("batch", None, None, None),
+    "n": ("batch", None, None),        # mLSTM normalizer [B,H,dk]
+    "m": ("batch", None),
+    "conv": ("batch", None, "mlp"),
+    "h": ("batch", "mlp"),
+    "c": ("batch", None),
+}
+
+BATCH_AXES = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "positions": ("batch", None),
+    "prefix_embeds": ("batch", None, None),
+    "audio_embeds": ("batch", None, None),
+}
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        key = getattr(p, "key", None)
+        if isinstance(key, str):
+            return key
+        name = getattr(p, "name", None)  # NamedTuple fields
+        if isinstance(name, str):
+            return name
+    return ""
+
+
+def _axes_for(path, ndim, table):
+    name = _leaf_name(path)
+    axes = table.get(name)
+    if axes is None:
+        # sLSTM state fields share names with mLSTM (c/n/h/m) — ndim fixes it
+        if name == "n" and ndim - 1 <= 2:
+            axes = ("batch", None)
+        else:
+            axes = (None,) * ndim
+    if len(axes) < ndim:  # scan stacking prepends a layers axis
+        axes = (None,) * (ndim - len(axes)) + tuple(axes)
+    return tuple(axes[:ndim])
+
+
+def tree_specs(ctx: ShardingContext, tree, table=None):
+    """PartitionSpec pytree for a params/cache/batch pytree (or its
+    eval_shape shadow), matching leaves by name with divisibility guards."""
+    table = table or PARAM_AXES
+
+    def spec_leaf(path, leaf):
+        shape = tuple(leaf.shape)
+        return ctx.spec(_axes_for(path, len(shape), table), shape)
+
+    return jax.tree_util.tree_map_with_path(spec_leaf, tree)
+
+
+def tree_shardings(ctx: ShardingContext, tree, table=None):
+    specs = tree_specs(ctx, tree, table)
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

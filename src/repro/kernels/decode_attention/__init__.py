@@ -1,0 +1,4 @@
+from repro.kernels.decode_attention.ops import flash_decode
+from repro.kernels.decode_attention.ref import flash_decode_ref
+
+__all__ = ["flash_decode", "flash_decode_ref"]

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: GQA flash-decode — one query token vs a KV cache,
+streamed HBM->VMEM in L-tiles with an online-softmax accumulator.
+
+Grid: (B, KV_heads, num_L_tiles).  Per step the kernel loads one
+(LT, hd) K tile and V tile for one kv head, computes the G group-query
+scores on the VPU/MXU, applies the position/window mask from the cache's
+pos_arr, and folds into running (m, l, acc) VMEM scratch.  The final tile
+normalizes and writes the (G, hd) output block.
+
+Tile choice: LT=512 rows x hd(<=256) lanes of K + V in bf16 = 512KiB —
+comfortably inside v5e VMEM with double-buffering; hd is lane-aligned
+(128/256) for every assigned arch except whisper (64, still aligned).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+DEFAULT_LT = 512
+
+
+def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_s, l_s, acc_s, *, n_tiles, scale, window):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s[...], NEG)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)           # [LT, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)           # [LT, hd]
+    kv_pos = pos_ref[0]                              # [LT] i32
+    q_pos = qpos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, LT]
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window > 0:
+        valid &= (q_pos - kv_pos) < window
+    s = jnp.where(valid[None, :], s, NEG)
+
+    m_prev = m_s[...]                                # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # [G, LT]
+    corr = jnp.exp(m_prev - m_new)                   # [G, 1]
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))              # [G, hd]
+    m_s[...] = m_new
+
+    @pl.when(t == n_tiles - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[...]
+                       / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "tile", "interpret"))
+def flash_decode_kernel(q, k, v, kv_pos, q_pos, *, window: int = 0,
+                        tile: int = DEFAULT_LT, interpret: bool = True):
+    """q: [B, H, hd]; k/v: [B, L, KV, hd]; kv_pos: i32[B, L] (-1 = empty);
+    q_pos: i32[B].  Returns [B, H, hd] f32."""
+    b, h, hd = q.shape
+    _, l, kv, _ = k.shape
+    g = h // kv
+    tile = min(tile, l)
+    if l % tile != 0:
+        pad = tile - l % tile
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        l += pad
+    n_tiles = l // tile
+
+    qg = q.reshape(b, kv, g, hd)
+    kernel = functools.partial(_kernel, n_tiles=n_tiles,
+                               scale=1.0 / math.sqrt(hd), window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, t: (i,),
+                         memory_space=pltpu.SMEM),             # q_pos
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, t: (i, j, 0, 0)),
+            pl.BlockSpec((1, tile, 1, hd), lambda i, j, t: (i, t, j, 0)),
+            pl.BlockSpec((1, tile, 1, hd), lambda i, j, t: (i, t, j, 0)),
+            pl.BlockSpec((1, tile), lambda i, j, t: (i, t)),   # kv_pos
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, t: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, qg, k, v, kv_pos)
+    return out.reshape(b, h, hd)

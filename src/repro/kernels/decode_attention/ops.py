@@ -1,0 +1,24 @@
+"""jit'd wrapper for the flash-decode kernel, cache-aware."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import flash_decode_kernel
+from repro.serving.kv_cache import AttnCache
+
+Array = jnp.ndarray
+
+
+def flash_decode(q: Array, cache_or_k, v: Array | None = None,
+                 kv_pos: Array | None = None, q_pos: Array | None = None,
+                 *, window: int = 0, tile: int = 512,
+                 interpret: bool = True) -> Array:
+    """Either flash_decode(q, cache, q_pos=...) or explicit (q, k, v,
+    kv_pos, q_pos)."""
+    if isinstance(cache_or_k, AttnCache):
+        cache = cache_or_k
+        return flash_decode_kernel(q, cache.k, cache.v, cache.pos_arr,
+                                   q_pos, window=window, tile=tile,
+                                   interpret=interpret)
+    return flash_decode_kernel(q, cache_or_k, v, kv_pos, q_pos,
+                               window=window, tile=tile, interpret=interpret)

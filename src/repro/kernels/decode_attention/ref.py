@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the GQA flash-decode kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def flash_decode_ref(q: Array, k: Array, v: Array, kv_pos: Array,
+                     kv_valid: Array, q_pos: Array,
+                     window: int = 0) -> Array:
+    """Single-token GQA attention over a cache.
+
+    q: [B, H, hd]; k/v: [B, L, KV, hd]; kv_pos: i32[B, L]; kv_valid: bool[B, L];
+    q_pos: i32[B].  Returns [B, H, hd] (f32).
+    """
+    b, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.astype(jnp.float32).reshape(b, kv, g, hd) / math.sqrt(hd)
+    s = jnp.einsum("bkgh,blkh->bkgl", qf, k.astype(jnp.float32))
+    mask = kv_valid & (kv_pos <= q_pos[:, None])
+    if window > 0:
+        mask &= (q_pos[:, None] - kv_pos) < window
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, h, hd)

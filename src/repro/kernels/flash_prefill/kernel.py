@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: causal flash attention for prefill chunks.
+
+Grid: (B, KV_heads, num_Q_tiles, num_KV_tiles) with the KV-tile axis
+innermost: each (b, h, i) row streams KV tiles j = 0..i through VMEM,
+maintaining the online-softmax (m, l, acc) in VMEM scratch and writing the
+normalized [QT, G·hd] output block on the last contributing tile.
+
+Causality is exploited two ways:
+  * tiles with j > i are masked entirely (the kernel writes on tile j == i,
+    so the dead tiles only cost the masked branch — on real TPU one would
+    skip them with a grid mapping; kept simple here);
+  * sliding-window masks drop tiles with i·QT - (j+1)·KT >= window.
+
+VMEM: QT x hd q tile + KT x hd k/v tiles + QT x KT scores — QT=KT=256,
+hd<=256 stays well under v5e's ~16 MiB VMEM with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            n_kv_tiles, qt, kt, scale, window, g):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s[...], NEG)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+
+    @pl.when(j <= i)  # causal: later KV tiles can't contribute
+    def _body():
+        q = q_ref[0, :, 0].astype(jnp.float32) * scale   # [QT, G, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)           # [KT, hd]
+        v = v_ref[0, :, 0].astype(jnp.float32)           # [KT, hd]
+        qt_, g_, hd = q.shape
+        s = jax.lax.dot_general(q.reshape(qt_ * g_, hd), k,
+                                (((1,), (1,)), ((), ())))  # [QT*G, KT]
+        s = s.reshape(qt_, g_, kt)
+        q_pos = i * qt + jax.lax.broadcasted_iota(jnp.int32, (qt_, g_, kt), 0)
+        k_pos = j * kt + jax.lax.broadcasted_iota(jnp.int32, (qt_, g_, kt), 2)
+        mask = k_pos <= q_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_s[...]                                 # [QT, G, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.reshape(qt_ * g_, kt), v, (((1,), (0,)), ((), ())))
+        acc_s[...] = acc_s[...] * corr + pv.reshape(qt_, g_, hd)
+        m_s[...] = m_new
+
+    @pl.when(j == i)  # last contributing tile for this q tile
+    def _finalize():
+        o_ref[0, :, 0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+                          ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "q_tile", "kv_tile",
+                                    "interpret"))
+def flash_prefill_kernel(q, k, v, *, window: int = 0, q_tile: int = 256,
+                         kv_tile: int = 256, interpret: bool = True):
+    """q: [B, S, H, hd]; k/v: [B, S, KV, hd] -> [B, S, H, hd] f32."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qt = min(q_tile, s)
+    kt = min(kv_tile, s)
+    assert qt == kt, "finalize-at-diagonal requires square tiles"
+    assert s % qt == 0 and s % kt == 0, (s, qt, kt)
+    nq, nk = s // qt, s // kt
+
+    qg = q.reshape(b, s, kv, g, hd)
+    kernel = functools.partial(_kernel, n_kv_tiles=nk, qt=qt, kt=kt,
+                               scale=1.0 / math.sqrt(hd), window=window, g=g)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qt, 1, g, hd), lambda bi, hi, i, j: (bi, i, hi, 0, 0)),
+            pl.BlockSpec((1, kt, 1, hd), lambda bi, hi, i, j: (bi, j, hi, 0)),
+            pl.BlockSpec((1, kt, 1, hd), lambda bi, hi, i, j: (bi, j, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qt, 1, g, hd),
+                               lambda bi, hi, i, j: (bi, i, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, kv, g, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((qt, g, 1), jnp.float32),
+            pltpu.VMEM((qt, g, 1), jnp.float32),
+            pltpu.VMEM((qt, g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    return out.reshape(b, s, h, hd)

@@ -1,0 +1,18 @@
+"""jit'd wrapper for the flash-prefill kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_prefill.kernel import flash_prefill_kernel
+
+Array = jnp.ndarray
+
+
+def flash_prefill(q: Array, k: Array, v: Array, *, window: int = 0,
+                  q_tile: int = 256, kv_tile: int = 256,
+                  interpret: bool = True) -> Array:
+    """Causal (optionally sliding-window) chunk self-attention.
+
+    q: [B, S, H, hd]; k/v: [B, S, KV, hd] (GQA: KV divides H)."""
+    return flash_prefill_kernel(q, k, v, window=window, q_tile=q_tile,
+                                kv_tile=kv_tile, interpret=interpret)

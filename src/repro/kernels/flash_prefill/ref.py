@@ -1,0 +1,30 @@
+"""jnp oracle for the causal (optionally windowed) flash-prefill kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def flash_prefill_ref(q: Array, k: Array, v: Array, window: int = 0) -> Array:
+    """Causal self-attention over one chunk.
+
+    q: [B, S, H, hd]; k/v: [B, S, KV, hd].  Positions are 0..S-1.
+    Returns [B, S, H, hd] f32.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.astype(jnp.float32).reshape(b, s, kv, g, hd) / math.sqrt(hd)
+    scores = jnp.einsum("bqkgh,blkh->bqkgl", qf, k.astype(jnp.float32))
+    pos = jnp.arange(s)
+    mask = pos[None, :] <= pos[:, None]
+    if window > 0:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    scores = jnp.where(mask[None, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqkgl,blkh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd)

@@ -1,0 +1,4 @@
+from repro.kernels.spec_verify.ops import gather_logprobs
+from repro.kernels.spec_verify.ref import gather_logprobs_ref
+
+__all__ = ["gather_logprobs", "gather_logprobs_ref"]

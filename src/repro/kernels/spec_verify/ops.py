@@ -1,0 +1,27 @@
+"""jit'd public wrapper: batched ragged gather-logprobs for verification.
+
+``gather_logprobs(logits [.., V], tokens [..])`` flattens leading dims to
+rows, runs the Pallas kernel (interpret=True on CPU; compiled on TPU), and
+reshapes back.  Used by the verification server to compute log p_j(s_j) and
+log q_j(s_j) without materializing [N, S, V] softmaxes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spec_verify.kernel import gather_logprobs_kernel
+
+Array = jnp.ndarray
+
+
+def gather_logprobs(logits: Array, tokens: Array, *, tile: int = 2048,
+                    interpret: bool = True) -> tuple[Array, Array]:
+    """logits [..., V], tokens i32[...] -> (logprob [...], logz [...])."""
+    lead = logits.shape[:-1]
+    v = logits.shape[-1]
+    flat_logits = logits.reshape(-1, v)
+    flat_tokens = tokens.reshape(-1).astype(jnp.int32)
+    lp, lz = gather_logprobs_kernel(flat_logits, flat_tokens, tile=tile,
+                                    interpret=interpret)
+    return lp.reshape(lead), lz.reshape(lead)

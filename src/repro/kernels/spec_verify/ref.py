@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the spec-verify gather-logprob kernel.
+
+The verification hot spot is computing log p_j(s_j) and log q_j(s_j) for
+every draft position: a log-softmax over the vocab (up to 256k) followed by
+a 1-element gather.  Done naively this materializes two full [N, S, V]
+softmax arrays in HBM; the kernel streams V tiles through VMEM and emits
+only the [N, S] gathered log-probs (plus the log-normalizer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def gather_logprobs_ref(logits: Array, tokens: Array) -> tuple[Array, Array]:
+    """logits: [R, V]; tokens: i32[R] -> (logprob[R], logz[R]).
+
+    logprob[r] = logits[r, tokens[r]] - logsumexp(logits[r]).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tok = jnp.take_along_axis(logits, tokens[:, None], axis=-1)[:, 0]
+    return tok - logz, logz

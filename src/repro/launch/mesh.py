@@ -1,0 +1,25 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16); the pod axis
+carries data-parallel replication of verification groups (DESIGN §2).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — the dry-run sets XLA_FLAGS before calling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh over forced host devices for CPU integration tests."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,74 @@
+"""Input specs per (architecture x input shape): ShapeDtypeStruct stand-ins.
+
+``input_specs(cfg, shape)`` returns the exact pytree each lowered entry
+point consumes — weak-type-correct, shardable, no device allocation — the
+same pattern the dry-run, roofline, and benchmark harnesses all read from.
+Set ``concrete=True`` (smoke tests) to get real random arrays instead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, ModelConfig
+from repro.models import Model
+
+Array = jnp.ndarray
+
+
+def _make(shape, dtype, concrete, key=None, maxval=None):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jax.random.randint(key, shape, 0, maxval or 2, dtype)
+    return jax.random.normal(key, shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, *, concrete: bool = False,
+                batch: int | None = None, seq: int | None = None,
+                cache_len: int | None = None, seed: int = 0) -> dict:
+    """Input pytree for the given shape's entry point.
+
+    train_4k / prefill_32k -> {"tokens" [B,S], (+frontend embeds)}
+    decode_*              -> {"tokens" [B,1], "positions" [B,1],
+                              "cache": <stack cache for seq_len context>}
+    """
+    seq_len, global_batch, kind = INPUT_SHAPES[shape_name]
+    b = batch if batch is not None else global_batch
+    s = seq if seq is not None else seq_len
+    keys = jax.random.split(jax.random.PRNGKey(seed), 8)
+    tok_dtype = jnp.int32
+    act_dtype = jnp.dtype(cfg.dtype)
+
+    specs: dict = {}
+    if kind in ("train", "prefill"):
+        n_text = s
+        if cfg.frontend == "vision":
+            n_text = s - min(cfg.num_prefix_embeds, s // 2)
+            specs["prefix_embeds"] = _make(
+                (b, s - n_text, cfg.d_model), act_dtype, concrete, keys[1])
+        specs["tokens"] = _make((b, n_text), tok_dtype, concrete, keys[0],
+                                cfg.vocab_size)
+        if cfg.frontend == "audio":
+            specs["audio_embeds"] = _make(
+                (b, cfg.encoder.source_len, cfg.d_model), act_dtype,
+                concrete, keys[2])
+        return specs
+
+    # decode: one new token against a seq_len-deep cache
+    cl = cache_len if cache_len is not None else s
+    specs["tokens"] = _make((b, 1), tok_dtype, concrete, keys[0],
+                            cfg.vocab_size)
+    specs["positions"] = _make((b, 1), tok_dtype, concrete, keys[3], cl)
+    model = Model(cfg)
+    if concrete:
+        specs["cache"] = model.init_cache(b, cl, act_dtype)
+    else:
+        specs["cache"] = jax.eval_shape(
+            lambda: model.init_cache(b, cl, act_dtype))
+    if cfg.frontend == "audio":
+        specs["audio_embeds"] = _make(
+            (b, cfg.encoder.source_len, cfg.d_model), act_dtype, concrete,
+            keys[2])
+    return specs

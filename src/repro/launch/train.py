@@ -1,0 +1,69 @@
+"""Training launcher: any assigned architecture on the synthetic pipeline.
+
+CPU (this container): reduced configs, single device.
+TPU deployment: pass --full to use the assigned full config; the train_step
+is the same function the multi-pod dry-run lowers (TRAIN_RULES sharding:
+FSDP over data + tensor parallel over model + Megatron-SP activations).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHITECTURES, get_config, get_reduced
+from repro.data.pipeline import token_stream
+from repro.models import Model
+from repro.training import checkpoint
+from repro.training.optimizer import AdamW
+from repro.training.train_state import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES),
+                    default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="full assigned config (TPU deployments)")
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_reduced(
+        args.arch, vocab_size=4096)
+    model = Model(cfg)
+    print(f"arch={cfg.name}{'' if args.full else ' (reduced)'} "
+          f"params~{cfg.param_count() / 1e6:.1f}M")
+
+    opt = AdamW(learning_rate=args.lr, warmup_steps=min(20, args.steps // 5),
+                total_steps=args.steps)
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, opt, remat=args.full))
+
+    t0 = time.time()
+    losses = []
+    for i, batch in enumerate(token_stream(cfg.vocab_size, args.batch,
+                                           args.seq, args.steps)):
+        if cfg.frontend is not None:
+            print("frontend archs need embeds; use examples/train_lm.py "
+                  "pattern"); return
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            print(f"step {i:5d}  loss={losses[-1]:.4f}  "
+                  f"lr={float(metrics['lr']):.2e}  "
+                  f"({time.time() - t0:.0f}s)")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, state.params,
+                        {"step": args.steps, "config": cfg.name})
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

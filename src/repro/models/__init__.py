@@ -1,0 +1,3 @@
+from repro.models.model import ForwardOutput, Model
+
+__all__ = ["Model", "ForwardOutput"]

@@ -1,0 +1,299 @@
+"""Attention: GQA/MHA (+qk-norm, partial rope), sliding/local windows, MLA,
+cross-attention — with a single blockwise (flash-style) inner loop.
+
+Layout conventions:
+  activations  x        [B, S, D]
+  queries      q        [B, S, H, hd]
+  keys/values  k, v     [B, L, KV, hd]      (L = kv length: seq or cache)
+  positions              [B, S] absolute token positions (ring buffers and
+                         padded caches are handled with explicit kv position
+                         + validity arrays, so masks never assume layout)
+
+The inner loop ``dot_attention`` scans over KV blocks with an online-softmax
+accumulator (flash attention in pure jnp).  This keeps the prefill memory
+footprint at O(S·block) instead of O(S²) — required for the 32k prefill
+shape — and is also the jnp oracle for the Pallas kernels in
+``repro.kernels``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import (_dense_init, apply_head_norm, apply_rope,
+                                 init_head_norm)
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30
+
+
+def _pick_block(l: int) -> int:
+    for b in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if l % b == 0:
+            return b
+    return 1
+
+
+def dot_attention(
+    q: Array,               # [B, Sq, H, hd]
+    k: Array,               # [B, L, KV, hd]
+    v: Array,               # [B, L, KV, hd]
+    q_pos: Array,           # [B, Sq] absolute positions of queries
+    kv_pos: Array,          # [B, L]  absolute positions of keys
+    kv_valid: Array,        # [B, L]  bool: cache slot holds a real token
+    window: int = 0,        # >0: only attend to q_pos - kv_pos < window
+    causal: bool = True,
+    softcap: float = 0.0,
+    block_size: int = 0,
+) -> Array:
+    """Blockwise online-softmax attention.  Returns [B, Sq, H, hd]."""
+    b, sq, h, hd = q.shape
+    l, kv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]  # value dim may differ from qk dim (MLA)
+    groups = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    # Decode/verify chunks (small Sq) use ONE block: scores [B,Sq,H,L] are
+    # small, and a single einsum lets GSPMD flash-decode a cache whose L axis
+    # is sharded over the model axis (partial softmax stats + all-reduce)
+    # instead of dynamic-slicing across shards.  Long-chunk prefill/train
+    # scans KV blocks with the online-softmax accumulator (memory O(S*blk)).
+    blk = block_size or (l if sq <= 64 else _pick_block(l))
+    n_blocks = l // blk
+
+    # operands stay in their storage dtype (bf16 on TPU) with f32 MXU
+    # accumulation via preferred_element_type — upcasting k/v here would
+    # materialize an f32 copy of the whole cache (2x HBM traffic; §Perf 2b)
+    qf = (q * scale).reshape(b, sq, kv, groups, hd)
+
+    def mask_for(kpos, kvalid):
+        # [B, Sq, blk]
+        m = kvalid[:, None, :]
+        if causal:
+            m = m & (kpos[:, None, :] <= q_pos[:, :, None])
+        if window > 0:
+            m = m & (q_pos[:, :, None] - kpos[:, None, :] < window)
+        return m
+
+    def block(carry, i):
+        m_prev, l_prev, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, i * blk, blk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * blk, blk, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(kv_pos, i * blk, blk, axis=1)
+        kval = jax.lax.dynamic_slice_in_dim(kv_valid, i * blk, blk, axis=1)
+        # scores: [B, Sq, KV, G, blk] (f32 accumulation)
+        s = jnp.einsum("bqkgh,blkh->bqkgl", qf, ks,
+                       preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = mask_for(kp, kval)[:, :, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        # explicit zero for masked slots: when a row is ENTIRELY masked,
+        # s == m_new == NEG_INF would give p = exp(0) = 1 (mean-of-v bug)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgl,blkh->bqkgh", p.astype(v.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, sq, kv, groups), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, groups), jnp.float32)
+    a0 = jnp.zeros((b, sq, kv, groups, vd), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(block, (m0, l0, a0),
+                                      jnp.arange(n_blocks))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.reshape(b, sq, h, vd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA attention block
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _dense_init(ks[0], (d, h, hd), d, dtype),
+        "wk": _dense_init(ks[1], (d, kv, hd), d, dtype),
+        "wv": _dense_init(ks[2], (d, kv, hd), d, dtype),
+        "wo": _dense_init(ks[3], (h, hd, d), h * hd, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_head_norm(ks[4], hd, dtype)
+        p["k_norm"] = init_head_norm(ks[5], hd, dtype)
+    return p
+
+
+def attention_qkv(params, x: Array, cfg: ModelConfig, positions: Array):
+    """Project to rotated q, k, v for the current chunk."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qk_norm:
+        q = apply_head_norm(params["q_norm"], q)
+        k = apply_head_norm(params["k_norm"], k)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_pct, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_pct, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_out(params, ctx: Array) -> Array:
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = _dense_init(ks[0], (d, m.q_lora_rank), d, dtype)
+        p["wq_b"] = _dense_init(ks[1], (m.q_lora_rank, h, qk_dim),
+                                m.q_lora_rank, dtype)
+    else:
+        p["wq"] = _dense_init(ks[0], (d, h, qk_dim), d, dtype)
+    # joint compression of keys/values into the latent + decoupled rope key
+    p["wkv_a"] = _dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                             d, dtype)
+    p["wk_b"] = _dense_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                            m.kv_lora_rank, dtype)
+    p["wv_b"] = _dense_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim),
+                            m.kv_lora_rank, dtype)
+    p["wo"] = _dense_init(ks[5], (h, m.v_head_dim, d), h * m.v_head_dim, dtype)
+    return p
+
+
+class MLAChunk(NamedTuple):
+    q_nope: Array   # [B, S, H, nope]
+    q_pe: Array     # [B, S, H, rope]
+    c_kv: Array     # [B, S, r]        latent to cache
+    k_pe: Array     # [B, S, rope]     shared rope key to cache
+
+
+def mla_project(params, x: Array, cfg: ModelConfig, positions: Array) -> MLAChunk:
+    m: MLAConfig = cfg.mla
+    if m.q_lora_rank:
+        q = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+        q = jnp.einsum("bsr,rhk->bshk", q, params["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_pe = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_pe = apply_rope(q_pe, positions, 1.0, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv, k_pe = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, 1.0,
+                      cfg.rope_theta)[:, :, 0, :]
+    return MLAChunk(q_nope, q_pe, c_kv, k_pe)
+
+
+def mla_attend(params, chunk: MLAChunk, c_kv: Array, k_pe: Array,
+               cfg: ModelConfig, q_pos: Array, kv_pos: Array,
+               kv_valid: Array) -> Array:
+    """Attention over the latent cache.  c_kv: [B, L, r], k_pe: [B, L, rope].
+
+    Two mathematically identical paths:
+    * prefill/train (large Sq): up-project latents to per-head K/V once and
+      run the blockwise flash core — the up-projection amortizes over Sq.
+    * decode/verify (small Sq): ABSORBED form (§Perf it.2, DeepSeek-V2's
+      matrix-absorption): fold W_uk into the query and W_uv into the output
+      so attention runs directly in the rank-r latent space — per step this
+      replaces O(L·r·H·(nope+v)) up-projection FLOPs + an [B,L,H,d] K/V
+      materialization with O(H·nope·r) query-side work.
+    """
+    m: MLAConfig = cfg.mla
+    b, s = chunk.q_nope.shape[:2]
+    if s <= 64:
+        return _mla_attend_absorbed(params, chunk, c_kv, k_pe, cfg, q_pos,
+                                    kv_pos, kv_valid)
+    k_nope = jnp.einsum("blr,rhk->blhk", c_kv, params["wk_b"])
+    v = jnp.einsum("blr,rhk->blhk", c_kv, params["wv_b"])
+    k_pe_h = jnp.broadcast_to(k_pe[:, :, None, :],
+                              k_pe.shape[:2] + (cfg.num_heads,
+                                                m.qk_rope_head_dim))
+    k = jnp.concatenate([k_nope, k_pe_h], axis=-1)
+    q = jnp.concatenate([chunk.q_nope, chunk.q_pe], axis=-1)
+    ctx = dot_attention(q, k, v, q_pos, kv_pos, kv_valid,
+                        softcap=cfg.logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+
+
+def _mla_attend_absorbed(params, chunk: MLAChunk, c_kv: Array, k_pe: Array,
+                         cfg: ModelConfig, q_pos: Array, kv_pos: Array,
+                         kv_valid: Array) -> Array:
+    """Latent-space attention: scores and context never leave rank r."""
+    m: MLAConfig = cfg.mla
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    scale = 1.0 / math.sqrt(qk_dim)
+    # fold W_uk into the query: [B,S,H,nope] x [r,H,nope] -> [B,S,H,r];
+    # bf16 operands + f32 accumulation (no f32 copy of the latent cache)
+    q_abs = jnp.einsum("bshk,rhk->bshr", chunk.q_nope, params["wk_b"],
+                       preferred_element_type=jnp.float32)
+    s_nope = jnp.einsum("bshr,blr->bshl", q_abs.astype(c_kv.dtype), c_kv,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshk,blk->bshl", chunk.q_pe, k_pe,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale                     # [B,S,H,L]
+    if cfg.logit_softcap > 0.0:
+        scores = jnp.tanh(scores / cfg.logit_softcap) * cfg.logit_softcap
+    mask = kv_valid[:, None, :] & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    scores = jnp.where(mask[:, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = probs * mask[:, :, None, :]  # all-masked rows -> exact zeros
+    # context in latent space, then absorb W_uv on the way out
+    ctx_lat = jnp.einsum("bshl,blr->bshr", probs.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)  # [B,S,H,r]
+    ctx = jnp.einsum("bshr,rhk->bshk", ctx_lat.astype(params["wv_b"].dtype),
+                     params["wv_b"], preferred_element_type=jnp.float32)
+    out = jnp.einsum("bshk,hkd->bsd", ctx.astype(chunk.q_nope.dtype),
+                     params["wo"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (Whisper decoder -> encoder)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(key, cfg: ModelConfig, dtype):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d, h, hd), d, dtype),
+        "wk": _dense_init(ks[1], (d, h, hd), d, dtype),
+        "wv": _dense_init(ks[2], (d, h, hd), d, dtype),
+        "wo": _dense_init(ks[3], (h, hd, d), h * hd, dtype),
+    }
+
+
+def apply_cross_attention(params, x: Array, enc_k: Array, enc_v: Array,
+                          cfg: ModelConfig) -> Array:
+    """x: [B, S, D]; enc_k/enc_v: [B, T, H, hd] precomputed from the encoder."""
+    b, s, _ = x.shape
+    t = enc_k.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    kv_pos = jnp.zeros((b, t), jnp.int32)  # non-causal: all visible
+    valid = jnp.ones((b, t), bool)
+    ctx = dot_attention(q, enc_k, enc_v, q_pos, kv_pos, valid, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+
+
+def encode_cross_kv(params, enc_out: Array):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, params["wv"])
+    return k, v

@@ -1,0 +1,152 @@
+"""Foundational layers: norms, MLPs, embeddings, rotary embeddings.
+
+Everything is pure-functional: ``init_*`` builds a param dict (leaves are
+jnp arrays), ``apply`` is a free function.  Param trees use descriptive leaf
+names that the sharding rules in ``repro.distributed.sharding`` match on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / jnp.sqrt(in_axis_size)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(key, d, norm_type: str, dtype):
+    if norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if norm_type == "nonparam_ln":  # OLMo: no learnable affine
+        return {}
+    raise ValueError(norm_type)
+
+
+def apply_norm(params, x: Array, norm_type: str, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        out = xf / rms * params["scale"].astype(jnp.float32)
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mean) / jnp.sqrt(var + eps)
+        if norm_type == "layernorm":
+            out = out * params["scale"].astype(jnp.float32) \
+                + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_head_norm(key, head_dim, dtype):
+    """Per-head RMSNorm scale for qk-norm (Qwen3)."""
+    return {"scale": jnp.ones((head_dim,), dtype)}
+
+
+def apply_head_norm(params, x: Array, eps: float = 1e-6) -> Array:
+    """x: [..., head_dim]"""
+    xf = x.astype(jnp.float32)
+    rms = jnp.sqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf / rms * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": _dense_init(k1, (d_model, d_ff), d_model, dtype),
+            "w_up": _dense_init(k2, (d_model, d_ff), d_model, dtype),
+            "w_down": _dense_init(k3, (d_ff, d_model), d_ff, dtype),
+        }
+    return {  # plain 2-layer (Whisper: gelu)
+        "w_up": _dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "w_down": _dense_init(k2, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def apply_mlp(params, x: Array, act: str) -> Array:
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["w_up"]))
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d_model, dtype):
+    return {"embedding": (jax.random.normal(key, (vocab, d_model)) * 0.02
+                          ).astype(dtype)}
+
+
+def apply_embedding(params, tokens: Array) -> Array:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def init_unembed(key, d_model, vocab, dtype):
+    return {"w_unembed": _dense_init(key, (d_model, vocab), d_model, dtype)}
+
+
+def apply_unembed(params, x: Array) -> Array:
+    return jnp.einsum("...d,dv->...v", x, params["w_unembed"])
+
+
+def init_learned_pos(key, max_len, d_model, dtype):
+    return {"pos_embedding": (jax.random.normal(key, (max_len, d_model))
+                              * 0.02).astype(dtype)}
+
+
+def apply_learned_pos(params, x: Array, positions: Array) -> Array:
+    table = params["pos_embedding"]
+    pos = jnp.clip(positions, 0, table.shape[0] - 1)
+    return x + jnp.take(table, pos, axis=0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (partial-rotary capable, StableLM rope_pct)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, rope_pct: float, theta: float):
+    rot_dim = int(head_dim * rope_pct) // 2 * 2
+    inv = 1.0 / theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    return inv, rot_dim
+
+
+def apply_rope(x: Array, positions: Array, rope_pct: float, theta: float) -> Array:
+    """x: [B, S, H, head_dim]; positions: [B, S] absolute positions."""
+    head_dim = x.shape[-1]
+    inv, rot_dim = rope_frequencies(head_dim, rope_pct, theta)
+    if rot_dim == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # [B, S, rot/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    """tanh soft-capping (Gemma / RecurrentGemma logits)."""
+    if cap <= 0.0:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,181 @@
+"""Unified model API: init / forward(train|prefill|decode) / init_cache.
+
+One entry point for all 10 assigned architectures.  Frontends (Whisper's
+mel+conv codec, InternVL's ViT) are stubs per the assignment: callers pass
+precomputed ``audio_embeds`` / ``prefix_embeds`` of the right shape and the
+model consumes them through a learned projection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.attention import (apply_cross_attention, encode_cross_kv,
+                                    init_cross_attention)
+from repro.models.layers import (_dense_init, apply_embedding,
+                                 apply_learned_pos, apply_norm,
+                                 apply_unembed, init_embedding,
+                                 init_learned_pos, init_norm, init_unembed,
+                                 softcap)
+from repro.models.transformer import (apply_stack, init_stack,
+                                      init_stack_cache, stack_layout)
+
+Array = jnp.ndarray
+
+
+class ForwardOutput(NamedTuple):
+    logits: Array          # [B, S, padded_vocab]
+    cache: object          # stack cache (None in train mode)
+    aux_loss: Array        # MoE load-balance scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    def init(self, key: Array):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 8)
+        params = {
+            "embed": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model,
+                                    dtype),
+            "stack": init_stack(ks[1], cfg, dtype),
+            "final_norm": init_norm(ks[2], cfg.d_model, cfg.norm_type, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = init_unembed(ks[3], cfg.d_model,
+                                             cfg.padded_vocab, dtype)
+        if cfg.pos_embedding == "learned":
+            params["pos"] = init_learned_pos(ks[4], 32768, cfg.d_model, dtype)
+        if cfg.frontend is not None:
+            params["frontend_proj"] = _dense_init(
+                ks[5], (cfg.d_model, cfg.d_model), cfg.d_model, dtype)
+        if cfg.is_encdec:
+            enc_cfg = self._encoder_cfg()
+            params["encoder"] = {
+                "stack": init_stack(ks[6], enc_cfg, dtype),
+                "final_norm": init_norm(ks[7], cfg.d_model, cfg.norm_type,
+                                        dtype),
+            }
+            # per-decoder-layer cross attention
+            pattern, groups, rest = stack_layout(cfg)
+            xkeys = jax.random.split(jax.random.fold_in(key, 99),
+                                     len(pattern) + len(rest))
+            xattn = {"scan": {}, "rest": {}}
+            for i in range(len(pattern)):
+                gk = jax.random.split(xkeys[i], groups)
+                xattn["scan"][f"slot{i}"] = jax.vmap(
+                    lambda k: {"xattn": init_cross_attention(k, cfg, dtype),
+                               "norm_x": init_norm(k, cfg.d_model,
+                                                   cfg.norm_type, dtype)})(gk)
+            for j in range(len(rest)):
+                k = xkeys[len(pattern) + j]
+                xattn["rest"][f"layer{j}"] = {
+                    "xattn": init_cross_attention(k, cfg, dtype),
+                    "norm_x": init_norm(k, cfg.d_model, cfg.norm_type, dtype)}
+            params["cross"] = xattn
+        return params
+
+    def _encoder_cfg(self) -> ModelConfig:
+        cfg = self.cfg
+        return dataclasses.replace(
+            cfg, num_layers=cfg.encoder.num_layers, block_pattern=("attn",),
+            moe=None, mla=None, encoder=None, window=0,
+            pos_embedding="learned")
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, dtype=None):
+        dtype = dtype or jnp.dtype(self.cfg.dtype)
+        return init_stack_cache(self.cfg, batch, cache_len, dtype)
+
+    # ------------------------------------------------------------------
+    def encode(self, params, audio_embeds: Array) -> Array:
+        """Encoder pass over stubbed frontend embeddings [B, T, D]."""
+        cfg = self.cfg
+        enc_cfg = self._encoder_cfg()
+        x = audio_embeds.astype(jnp.dtype(cfg.dtype))
+        x = jnp.einsum("btd,de->bte", x, params["frontend_proj"]) \
+            if "frontend_proj" in params else x
+        b, t, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+        if "pos" in params:
+            x = apply_learned_pos(params["pos"], x, pos)
+        x, _, _ = apply_stack(params["encoder"]["stack"], enc_cfg, x, pos,
+                              None, "train", causal=False)
+        return apply_norm(params["encoder"]["final_norm"], x, cfg.norm_type)
+
+    # ------------------------------------------------------------------
+    def encode_cross(self, params, enc_out: Array):
+        """Precompute per-decoder-layer cross-attention K/V from the encoder
+        output (serving: computed once at prefill; §Perf it.3)."""
+        cross = params["cross"]
+        out = {"scan": {}, "rest": {}}
+        for slot, p in cross["scan"].items():
+            out["scan"][slot] = jax.vmap(
+                lambda pp: encode_cross_kv(pp["xattn"], enc_out))(p)
+        for name, p in cross["rest"].items():
+            out["rest"][name] = encode_cross_kv(p["xattn"], enc_out)
+        return out
+
+    def forward(self, params, tokens: Array, *, mode: str = "train",
+                cache=None, positions: Optional[Array] = None,
+                chunk_valid: Optional[Array] = None,
+                prefix_embeds: Optional[Array] = None,
+                enc_out: Optional[Array] = None,
+                cross_kv=None,
+                remat: bool = False) -> ForwardOutput:
+        """tokens: i32[B, S].  mode: train | prefill | decode.
+
+        prefix_embeds: [B, P, D] VLM patch embeddings, prepended (train and
+        prefill only).  enc_out: [B, T, D] encoder output for enc-dec models.
+        """
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        b, s = tokens.shape
+        x = apply_embedding(params["embed"], tokens).astype(dtype)
+
+        if prefix_embeds is not None:
+            assert mode in ("train", "prefill")
+            pe = prefix_embeds.astype(dtype)
+            if "frontend_proj" in params:
+                pe = jnp.einsum("bpd,de->bpe", pe, params["frontend_proj"])
+            x = jnp.concatenate([pe, x], axis=1)
+            s = x.shape[1]
+            if chunk_valid is not None:
+                pv = jnp.ones((b, prefix_embeds.shape[1]), bool)
+                chunk_valid = jnp.concatenate([pv, chunk_valid], axis=1)
+
+        if positions is None:
+            assert mode in ("train", "prefill"), \
+                "decode mode requires explicit positions"
+            positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        elif prefix_embeds is not None:
+            p = prefix_embeds.shape[1]
+            positions = jnp.concatenate(
+                [jnp.broadcast_to(jnp.arange(p)[None, :], (b, p)),
+                 positions + p], axis=1)
+
+        if "pos" in params and cfg.pos_embedding == "learned":
+            x = apply_learned_pos(params["pos"], x, positions)
+
+        x = constrain(x, "batch", "seq", "embed")
+        cross = params.get("cross")
+        x, cache, aux = apply_stack(
+            params["stack"], cfg, x, positions, cache, mode,
+            chunk_valid=chunk_valid, remat=remat, enc_out=enc_out,
+            cross_params=cross, cross_kv=cross_kv)
+        x = apply_norm(params["final_norm"], x, cfg.norm_type)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["embedding"])
+        else:
+            logits = apply_unembed(params["unembed"], x)
+        logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+        logits = constrain(logits, "batch", "seq", "vocab")
+        return ForwardOutput(logits=logits, cache=cache, aux_loss=aux)

@@ -1,0 +1,244 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and RG-LRU (RecurrentGemma).
+
+All recurrences are written as ``jax.lax.scan`` over time with an explicit
+carried state, so the same code serves three modes:
+
+  * train/prefill: scan over the whole sequence from the zero state;
+  * verify chunk:  scan over S draft tokens from a checkpointed state
+                   (speculative decoding rollback = restore the checkpoint);
+  * decode:        scan over a single position.
+
+States are NamedTuple pytrees so they ride through pjit/shard_map and the
+serving cache machinery unchanged.
+
+References: xLSTM arXiv:2405.04517 (Eqs. 19-27 mLSTM, 11-18 sLSTM);
+RecurrentGemma / Griffin arXiv:2402.19427 (RG-LRU, Eq. 4).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, fully parallelizable gating; scan implementation)
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    C: Array    # [B, H, dk, dv]  matrix memory
+    n: Array    # [B, H, dk]      normalizer
+    m: Array    # [B, H]          exponential-gating stabilizer
+
+
+def mlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.d_model * cfg.ssm_proj_factor)
+    h = cfg.ssm_num_heads
+    return d_in, h, d_in // h
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, h, dk = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in": _dense_init(ks[0], (d, d_in), d, dtype),
+        "w_z": _dense_init(ks[1], (d, d_in), d, dtype),      # output gate path
+        "wq_m": _dense_init(ks[2], (d_in, h, dk), d_in, dtype),
+        "wk_m": _dense_init(ks[3], (d_in, h, dk), d_in, dtype),
+        "wv_m": _dense_init(ks[4], (d_in, h, dk), d_in, dtype),
+        "w_if": _dense_init(ks[5], (d_in, h, 2), d_in, dtype),  # i,f gates
+        "b_if": jnp.concatenate([jnp.zeros((h, 1)),
+                                 jnp.ones((h, 1)) * 3.0], -1).astype(dtype),
+        "w_out": _dense_init(ks[6], (d_in, d), d_in, dtype),
+    }
+
+
+def mlstm_zero_state(cfg: ModelConfig, batch: int, dtype) -> MLSTMState:
+    d_in, h, dk = mlstm_dims(cfg)
+    return MLSTMState(
+        C=jnp.zeros((batch, h, dk, dk), jnp.float32),
+        n=jnp.zeros((batch, h, dk), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+def apply_mlstm(params, x: Array, state: MLSTMState, cfg: ModelConfig):
+    """x: [B, S, D] -> (y [B, S, D], new_state)."""
+    d_in, h, dk = mlstm_dims(cfg)
+    scale = 1.0 / math.sqrt(dk)
+    xi = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z = jax.nn.silu(jnp.einsum("bsd,de->bse", x, params["w_z"]))
+    q = jnp.einsum("bse,ehk->bshk", xi, params["wq_m"]).astype(jnp.float32)
+    k = (jnp.einsum("bse,ehk->bshk", xi, params["wk_m"]) * scale
+         ).astype(jnp.float32)
+    v = jnp.einsum("bse,ehk->bshk", xi, params["wv_m"]).astype(jnp.float32)
+    gates = jnp.einsum("bse,ehg->bshg", xi, params["w_if"]).astype(jnp.float32) \
+        + params["b_if"].astype(jnp.float32)
+    log_i = gates[..., 0]                       # pre-activation input gate
+    log_f = jax.nn.log_sigmoid(gates[..., 1])   # forget gate in log space
+
+    def step(st: MLSTMState, inp):
+        qt, kt, vt, li, lf = inp                # [B,H,dk] x3, [B,H] x2
+        m_new = jnp.maximum(lf + st.m, li)
+        f_eff = jnp.exp(lf + st.m - m_new)[..., None]
+        i_eff = jnp.exp(li - m_new)[..., None]
+        C = f_eff[..., None] * st.C + i_eff[..., None] * \
+            (kt[..., :, None] * vt[..., None, :])
+        n = f_eff * st.n + i_eff * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n))
+        out = num / jnp.maximum(den, 1.0)[..., None]
+        return MLSTMState(C, n, m_new), out
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          log_i.swapaxes(0, 1), log_f.swapaxes(0, 1))
+    state, outs = jax.lax.scan(step, state, xs)
+    hcat = outs.swapaxes(0, 1).reshape(x.shape[0], x.shape[1], d_in)
+    y = jnp.einsum("bse,ed->bsd", hcat.astype(x.dtype) * z, params["w_out"])
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, exponential gating, per-head recurrence)
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: Array    # [B, D] cell
+    n: Array    # [B, D] normalizer
+    h: Array    # [B, D] hidden (recurrent input)
+    m: Array    # [B, D] stabilizer
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    p = {f"w_{g}": _dense_init(ks[i], (d, d), d, dtype)
+         for i, g in enumerate(("zi", "ii", "fi", "oi"))}
+    # recurrent weights, block-diagonal per head in the paper; dense here
+    # with a 1/sqrt(d) init is the same compute shape
+    p.update({f"r_{g}": _dense_init(ks[4 + i], (d, d), d, dtype)
+              for i, g in enumerate(("z", "i", "f", "o"))})
+    p["b_f"] = (jnp.ones((d,)) * 3.0).astype(dtype)
+    p["w_out"] = _dense_init(ks[8], (d, d), d, dtype)
+    return p
+
+
+def slstm_zero_state(cfg: ModelConfig, batch: int, dtype) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def apply_slstm(params, x: Array, state: SLSTMState, cfg: ModelConfig):
+    zi = jnp.einsum("bsd,de->bse", x, params["w_zi"]).astype(jnp.float32)
+    ii = jnp.einsum("bsd,de->bse", x, params["w_ii"]).astype(jnp.float32)
+    fi = (jnp.einsum("bsd,de->bse", x, params["w_fi"])
+          + params["b_f"]).astype(jnp.float32)
+    oi = jnp.einsum("bsd,de->bse", x, params["w_oi"]).astype(jnp.float32)
+    rz, ri, rf, ro = (params[k].astype(jnp.float32)
+                      for k in ("r_z", "r_i", "r_f", "r_o"))
+
+    def step(st: SLSTMState, inp):
+        z_x, i_x, f_x, o_x = inp
+        z = jnp.tanh(z_x + st.h @ rz)
+        li = i_x + st.h @ ri                      # log-space input gate
+        lf = jax.nn.log_sigmoid(f_x + st.h @ rf)  # log forget gate
+        o = jax.nn.sigmoid(o_x + st.h @ ro)
+        m_new = jnp.maximum(lf + st.m, li)
+        c = jnp.exp(lf + st.m - m_new) * st.c + jnp.exp(li - m_new) * z
+        n = jnp.exp(lf + st.m - m_new) * st.n + jnp.exp(li - m_new)
+        h = o * c / jnp.maximum(n, 1.0)
+        return SLSTMState(c, n, h, m_new), h
+
+    xs = (zi.swapaxes(0, 1), ii.swapaxes(0, 1), fi.swapaxes(0, 1),
+          oi.swapaxes(0, 1))
+    state, outs = jax.lax.scan(step, state, xs)
+    h = outs.swapaxes(0, 1).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", h, params["w_out"]), state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+class RGLRUState(NamedTuple):
+    h: Array        # [B, d_rnn]                   linear-recurrence state
+    conv: Array     # [B, conv_width-1, d_rnn]     temporal-conv lookback
+
+
+def rglru_dims(cfg: ModelConfig):
+    return cfg.rglru_d_rnn or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    dr = rglru_dims(cfg)
+    w = cfg.conv1d_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = exp(-c*softplus(L)*r) starts near 0.9..0.999
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jax.random.uniform(ks[0], (dr,), minval=0.9, maxval=0.999))
+        / 8.0))
+    return {
+        "w_x": _dense_init(ks[1], (d, dr), d, dtype),       # recurrent branch
+        "w_gate": _dense_init(ks[2], (d, dr), d, dtype),    # gelu gate branch
+        "conv_w": _dense_init(ks[3], (w, dr), w, dtype),    # depthwise conv
+        "w_a": _dense_init(ks[4], (dr, dr), dr, dtype),     # recurrence gate
+        "w_i": _dense_init(ks[5], (dr, dr), dr, dtype),     # input gate
+        "lambda_param": lam.astype(jnp.float32),
+        "w_out": _dense_init(ks[6], (dr, d), dr, dtype),
+    }
+
+
+def rglru_zero_state(cfg: ModelConfig, batch: int, dtype) -> RGLRUState:
+    dr = rglru_dims(cfg)
+    return RGLRUState(
+        h=jnp.zeros((batch, dr), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv1d_width - 1, dr), dtype),
+    )
+
+
+_RGLRU_C = 8.0
+
+
+def apply_rglru(params, x: Array, state: RGLRUState, cfg: ModelConfig):
+    """Griffin recurrent block: proj -> causal conv1d -> RG-LRU, times a
+    gelu gate branch, then out-proj.  x: [B, S, D]."""
+    b, s, _ = x.shape
+    w = cfg.conv1d_width
+    xb = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, params["w_gate"]))
+
+    # causal depthwise conv with carried lookback
+    ext = jnp.concatenate([state.conv.astype(xb.dtype), xb], axis=1)
+    conv = sum(ext[:, i:i + s, :] * params["conv_w"][w - 1 - i]
+               for i in range(w))
+    new_conv = ext[:, -(w - 1):, :] if w > 1 else state.conv
+
+    # RG-LRU recurrence (fp32)
+    u = conv.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", u, params["w_a"].astype(jnp.float32)))
+    i_g = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", u, params["w_i"].astype(jnp.float32)))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lambda_param"]) * r  # [B,S,dr]
+    a = jnp.exp(log_a)
+    gated_x = u * i_g
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+
+    def step(h, inp):
+        a_t, gx_t, m_t = inp
+        h = a_t * h + m_t * gx_t
+        return h, h
+
+    xs = (a.swapaxes(0, 1), gated_x.swapaxes(0, 1), mult.swapaxes(0, 1))
+    h_final, hs = jax.lax.scan(step, state.h, xs)
+    y = hs.swapaxes(0, 1).astype(x.dtype) * gate
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, RGLRUState(h=h_final, conv=new_conv)

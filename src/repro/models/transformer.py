@@ -1,0 +1,328 @@
+"""Block composition and the scanned decoder stack.
+
+A *block* is one residual unit: pre-norm attention (full/sliding/local or
+MLA) + pre-norm MLP/MoE, or a recurrent unit (mLSTM / sLSTM / RG-LRU).
+``block_pattern`` from the config is cycled over ``num_layers``; the stack
+is executed as ``jax.lax.scan`` over pattern *groups* (all params stacked
+[G, ...]) so compile time is O(pattern) not O(layers) — essential for the
+94-layer MoE on a 512-device dry-run.  A remainder of ``num_layers mod
+pattern`` trailing layers runs unscanned.
+
+Modes (static):
+  train   — no cache; attention is causal within the chunk.
+  prefill — bulk-writes an empty cache, returns it (inference prefill).
+  decode  — appends an S-token chunk (S=1 plain decode; S=draft-length for
+            speculative verification) to the cache and attends over it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import ssm
+from repro.models.attention import (apply_cross_attention, attention_out,
+                                    attention_qkv, dot_attention,
+                                    init_attention, init_mla, mla_attend,
+                                    mla_project)
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.moe import apply_moe, init_moe
+from repro.serving.kv_cache import (AttnCache, MLACache, init_attn_cache,
+                                    init_mla_cache, write_chunk, write_prefill)
+
+Array = jnp.ndarray
+
+ATTN_KINDS = ("attn", "sliding_attn", "local_attn")
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": init_norm(ks[0], cfg.d_model,
+                                            cfg.norm_type, dtype)}
+    if kind in ATTN_KINDS:
+        if cfg.mla is not None:
+            p["attn"] = init_mla(ks[1], cfg, dtype)
+        else:
+            p["attn"] = init_attention(ks[1], cfg, dtype)
+        if cfg.d_ff > 0:
+            if not cfg.parallel_block:
+                p["norm2"] = init_norm(ks[2], cfg.d_model, cfg.norm_type, dtype)
+            if cfg.moe is not None:
+                p["moe"] = init_moe(ks[3], cfg, dtype)
+            else:
+                p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff,
+                                    cfg.mlp_act, dtype)
+    elif kind == "mlstm":
+        p["core"] = ssm.init_mlstm(ks[1], cfg, dtype)
+    elif kind == "slstm":
+        p["core"] = ssm.init_slstm(ks[1], cfg, dtype)
+        if cfg.d_ff > 0:
+            p["norm2"] = init_norm(ks[2], cfg.d_model, cfg.norm_type, dtype)
+            p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                                dtype)
+    elif kind == "rglru":
+        p["core"] = ssm.init_rglru(ks[1], cfg, dtype)
+        if cfg.d_ff > 0:
+            p["norm2"] = init_norm(ks[2], cfg.d_model, cfg.norm_type, dtype)
+            p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                                dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int,
+                     cache_len: int, dtype):
+    """Zero cache/state for one block.  cache_len applies to attention kinds;
+    sliding/local kinds allocate min(cache_len, window) ring buffers."""
+    if kind in ATTN_KINDS:
+        ring = _is_ring(kind, cfg)
+        length = min(cache_len, cfg.window) if ring else cache_len
+        if cfg.mla is not None:
+            return init_mla_cache(batch, length, cfg.mla.kv_lora_rank,
+                                  cfg.mla.qk_rope_head_dim, dtype)
+        return init_attn_cache(batch, length, cfg.num_kv_heads,
+                               cfg.resolved_head_dim, dtype)
+    if kind == "mlstm":
+        return ssm.mlstm_zero_state(cfg, batch, dtype)
+    if kind == "slstm":
+        return ssm.slstm_zero_state(cfg, batch, dtype)
+    if kind == "rglru":
+        return ssm.rglru_zero_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _is_ring(kind: str, cfg: ModelConfig) -> bool:
+    return kind in ("sliding_attn", "local_attn") and cfg.window > 0
+
+
+def _window_for(kind: str, cfg: ModelConfig) -> int:
+    if kind in ("sliding_attn", "local_attn") and cfg.window > 0:
+        return cfg.window
+    return 0
+
+
+def _attend(params, kind, cfg: ModelConfig, x_norm, positions, cache, mode,
+            chunk_valid, causal=True):
+    """Attention sublayer in all modes; returns (ctx_out, new_cache)."""
+    window = _window_for(kind, cfg)
+    ring = _is_ring(kind, cfg)
+    b, s, _ = x_norm.shape
+
+    if cfg.mla is not None:
+        chunk = mla_project(params["attn"], x_norm, cfg, positions)
+        if mode == "train":
+            kv_pos = positions
+            valid = chunk_valid if chunk_valid is not None \
+                else jnp.ones((b, s), bool)
+            # train: attend over the chunk's own latents
+            out = mla_attend(params["attn"], chunk, chunk.c_kv, chunk.k_pe,
+                             cfg, positions, kv_pos, valid)  # always causal
+            return out, None
+        if mode == "prefill":
+            lengths = chunk_valid.sum(-1).astype(jnp.int32) if chunk_valid \
+                is not None else jnp.full((b,), s, jnp.int32)
+            cache = write_prefill(cache, (chunk.c_kv, chunk.k_pe), lengths,
+                                  ring=ring)
+        else:
+            cache = write_chunk(cache, (chunk.c_kv, chunk.k_pe), chunk_valid,
+                                ring=ring)
+        valid = cache.pos_arr >= 0
+        out = mla_attend(params["attn"], chunk, cache.ckv, cache.kpe, cfg,
+                         positions, cache.pos_arr, valid)
+        return out, cache
+
+    q, k, v = attention_qkv(params["attn"], x_norm, cfg, positions)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    if mode == "train":
+        valid = chunk_valid if chunk_valid is not None \
+            else jnp.ones((b, s), bool)
+        ctx = dot_attention(q, k, v, positions, positions, valid,
+                            window=window, softcap=cfg.logit_softcap,
+                            causal=causal)
+        return attention_out(params["attn"], ctx), None
+    if mode == "prefill":
+        lengths = chunk_valid.sum(-1).astype(jnp.int32) if chunk_valid \
+            is not None else jnp.full((b,), s, jnp.int32)
+        cache = write_prefill(cache, (k, v), lengths, ring=ring)
+    else:
+        cache = write_chunk(cache, (k, v), chunk_valid, ring=ring)
+    valid = cache.pos_arr >= 0
+    ctx = dot_attention(q, cache.k, cache.v, positions, cache.pos_arr,
+                        valid, window=window, softcap=cfg.logit_softcap)
+    return attention_out(params["attn"], ctx), cache
+
+
+def apply_block(params, kind: str, cfg: ModelConfig, x: Array,
+                positions: Array, cache, mode: str,
+                chunk_valid: Optional[Array] = None, causal: bool = True,
+                xattn_params=None, enc_out=None, cross_kv=None):
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(params["norm1"], x, cfg.norm_type)
+
+    if kind in ATTN_KINDS:
+        attn_out, cache = _attend(params, kind, cfg, h, positions, cache,
+                                  mode, chunk_valid, causal=causal)
+        if cfg.parallel_block and cfg.d_ff > 0:
+            mlp_out = apply_mlp(params["mlp"], h, cfg.mlp_act) \
+                if "mlp" in params else 0.0
+            x = x + attn_out + mlp_out
+        else:
+            x = x + attn_out
+            if xattn_params is not None and (enc_out is not None
+                                             or cross_kv is not None):
+                from repro.models.attention import encode_cross_kv
+                hx = apply_norm(xattn_params["norm_x"], x, cfg.norm_type)
+                if cross_kv is not None:
+                    # §Perf it.3: serving path — cross K/V precomputed once
+                    # at prefill instead of re-projected every decode step
+                    ek, ev = cross_kv
+                else:
+                    ek, ev = encode_cross_kv(xattn_params["xattn"], enc_out)
+                x = x + apply_cross_attention(xattn_params["xattn"], hx,
+                                              ek, ev, cfg)
+            if cfg.d_ff > 0:
+                h2 = apply_norm(params["norm2"], x, cfg.norm_type)
+                if cfg.moe is not None:
+                    y, aux = apply_moe(params["moe"], h2, cfg)
+                else:
+                    y = apply_mlp(params["mlp"], h2, cfg.mlp_act)
+                x = x + y
+        x = constrain(x, "batch", "seq", "embed")
+        return x, cache, aux
+
+    # recurrent kinds — train mode starts from (and discards) the zero state
+    discard_state = cache is None
+    if discard_state:
+        cache = init_block_cache(kind, cfg, x.shape[0], 0, x.dtype)
+    if kind == "mlstm":
+        y, cache = ssm.apply_mlstm(params["core"], h, cache, cfg)
+        x = x + y
+    elif kind == "slstm":
+        y, cache = ssm.apply_slstm(params["core"], h, cache, cfg)
+        x = x + y
+    elif kind == "rglru":
+        y, cache = ssm.apply_rglru(params["core"], h, cache, cfg)
+        x = x + y
+    if cfg.d_ff > 0 and "mlp" in params:
+        h2 = apply_norm(params["norm2"], x, cfg.norm_type)
+        x = x + apply_mlp(params["mlp"], h2, cfg.mlp_act)
+    x = constrain(x, "batch", "seq", "embed")
+    return x, (None if discard_state else cache), aux
+
+
+# ---------------------------------------------------------------------------
+# Stack: scan over pattern groups
+# ---------------------------------------------------------------------------
+
+def stack_layout(cfg: ModelConfig):
+    pattern = cfg.block_pattern
+    plen = len(pattern)
+    groups = cfg.num_layers // plen
+    rest = tuple(pattern[i] for i in range(cfg.num_layers - groups * plen))
+    return pattern, groups, rest
+
+
+def init_stack(key, cfg: ModelConfig, dtype):
+    pattern, groups, rest = stack_layout(cfg)
+    keys = jax.random.split(key, len(pattern) + len(rest))
+    params = {"scan": {}, "rest": {}}
+    for i, kind in enumerate(pattern):
+        gkeys = jax.random.split(keys[i], groups)
+        params["scan"][f"slot{i}"] = jax.vmap(
+            lambda k, kind=kind: init_block(k, kind, cfg, dtype))(gkeys)
+    for j, kind in enumerate(rest):
+        params["rest"][f"layer{j}"] = init_block(keys[len(pattern) + j],
+                                                 kind, cfg, dtype)
+    return params
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    pattern, groups, rest = stack_layout(cfg)
+    cache = {"scan": {}, "rest": {}}
+    for i, kind in enumerate(pattern):
+        one = init_block_cache(kind, cfg, batch, cache_len, dtype)
+        cache["scan"][f"slot{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (groups,) + a.shape), one)
+    for j, kind in enumerate(rest):
+        cache["rest"][f"layer{j}"] = init_block_cache(kind, cfg, batch,
+                                                      cache_len, dtype)
+    return cache
+
+
+def apply_stack(params, cfg: ModelConfig, x: Array, positions: Array,
+                cache, mode: str, chunk_valid: Optional[Array] = None,
+                remat: bool = False, causal: bool = True, enc_out=None,
+                cross_params=None, cross_kv=None):
+    """Run the whole stack.  cache may be None (train).  Returns
+    (x, new_cache, total_aux)."""
+    pattern, groups, rest = stack_layout(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def group_body(carry, xs):
+        x, aux = carry
+        slot_params, slot_caches, slot_cross, slot_ckv = xs
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            c_in = slot_caches[f"slot{i}"] if slot_caches is not None else None
+            xp = slot_cross[f"slot{i}"] if slot_cross is not None else None
+            ckv = slot_ckv[f"slot{i}"] if slot_ckv is not None else None
+            x, c_out, a = apply_block(slot_params[f"slot{i}"], kind, cfg, x,
+                                      positions, c_in, mode, chunk_valid,
+                                      causal=causal, xattn_params=xp,
+                                      enc_out=enc_out, cross_kv=ckv)
+            new_caches[f"slot{i}"] = c_out
+            aux = aux + a
+        return (x, aux), (new_caches if slot_caches is not None else 0)
+
+    body = jax.checkpoint(group_body) if remat else group_body
+
+    if groups > 0:
+        scan_caches = cache["scan"] if cache is not None else None
+        scan_cross = cross_params["scan"] if cross_params is not None else None
+        scan_ckv = cross_kv["scan"] if cross_kv is not None else None
+        if cfg.unroll_scan:
+            # dry-run cost calibration path: python loop instead of scan
+            carry = (x, aux_total)
+            ys = []
+            for g in range(groups):
+                xs_g = jax.tree.map(lambda a: a[g],
+                                    (params["scan"], scan_caches, scan_cross,
+                                     scan_ckv))
+                carry, y = body(carry, xs_g)
+                ys.append(y)
+            (x, aux_total) = carry
+            new_scan = jax.tree.map(lambda *a: jnp.stack(a), *ys) \
+                if (ys and scan_caches is not None) else {}
+        else:
+            (x, aux_total), new_scan = jax.lax.scan(
+                body, (x, aux_total), (params["scan"], scan_caches,
+                                       scan_cross, scan_ckv))
+    else:
+        new_scan = {}
+
+    new_rest = {}
+    for j, kind in enumerate(rest):
+        c_in = cache["rest"][f"layer{j}"] if cache is not None else None
+        xp = cross_params["rest"][f"layer{j}"] if cross_params is not None \
+            else None
+        ckv = cross_kv["rest"][f"layer{j}"] if cross_kv is not None else None
+        x, c_out, a = apply_block(params["rest"][f"layer{j}"], kind, cfg, x,
+                                  positions, c_in, mode, chunk_valid,
+                                  causal=causal, xattn_params=xp,
+                                  enc_out=enc_out, cross_kv=ckv)
+        new_rest[f"layer{j}"] = c_out
+        aux_total = aux_total + a
+
+    new_cache = None if cache is None else {"scan": new_scan,
+                                            "rest": new_rest}
+    return x, new_cache, aux_total

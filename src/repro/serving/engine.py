@@ -1,0 +1,272 @@
+"""The GoodSpeed serving engine: N draft servers + 1 verification server,
+with REAL transformer models end-to-end (Algorithm 1 over actual logits).
+
+Round structure (paper Fig. 1):
+  (1) each draft server autoregressively samples S_i(t) tokens from its
+      draft model (KV-cached decode steps);
+  (2-3) drafts are batched into one ragged [N, S_max] verify batch;
+  (4) the target model scores the chunk [pending_i, d_1..d_S] in ONE
+      decode-chunk forward (positions len_i..len_i+S), and the verifier
+      runs lossless rejection sampling (core.speculative.verify);
+  (5) estimators update (Eqs. 3-4) and GOODSPEED-SCHED allocates S(t+1);
+  (6) accepted tokens commit; caches roll back past rejected drafts.
+
+Cache-consistency invariant: a model's cache always contains the committed
+sequence EXCEPT the final committed token, which is the next chunk's first
+input ("pending").  Rollback strategies:
+  * attention/MLA caches — slot invalidation (kv_cache.rollback), O(1);
+  * recurrent states (SSM/hybrid) — checkpoint-and-recompute: the engine
+    snapshots the state before the chunk and, after verification, re-runs
+    the accepted prefix only.  ``Rollback=recompute`` is correct for every
+    architecture; slot rollback is the fast path for pure-attention stacks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.estimator import EstimatorState, GoodputEstimator
+from repro.core.latency import LatencyModel
+from repro.core.scheduler import fixed_s, random_s, solve_threshold
+from repro.core.speculative import verify
+from repro.core.utility import UtilitySpec
+from repro.models import Model
+from repro.serving.kv_cache import AttnCache, MLACache, rollback
+
+Array = jnp.ndarray
+
+
+def _is_rollbackable(cfg: ModelConfig) -> bool:
+    """Slot rollback works for full-attention stacks (incl. MLA).  Ring
+    buffers overwrite old slots during the chunk and recurrent states are
+    not invertible — those use checkpoint-and-recompute."""
+    return set(cfg.layer_kinds) <= {"attn"}
+
+
+def _cache_rollback(cache, keep_pos: Array):
+    """Slot-invalidate every attention cache in the stack cache pytree."""
+    def fix(c):
+        if isinstance(c, (AttnCache, MLACache)):
+            return rollback(c, keep_pos)
+        return c
+    return jax.tree.map(fix, cache,
+                        is_leaf=lambda c: isinstance(c, (AttnCache, MLACache)))
+
+
+class EngineState(NamedTuple):
+    # sequences: committed tokens per server (host-side ragged bookkeeping)
+    target_cache: object
+    draft_cache: object
+    pending: Array        # i32[N] last committed token (next chunk input)
+    length: Array         # i32[N] committed length EXCLUDING pending
+    est: EstimatorState
+    S: Array              # i32[N] current allocation
+    key: Array
+
+
+class RoundStats(NamedTuple):
+    S: np.ndarray
+    accepted: np.ndarray
+    realized: np.ndarray
+    alpha_hat: np.ndarray
+    goodput_est: np.ndarray
+    utility: float
+    wall: np.ndarray       # [total, receive, verify, send]
+    emitted: np.ndarray    # [N, S_max+1] tokens, -1 padded
+
+
+@dataclasses.dataclass(frozen=True)
+class GoodSpeedEngine:
+    draft_model: Model
+    target_model: Model
+    n_servers: int
+    C: int
+    s_max: int                     # per-server draft cap (latency bound)
+    cache_len: int = 512
+    policy: str = "goodspeed"      # goodspeed | fixed | random
+    estimator: GoodputEstimator = GoodputEstimator()
+    utility: UtilitySpec = UtilitySpec(alpha=1.0)
+    latency: LatencyModel = LatencyModel()
+    draft_temps: tuple = ()        # per-server draft temperature (heterogeneity)
+
+    # ------------------------------------------------------------------
+    def init(self, key: Array, prompts: list[np.ndarray],
+             draft_params, target_params) -> EngineState:
+        """Prefill both models on the per-server prompts."""
+        n = self.n_servers
+        assert len(prompts) == n
+        maxlen = max(len(p) for p in prompts)
+        toks = np.zeros((n, maxlen), np.int32)
+        valid = np.zeros((n, maxlen), bool)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
+            valid[i, :len(p)] = True
+        toks_j = jnp.asarray(toks)
+        valid_j = jnp.asarray(valid)
+        lengths = jnp.asarray([len(p) for p in prompts], jnp.int32)
+
+        # Prefill caches with all but the LAST prompt token of each row:
+        # feeding token t writes slot t; "pending" = last prompt token.
+        pend_idx = jnp.maximum(lengths - 1, 0)
+        feed_valid = valid_j & (jnp.arange(maxlen)[None, :] < pend_idx[:, None])
+        tcache = self.target_model.init_cache(n, self.cache_len)
+        dcache = self.draft_model.init_cache(n, self.cache_len)
+        t_out = self.target_model.forward(target_params, toks_j,
+                                          mode="prefill", cache=tcache,
+                                          chunk_valid=feed_valid)
+        d_out = self.draft_model.forward(draft_params, toks_j,
+                                         mode="prefill", cache=dcache,
+                                         chunk_valid=feed_valid)
+        pending = jnp.take_along_axis(toks_j, pend_idx[:, None], axis=1)[:, 0]
+        return EngineState(
+            target_cache=t_out.cache, draft_cache=d_out.cache,
+            pending=pending, length=pend_idx,
+            est=self.estimator.init(n),
+            S=fixed_s(n, self.C), key=key)
+
+    # ------------------------------------------------------------------
+    def _draft(self, params, state: EngineState, key: Array):
+        """Step (1): each server decodes s_max tokens (rows with S_i < s_max
+        mask the tail).  Returns draft tokens, their q logits, updated cache."""
+        n, s_cap = self.n_servers, self.s_max
+        temps = jnp.asarray(self.draft_temps or (1.0,) * n, jnp.float32)
+
+        def dec(carry, t):
+            cache, tok, pos, key = carry
+            key, k_s = jax.random.split(key)
+            out = self.draft_model.forward(
+                params, tok[:, None], mode="decode", cache=cache,
+                positions=pos[:, None])
+            logits = out.logits[:, 0, :]  # [N, Vp]
+            logits = self._mask_vocab(logits, self.draft_model.cfg)
+            # q := the ACTUAL sampling distribution (incl. temperature) —
+            # rejection sampling is only lossless w.r.t. the true q.
+            logits = logits / temps[:, None]
+            nxt = jax.random.categorical(k_s, logits, axis=-1)
+            return (out.cache, nxt.astype(jnp.int32), pos + 1, key), \
+                (nxt.astype(jnp.int32), logits)
+
+        (cache, _, _, _), (toks, qlogits) = jax.lax.scan(
+            dec, (state.draft_cache, state.pending, state.length, key),
+            jnp.arange(s_cap))
+        # scan stacks time-first: [S, N] -> [N, S]
+        return toks.swapaxes(0, 1), qlogits.swapaxes(0, 1), cache
+
+    @staticmethod
+    def _mask_vocab(logits: Array, cfg: ModelConfig) -> Array:
+        if cfg.padded_vocab > cfg.vocab_size:
+            pad = logits.shape[-1] - cfg.vocab_size
+            mask = jnp.concatenate([jnp.zeros((cfg.vocab_size,)),
+                                    jnp.full((pad,), -1e30)])
+            logits = logits + mask
+        return logits
+
+    # ------------------------------------------------------------------
+    def _verify_chunk(self, params, state: EngineState, draft_toks: Array):
+        """Step (4a): target scores [pending, d_1..d_{S-1}, d_S] in one
+        decode-chunk; output j is the distribution of chunk position j+1."""
+        n, s_cap = self.n_servers, self.s_max
+        chunk = jnp.concatenate([state.pending[:, None], draft_toks], axis=1)
+        in_draft = jnp.arange(s_cap)[None, :] < state.S[:, None]
+        chunk_valid = jnp.concatenate(
+            [jnp.ones((n, 1), bool), in_draft], axis=1)
+        positions = state.length[:, None] + jnp.cumsum(
+            chunk_valid.astype(jnp.int32), axis=1) - 1
+        out = self.target_model.forward(
+            params, chunk, mode="decode", cache=state.target_cache,
+            positions=positions, chunk_valid=chunk_valid)
+        p_logits = self._mask_vocab(out.logits, self.target_model.cfg)
+        return p_logits, out.cache, in_draft
+
+    # ------------------------------------------------------------------
+    def run_round(self, state: EngineState, draft_params, target_params
+                  ) -> tuple[EngineState, RoundStats]:
+        key, k_draft, k_verify, k_sched, k_jit = jax.random.split(state.key, 5)
+        cfg_t = self.target_model.cfg
+
+        draft_toks, q_logits, draft_cache = self._draft(
+            draft_params, state, k_draft)
+        p_logits, target_cache, in_draft = self._verify_chunk(
+            target_params, state, draft_toks)
+
+        res = verify(k_verify, draft_toks, q_logits, p_logits, state.S)
+        m = res.accepted                               # accepted drafts
+        realized = res.num_emitted.astype(jnp.float32)
+
+        # ---- commit / rollback -------------------------------------------
+        new_length = state.length + m + 1              # commits m+1 tokens
+        keep_pos = new_length                          # cache keeps < keep (pending excl.)
+        if _is_rollbackable(cfg_t):
+            target_cache = _cache_rollback(target_cache, keep_pos)
+        else:
+            target_cache = self._recompute_cache(
+                self.target_model, target_params, state.target_cache,
+                state.pending, draft_toks, m, state.length)
+        if _is_rollbackable(self.draft_model.cfg):
+            draft_cache = _cache_rollback(draft_cache, keep_pos)
+        else:
+            draft_cache = self._recompute_cache(
+                self.draft_model, draft_params, state.draft_cache,
+                state.pending, draft_toks, m, state.length)
+
+        # ---- estimator + scheduler (steps 5-6) ----------------------------
+        est = self.estimator.update(state.est, res.accept_ratio_sum,
+                                    state.S, realized)
+        if self.policy == "goodspeed":
+            w = self.utility.grad(est.goodput)
+            s_next = solve_threshold(
+                est.alpha_hat, w, self.C,
+                s_max=jnp.full((self.n_servers,), self.s_max, jnp.int32)).S
+        elif self.policy == "fixed":
+            s_next = jnp.minimum(fixed_s(self.n_servers, self.C), self.s_max)
+        else:
+            s_next = jnp.minimum(
+                random_s(k_sched, self.n_servers, self.C), self.s_max)
+
+        jitter = jax.random.uniform(k_jit, (self.n_servers,),
+                                    minval=-1.0, maxval=1.0)
+        total, (rt, vt, st) = self.latency.round_time(
+            state.S, res.num_emitted, cfg_t.vocab_size, jitter)
+
+        new_state = EngineState(
+            target_cache=target_cache, draft_cache=draft_cache,
+            pending=res.extra_token, length=new_length, est=est, S=s_next,
+            key=key)
+        stats = RoundStats(
+            S=np.asarray(state.S), accepted=np.asarray(m),
+            realized=np.asarray(realized), alpha_hat=np.asarray(est.alpha_hat),
+            goodput_est=np.asarray(est.goodput),
+            utility=float(self.utility.value(est.goodput)),
+            wall=np.asarray(jnp.stack([total, rt, vt, st])),
+            emitted=np.asarray(res.emitted))
+        return new_state, stats
+
+    # ------------------------------------------------------------------
+    def _recompute_cache(self, model: Model, params, checkpoint_cache,
+                         pending: Array, draft_toks: Array, m: Array,
+                         length: Array):
+        """Recompute strategy: advance the PRE-CHUNK cache by the accepted
+        prefix [pending, d_1..d_m] only (masked chunk)."""
+        n, s_cap = draft_toks.shape
+        chunk = jnp.concatenate([pending[:, None], draft_toks], axis=1)
+        valid = jnp.arange(s_cap + 1)[None, :] <= m[:, None]
+        positions = length[:, None] + jnp.arange(s_cap + 1)[None, :]
+        out = model.forward(params, chunk, mode="decode",
+                            cache=checkpoint_cache, positions=positions,
+                            chunk_valid=valid)
+        return out.cache
+
+    # ------------------------------------------------------------------
+    def serve(self, key: Array, prompts: list[np.ndarray], draft_params,
+              target_params, rounds: int) -> list[RoundStats]:
+        state = self.init(key, prompts, draft_params, target_params)
+        history = []
+        for _ in range(rounds):
+            state, stats = self.run_round(state, draft_params, target_params)
+            history.append(stats)
+        return history

@@ -1,0 +1,157 @@
+"""KV caches: full (static-length), sliding-window (ring buffer), MLA latent.
+
+Layout [B, L, KV, hd] with the cache-length axis L second so it can be
+sharded over the ``model`` mesh axis for decode (sequence-sharded
+flash-decode; see DESIGN §5).  Every cache carries an explicit per-slot
+absolute-position array (``pos_arr``, -1 = empty) so attention masks are
+layout-independent — the same masking code covers left-aligned full caches
+and wrapped ring buffers.
+
+Chunk writes use masked broadcast selects rather than scatters: elementwise
+on the sharded L axis, so GSPMD never needs to reshuffle the cache to write
+one token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class AttnCache(NamedTuple):
+    k: Array         # [B, L, KV, hd]
+    v: Array         # [B, L, KV, hd]
+    pos_arr: Array   # i32[B, L] absolute position stored in each slot, -1 empty
+    next_pos: Array  # i32[B] next absolute position to write
+
+
+class MLACache(NamedTuple):
+    ckv: Array       # [B, L, r]     latent
+    kpe: Array       # [B, L, rope]  decoupled rope key
+    pos_arr: Array
+    next_pos: Array
+
+
+def init_attn_cache(batch: int, length: int, kv_heads: int, head_dim: int,
+                    dtype) -> AttnCache:
+    return AttnCache(
+        k=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
+        pos_arr=jnp.full((batch, length), -1, jnp.int32),
+        next_pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def init_mla_cache(batch: int, length: int, rank: int, rope_dim: int,
+                   dtype) -> MLACache:
+    return MLACache(
+        ckv=jnp.zeros((batch, length, rank), dtype),
+        kpe=jnp.zeros((batch, length, rope_dim), dtype),
+        pos_arr=jnp.full((batch, length), -1, jnp.int32),
+        next_pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _write_one(values, pos_arr, next_pos, new_slices, ring):
+    """Write one token (time index t of the chunk) into each value array.
+
+    values: list of [B, L, ...]; new_slices: list of [B, ...] (no L axis).
+    """
+    l = pos_arr.shape[1]
+    slot = next_pos % l if ring else jnp.minimum(next_pos, l - 1)
+    hit = jnp.arange(l)[None, :] == slot[:, None]            # [B, L]
+    out = []
+    for val, new in zip(values, new_slices):
+        mask = hit.reshape(hit.shape + (1,) * (val.ndim - 2))
+        out.append(jnp.where(mask, new[:, None].astype(val.dtype), val))
+    pos_arr = jnp.where(hit, next_pos[:, None], pos_arr)
+    return out, pos_arr, next_pos + 1
+
+
+def write_chunk(cache, new_values: tuple, chunk_valid: Array | None = None,
+                ring: bool = False):
+    """Append an S-token chunk.  new_values: tuple of [B, S, ...] arrays
+    matching the cache's value fields.  chunk_valid: bool[B, S] marks real
+    tokens (ragged verify batches); invalid steps don't advance the cache.
+
+    Implemented as a fori over S masked writes — S is small on the
+    decode/verify path (1..C tokens).  Prefill uses ``write_prefill``.
+    """
+    is_mla = isinstance(cache, MLACache)
+    vals = [cache.ckv, cache.kpe] if is_mla else [cache.k, cache.v]
+    s = new_values[0].shape[1]
+
+    def body(t, carry):
+        vals, pos_arr, next_pos = carry
+        slices = [nv[:, t] for nv in new_values]
+        new_vals, new_pos_arr, new_next = _write_one(
+            vals, pos_arr, next_pos, slices, ring)
+        if chunk_valid is not None:
+            ok = chunk_valid[:, t]
+            new_vals = [jnp.where(ok.reshape((-1,) + (1,) * (v.ndim - 1)), nv, v)
+                        for nv, v in zip(new_vals, vals)]
+            new_pos_arr = jnp.where(ok[:, None], new_pos_arr, pos_arr)
+            new_next = jnp.where(ok, new_next, next_pos)
+        return new_vals, new_pos_arr, new_next
+
+    vals, pos_arr, next_pos = jax.lax.fori_loop(
+        0, s, body, (vals, cache.pos_arr, cache.next_pos))
+    if is_mla:
+        return cache._replace(ckv=vals[0], kpe=vals[1], pos_arr=pos_arr,
+                              next_pos=next_pos)
+    return cache._replace(k=vals[0], v=vals[1], pos_arr=pos_arr,
+                          next_pos=next_pos)
+
+
+def write_prefill(cache, new_values: tuple, lengths: Array,
+                  ring: bool = False):
+    """Bulk-fill an empty cache from a left-aligned prefill chunk.
+
+    new_values: tuple of [B, S, ...] with S <= L; lengths: i32[B] valid
+    prefix length per row.  For ring caches S may exceed the window — only
+    the last ``window`` positions land (computed with a shifted write).
+    """
+    is_mla = isinstance(cache, MLACache)
+    vals = [cache.ckv, cache.kpe] if is_mla else [cache.k, cache.v]
+    b, l = cache.pos_arr.shape
+    s = new_values[0].shape[1]
+    idx = jnp.arange(l)[None, :]                              # [1, L]
+    if not ring:
+        assert s <= l, f"prefill chunk {s} exceeds cache {l}"
+        out_vals = []
+        for val, new in zip(vals, new_values):
+            pad = jnp.zeros(val.shape[:1] + (l - s,) + val.shape[2:], val.dtype)
+            full = jnp.concatenate([new.astype(val.dtype), pad], axis=1)
+            out_vals.append(full)
+        pos_arr = jnp.where(idx < lengths[:, None], idx, -1)
+    else:
+        # slot of absolute position p is p % L; gather source index per slot
+        start = jnp.maximum(lengths - l, 0)                   # first kept pos
+        # slot j holds absolute position p with p ≡ j (mod L), start<=p<len
+        candidate = start[:, None] + (idx - start[:, None]) % l
+        valid = candidate < lengths[:, None]
+        src = jnp.clip(candidate, 0, s - 1)
+        out_vals = []
+        for val, new in zip(vals, new_values):
+            sidx = src.reshape(b, l, *(1,) * (val.ndim - 2)).astype(jnp.int32)
+            gathered = jnp.take_along_axis(new.astype(val.dtype), sidx, axis=1)
+            out_vals.append(jnp.where(
+                valid.reshape(b, l, *(1,) * (val.ndim - 2)), gathered, val))
+        pos_arr = jnp.where(valid, candidate, -1)
+    next_pos = lengths.astype(jnp.int32)
+    if is_mla:
+        return cache._replace(ckv=out_vals[0], kpe=out_vals[1],
+                              pos_arr=pos_arr, next_pos=next_pos)
+    return cache._replace(k=out_vals[0], v=out_vals[1], pos_arr=pos_arr,
+                          next_pos=next_pos)
+
+
+def rollback(cache, keep_pos: Array):
+    """Speculative-decoding rollback: invalidate every slot holding an
+    absolute position >= keep_pos[b] (rejected draft tokens)."""
+    drop = cache.pos_arr >= keep_pos[:, None]
+    return cache._replace(pos_arr=jnp.where(drop, -1, cache.pos_arr),
+                          next_pos=jnp.minimum(cache.next_pos, keep_pos))

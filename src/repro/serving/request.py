@@ -1,0 +1,104 @@
+"""Request lifecycle management for the verification server (paper §III-A).
+
+The verification server "manages a FIFO queue to process requests in the
+order of arrival".  Each draft server carries one ACTIVE request at a time
+(its end-user session); when a request completes (max_new_tokens reached or
+EOS), the next queued request for that server is admitted immediately —
+continuous batching at the server granularity.  The engine reads
+``remaining`` caps from here and feeds them to GOODSPEED-SCHED as s_max
+(completion-aware allocation, EXPERIMENTS §Repro).
+
+Host-side bookkeeping by design (request arrival is I/O, not jit-able);
+everything the jit'd round loop needs is exported as dense arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray              # i32[prompt_len]
+    max_new_tokens: int
+    eos_token: int = -1             # -1 = no EOS check
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    # lifecycle
+    generated: list = dataclasses.field(default_factory=list)
+    arrival_round: int = 0
+    finish_round: Optional[int] = None
+
+    @property
+    def remaining(self) -> int:
+        return max(0, self.max_new_tokens - len(self.generated))
+
+    @property
+    def done(self) -> bool:
+        if self.remaining == 0:
+            return True
+        return self.eos_token >= 0 and self.eos_token in self.generated
+
+
+class RequestManager:
+    """Per-draft-server FIFO queues + active-request slots."""
+
+    def __init__(self, n_servers: int):
+        self.n = n_servers
+        self.queues: list[deque] = [deque() for _ in range(n_servers)]
+        self.active: list[Optional[Request]] = [None] * n_servers
+        self.completed: list[Request] = []
+        self.round = 0
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, server: int, request: Request) -> None:
+        request.arrival_round = self.round
+        self.queues[server].append(request)
+
+    def admit(self) -> list[int]:
+        """Fill empty slots from the FIFO queues; returns servers that got a
+        NEW request this call (their caches need re-prefilling)."""
+        fresh = []
+        for i in range(self.n):
+            if (self.active[i] is None or self.active[i].done) \
+                    and self.queues[i]:
+                if self.active[i] is not None and self.active[i].done:
+                    self.active[i].finish_round = self.round
+                    self.completed.append(self.active[i])
+                self.active[i] = self.queues[i].popleft()
+                fresh.append(i)
+        return fresh
+
+    # -- round bookkeeping ---------------------------------------------------
+    def record_emitted(self, emitted: np.ndarray) -> None:
+        """emitted: i32[N, S+1], -1 padded (engine RoundStats.emitted)."""
+        for i in range(self.n):
+            req = self.active[i]
+            if req is None:
+                continue
+            toks = [int(t) for t in emitted[i] if t >= 0]
+            room = req.remaining
+            req.generated.extend(toks[:room])
+        self.round += 1
+
+    # -- dense views for the jit'd loop --------------------------------------
+    def remaining_caps(self) -> np.ndarray:
+        """i32[N] remaining tokens per server (0 where idle) — feeds
+        GOODSPEED-SCHED's s_max."""
+        return np.asarray(
+            [r.remaining if r is not None else 0 for r in self.active],
+            np.int32)
+
+    def stats(self) -> dict:
+        lat = [r.finish_round - r.arrival_round for r in self.completed]
+        return {
+            "completed": len(self.completed),
+            "queued": sum(len(q) for q in self.queues),
+            "active": sum(r is not None and not r.done for r in self.active),
+            "mean_latency_rounds": float(np.mean(lat)) if lat else 0.0,
+        }

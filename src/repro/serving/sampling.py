@@ -1,0 +1,58 @@
+"""Sampling transforms for draft generation and correction sampling.
+
+The GoodSpeed engine samples draft tokens from q and corrections from the
+residual distribution; this module provides the standard serving transforms
+(temperature / top-k / top-p / min-p) as *logit warpers* so they compose and
+stay jit-friendly.  IMPORTANT for speculative decoding: whatever warping the
+draft server applies defines q — the verifier must see the warped logits or
+rejection sampling loses its losslessness guarantee (see
+tests/test_sampling.py::test_warped_q_losslessness).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 1.0
+    top_k: int = 0          # 0 = disabled
+    top_p: float = 1.0      # 1.0 = disabled
+    min_p: float = 0.0      # 0.0 = disabled
+
+
+def warp_logits(logits: Array, params: SamplingParams) -> Array:
+    """Apply temperature -> top-k -> top-p -> min-p.  logits: [..., V]."""
+    if params.temperature != 1.0:
+        logits = logits / max(params.temperature, 1e-6)
+    if params.top_k > 0 and params.top_k < logits.shape[-1]:
+        kth = jnp.sort(logits, axis=-1)[..., -params.top_k][..., None]
+        logits = jnp.where(logits < kth, NEG, logits)
+    if params.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # keep the smallest prefix with cumulative mass >= top_p
+        cutoff_idx = jnp.sum(cum < params.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, NEG, logits)
+    if params.min_p > 0.0:
+        probs = jax.nn.softmax(logits, axis=-1)
+        top = jnp.max(probs, axis=-1, keepdims=True)
+        logits = jnp.where(probs < params.min_p * top, NEG, logits)
+    return logits
+
+
+def sample(key: Array, logits: Array, params: SamplingParams | None = None
+           ) -> Array:
+    """Categorical sample after warping; returns i32[...]."""
+    if params is not None:
+        logits = warp_logits(logits, params)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

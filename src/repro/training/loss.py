@@ -1,0 +1,50 @@
+"""Causal-LM loss with padded-vocab masking and MoE aux-loss folding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def cross_entropy(logits: Array, labels: Array, mask: Array | None = None,
+                  real_vocab: int | None = None) -> Array:
+    """Mean next-token cross entropy.
+
+    logits: f32[B, S, Vp] (padded vocab); labels: i32[B, S]; mask: [B, S]
+    1.0 on real (non-pad) positions.  Padding vocab entries are excluded
+    from the normalizer so the loss matches the unpadded model exactly.
+    """
+    # Sharded-vocab friendly: only elementwise ops + reductions touch the
+    # vocab axis (no take_along_axis gather, no .at[].set with a dense pad
+    # constant) so GSPMD keeps the logits vocab-sharded and all-reduces the
+    # tiny [B, S] partials instead of all-gathering [B, S, V] f32 logits
+    # (~40 GB/step measured before; §Perf it.1c).
+    logits = logits.astype(jnp.float32)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    if real_vocab is not None and real_vocab < logits.shape[-1]:
+        logits = jnp.where(vocab_iota >= real_vocab, -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def lm_loss(model, params, tokens: Array, *, aux_weight: float = 1.0,
+            remat: bool = False, **fwd_kwargs):
+    """Shift-by-one LM loss over a token batch; returns (loss, metrics)."""
+    out = model.forward(params, tokens[:, :-1], mode="train", remat=remat,
+                        **fwd_kwargs)
+    logits = out.logits
+    # VLM prefix embeddings shift the text positions right; score text only
+    p = logits.shape[1] - (tokens.shape[1] - 1)
+    logits = logits[:, p:] if p > 0 else logits
+    ce = cross_entropy(logits, tokens[:, 1:],
+                       real_vocab=model.cfg.vocab_size)
+    loss = ce + aux_weight * out.aux_loss
+    return loss, {"ce": ce, "aux": out.aux_loss}

@@ -1,0 +1,84 @@
+"""AdamW in pure JAX (no optax wheel offline).
+
+Decoupled weight decay (Loshchilov & Hutter), bias-corrected moments,
+optional global-norm clipping, cosine/linear LR schedules.  Optimizer state
+is a pytree mirroring the params, so it shards with the same rules
+(FSDP-style over the data axis; see distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: object      # first moments (params-shaped pytree)
+    nu: object      # second moments
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # cosine | linear | constant
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jax.tree.map(
+            lambda a: jnp.zeros_like(a, dtype=jnp.float32), p)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
+                          nu=zeros(params))
+
+    def lr_at(self, step: Array) -> Array:
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(self.warmup_steps, 1), 1.0)
+        if self.schedule == "constant":
+            decay = 1.0
+        else:
+            frac = jnp.clip((s - self.warmup_steps)
+                            / jnp.maximum(self.total_steps
+                                          - self.warmup_steps, 1), 0.0, 1.0)
+            decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac)) \
+                if self.schedule == "cosine" else 1.0 - frac
+        return self.learning_rate * warm * decay
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm > 0:
+            leaves = jax.tree.leaves(grads)
+            gnorm = jnp.sqrt(sum(jnp.sum(
+                g.astype(jnp.float32) ** 2) for g in leaves))
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = jnp.zeros(())
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1)
+                          * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self.lr_at(step)
+
+        def upd(p, m, v):
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay \
+                * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu), gnorm

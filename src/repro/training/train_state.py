@@ -1,0 +1,51 @@
+"""Train step: value_and_grad over lm_loss + AdamW update, jit/pjit-ready."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.loss import lm_loss
+from repro.training.optimizer import AdamW, AdamWState
+
+Array = jnp.ndarray
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: AdamWState
+
+
+def make_train_step(model, optimizer: AdamW, remat: bool = True,
+                    aux_weight: float = 1.0):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch`` is a dict with "tokens" [B, S] (+ optional "prefix_embeds" /
+    "audio_embeds" for VLM / enc-dec archs).
+    """
+
+    def loss_fn(params, batch):
+        kwargs = {}
+        if "prefix_embeds" in batch:
+            kwargs["prefix_embeds"] = batch["prefix_embeds"]
+        if "audio_embeds" in batch:
+            kwargs["enc_out"] = model.encode(params, batch["audio_embeds"])
+        return lm_loss(model, params, batch["tokens"],
+                       aux_weight=aux_weight, remat=remat, **kwargs)
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, batch)
+        params, opt, gnorm = optimizer.update(grads, state.opt, state.params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       lr=optimizer.lr_at(opt.step))
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step
+
+
+def init_train_state(model, optimizer: AdamW, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=optimizer.init(params))

@@ -1,0 +1,63 @@
+"""Minimal property-based testing harness (no `hypothesis` wheel offline).
+
+Provides seeded random-case sweeps with the same spirit: a decorated test
+runs N generated cases; on failure the failing case's seed and drawn values
+are reported so the case is exactly reproducible.
+"""
+from __future__ import annotations
+
+
+import numpy as np
+
+
+class Draw:
+    """Value generator bound to one case's RNG."""
+
+    def __init__(self, rng: np.random.Generator):
+        self.rng = rng
+        self.trace: list = []
+
+    def _rec(self, name, v):
+        self.trace.append((name, v))
+        return v
+
+    def integers(self, lo, hi):
+        return self._rec("integers", int(self.rng.integers(lo, hi + 1)))
+
+    def floats(self, lo, hi):
+        return self._rec("floats", float(self.rng.uniform(lo, hi)))
+
+    def float_array(self, shape, lo, hi):
+        return self._rec("float_array", self.rng.uniform(lo, hi, size=shape))
+
+    def int_array(self, shape, lo, hi):
+        return self._rec("int_array", self.rng.integers(lo, hi + 1, size=shape))
+
+    def choice(self, options):
+        return self._rec("choice", options[int(self.rng.integers(0, len(options)))])
+
+    def bool(self):
+        return self._rec("bool", bool(self.rng.integers(0, 2)))
+
+
+def sweep(cases: int = 100, seed: int = 0):
+    """Decorator: run `fn(draw)` for `cases` seeded random cases."""
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            for case in range(cases):
+                rng = np.random.default_rng(seed * 100003 + case)
+                draw = Draw(rng)
+                try:
+                    # works for both plain functions and methods (self first)
+                    fn(*args, draw, **kwargs)
+                except Exception as e:  # noqa: BLE001 - reraise with context
+                    raise AssertionError(
+                        f"property failed at case={case} (seed={seed}): "
+                        f"drawn={draw.trace!r}\n{type(e).__name__}: {e}"
+                    ) from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -1,0 +1,67 @@
+"""TPU budget derivation + discrete-event latency model."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.budget import V5E, derive_budget, ridge_tokens
+from repro.core.latency import LatencyModel
+
+
+class TestBudget:
+    def test_ridge_point(self):
+        # bf16: 2 bytes/param -> T* = peak/bw = ~240
+        assert ridge_tokens(2) == pytest.approx(241, abs=2)
+        assert ridge_tokens(4) == pytest.approx(2 * ridge_tokens(2), abs=2)
+
+    def test_memory_cap_binds_for_big_models(self):
+        # 70B params on few chips: memory-capped below the knee
+        c_small = derive_budget(8, params=70e9, kv_bytes_per_token=5e5,
+                                max_prefix_len=4096, chips=8)
+        c_big = derive_budget(8, params=70e9, kv_bytes_per_token=5e5,
+                              max_prefix_len=4096, chips=64)
+        assert c_big >= c_small
+        assert c_small >= 8  # never below one slot per server
+
+    def test_monotone_in_chips(self):
+        cs = [derive_budget(4, 14e9, 2e5, 2048, chips=c)
+              for c in (1, 2, 4, 8)]
+        assert all(a <= b for a, b in zip(cs, cs[1:]))
+
+
+class TestLatency:
+    def setup_method(self):
+        self.lm = LatencyModel()
+        self.S = jnp.asarray([4, 2, 6, 0])
+        self.jit = jnp.zeros((4,))
+
+    def test_receive_is_max_over_servers(self):
+        t = float(self.lm.receive_time(self.S, 32000, self.jit))
+        t_each = [float(self.lm.draft_time(jnp.asarray([s]),
+                                           jnp.zeros(1))[0])
+                  + float(self.lm.uplink_payload(jnp.asarray([s]),
+                                                 32000)[0])
+                  / self.lm.uplink_bytes_s + self.lm.rtt_s
+                  for s in [4, 2, 6]]
+        assert t == pytest.approx(max(t_each), rel=1e-5)
+
+    def test_verify_time_roofline(self):
+        # tiny T: memory-bound (flat); huge T: compute-bound (linear)
+        t_small = float(self.lm.verify_time(jnp.asarray([1, 1])))
+        t_small2 = float(self.lm.verify_time(jnp.asarray([2, 2])))
+        assert t_small == pytest.approx(t_small2)  # below the knee
+        big = jnp.full((8,), 10_000)
+        t_big = float(self.lm.verify_time(big))
+        t_big2 = float(self.lm.verify_time(big * 2))
+        assert t_big2 == pytest.approx(2 * t_big, rel=0.01)
+
+    def test_topk_truncation_shrinks_payload(self):
+        full = LatencyModel(probs_topk=0)
+        topk = LatencyModel(probs_topk=64)
+        pf = float(full.uplink_payload(self.S, 151936).sum())
+        pt = float(topk.uplink_payload(self.S, 151936).sum())
+        assert pt < pf / 100  # beyond-paper: ~2000x payload cut
+
+    def test_send_tiny(self):
+        total, (r, v, s) = self.lm.round_time(self.S, self.S + 1, 32000,
+                                              self.jit)
+        assert float(s) / float(total) < 0.001

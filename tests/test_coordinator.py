@@ -1,0 +1,57 @@
+"""Coordinator round-loop details: completion caps, logits path, latency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coordinator import Coordinator
+from repro.core.estimator import GoodputEstimator, StepSchedule
+from repro.core.speculative import verify
+
+
+class TestCompletionCaps:
+    def test_goodspeed_respects_remaining(self):
+        """With max_new_tokens, the allocation never exceeds a request's
+        remaining length (Fixed-S can; the paper's wasted-verification
+        mechanism)."""
+        coord = Coordinator(n=4, C=16, policy="goodspeed", max_new_tokens=5,
+                            estimator=GoodputEstimator(
+                                eta=StepSchedule(0.3),
+                                beta=StepSchedule(0.2)))
+        traj = jnp.full((60, 4), 0.8, jnp.float32)
+        state, logs = coord.simulate_analytic(jax.random.PRNGKey(0), traj)
+        S = np.asarray(logs.S)[1:]  # first round is the uniform warm start
+        assert np.all(S <= 5), S.max()
+
+    def test_realized_capped_and_reset(self):
+        coord = Coordinator(n=2, C=8, policy="fixed", max_new_tokens=3)
+        traj = jnp.full((40, 2), 0.95, jnp.float32)
+        _, logs = coord.simulate_analytic(jax.random.PRNGKey(1), traj)
+        realized = np.asarray(logs.realized)
+        assert realized.max() <= 3.0 + 1e-6  # never beyond remaining
+
+    def test_disabled_when_zero(self):
+        coord = Coordinator(n=2, C=8, policy="goodspeed", max_new_tokens=0)
+        traj = jnp.full((20, 2), 0.9, jnp.float32)
+        _, logs = coord.simulate_analytic(jax.random.PRNGKey(2), traj)
+        assert np.asarray(logs.realized).max() > 3.0  # uncapped geometric
+
+
+class TestLogitsRound:
+    def test_run_round_logits_consistency(self):
+        """The faithful logits path: Eq.3 uses actual min(1,p/q) sums and
+        the allocation stays within budget."""
+        n, s_max, v = 3, 4, 32
+        coord = Coordinator(n=n, C=8, policy="goodspeed")
+        state = coord.init(jax.random.PRNGKey(0))
+        state = state._replace(S=jnp.asarray([3, 3, 2], jnp.int32))
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(n, s_max, v)), jnp.float32)
+        p = jnp.asarray(rng.normal(size=(n, s_max + 1, v)), jnp.float32)
+        toks = jnp.asarray(rng.integers(0, v, size=(n, s_max)), jnp.int32)
+        new_state, log, res = coord.run_round_logits(state, toks, q, p)
+        assert int(jnp.sum(new_state.S)) <= 8
+        np.testing.assert_array_equal(np.asarray(log.realized),
+                                      np.asarray(res.num_emitted))
+        # estimator consumed the true indicator sums
+        assert bool(jnp.all(new_state.est.alpha_hat > 0))
+        assert bool(jnp.all(new_state.est.alpha_hat < 1))

@@ -1,0 +1,158 @@
+"""End-to-end GoodSpeed serving-engine tests with real transformer models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data.pipeline import SyntheticDomain, make_workload
+from repro.models import Model
+from repro.serving.engine import GoodSpeedEngine
+
+
+def _tiny(arch, vocab=64, **kw):
+    base = dict(num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+                head_dim=32, d_ff=128, vocab_size=vocab)
+    base.update(kw)
+    cfg = get_reduced(arch, **base)
+    return cfg
+
+
+def _prompts(n, vocab, lo=6, hi=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return [SyntheticDomain("alpaca", vocab, i).sample_prompt(rng)
+            [: rng.integers(lo, hi)] for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    dm = Model(_tiny("olmo-1b"))
+    tm = Model(_tiny("qwen3-8b", d_model=128, num_heads=4, d_ff=256))
+    dp = dm.init(jax.random.PRNGKey(0))
+    tp = tm.init(jax.random.PRNGKey(1))
+    return dm, tm, dp, tp
+
+
+class TestEngineBasics:
+    def test_round_invariants(self, dense_pair):
+        dm, tm, dp, tp = dense_pair
+        n = 4
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=n,
+                              C=12, s_max=5, cache_len=128,
+                              draft_temps=(1.0, 1.3, 0.8, 1.6))
+        hist = eng.serve(jax.random.PRNGKey(2), _prompts(n, 64), dp, tp,
+                         rounds=6)
+        for h in hist:
+            assert h.S.sum() <= 12
+            assert np.all(h.S <= 5)
+            assert np.all(h.accepted <= h.S)
+            assert np.all(h.realized == h.accepted + 1)
+            assert np.all((h.alpha_hat > 0) & (h.alpha_hat < 1))
+            assert np.isfinite(h.utility)
+            assert h.wall[0] > 0
+            # emitted rows: m real tokens then the extra token then -1 pad
+            for i in range(n):
+                row = h.emitted[i]
+                m = h.accepted[i]
+                assert np.all(row[:m + 1] >= 0)
+                assert np.all(row[m + 1:] == -1)
+
+    def test_identical_models_accept_all(self):
+        """Losslessness smoke: draft == target => every draft accepted."""
+        cfg = _tiny("qwen3-8b")
+        m = Model(cfg)
+        p = m.init(jax.random.PRNGKey(0))
+        eng = GoodSpeedEngine(draft_model=m, target_model=m, n_servers=3,
+                              C=9, s_max=4, cache_len=96)
+        hist = eng.serve(jax.random.PRNGKey(2), _prompts(3, 64), p, p,
+                         rounds=6)
+        for h in hist:
+            np.testing.assert_array_equal(h.accepted, h.S)
+
+    def test_cache_matches_fresh_prefill(self, dense_pair):
+        """Cache-integrity: after rounds, the engine's next-step logits for
+        the committed sequence equal a from-scratch prefill's logits."""
+        dm, tm, dp, tp = dense_pair
+        n = 2
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=n,
+                              C=6, s_max=3, cache_len=96)
+        prompts = _prompts(n, 64, seed=3)
+        state = eng.init(jax.random.PRNGKey(2), prompts, dp, tp)
+        committed = [list(p) for p in prompts]
+        for _ in range(4):
+            state, stats = eng.run_round(state, dp, tp)
+            for i in range(n):
+                row = stats.emitted[i]
+                committed[i].extend(int(t) for t in row[row >= 0])
+        # engine view: decode `pending` (last committed token) one step
+        pos = state.length[:, None]
+        out_eng = tm.forward(tp, state.pending[:, None], mode="decode",
+                             cache=state.target_cache, positions=pos)
+        # fresh view: full prefill of committed tokens
+        for i in range(n):
+            toks = jnp.asarray(committed[i], jnp.int32)[None, :]
+            ref = tm.forward(tp, toks, mode="train").logits[0, -1]
+            got = out_eng.logits[i, 0]
+            err = float(jnp.max(jnp.abs(got - ref)))
+            assert err < 3e-3, f"row {i}: cache drift {err}"
+
+    def test_recompute_path_archs(self):
+        """Recurrent/hybrid/sliding targets exercise checkpoint-recompute."""
+        for arch in ("xlstm-350m", "recurrentgemma-9b", "h2o-danube-3-4b"):
+            tm = Model(_tiny(arch))
+            dm = Model(_tiny("olmo-1b"))
+            dp = dm.init(jax.random.PRNGKey(0))
+            tp = tm.init(jax.random.PRNGKey(1))
+            eng = GoodSpeedEngine(draft_model=dm, target_model=tm,
+                                  n_servers=2, C=6, s_max=3, cache_len=64)
+            hist = eng.serve(jax.random.PRNGKey(2), _prompts(2, 64), dp, tp,
+                             rounds=4)
+            assert all(np.isfinite(h.utility) for h in hist), arch
+
+    def test_recompute_cache_integrity(self):
+        """Cache-integrity under the recompute rollback (sliding window)."""
+        tm = Model(_tiny("h2o-danube-3-4b", window=16))
+        dm = Model(_tiny("olmo-1b"))
+        dp = dm.init(jax.random.PRNGKey(0))
+        tp = tm.init(jax.random.PRNGKey(1))
+        n = 2
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=n,
+                              C=6, s_max=3, cache_len=16)
+        prompts = _prompts(n, 64, seed=5)
+        state = eng.init(jax.random.PRNGKey(2), prompts, dp, tp)
+        committed = [list(p) for p in prompts]
+        for _ in range(3):
+            state, stats = eng.run_round(state, dp, tp)
+            for i in range(n):
+                row = stats.emitted[i]
+                committed[i].extend(int(t) for t in row[row >= 0])
+        out_eng = tm.forward(tp, state.pending[:, None], mode="decode",
+                             cache=state.target_cache,
+                             positions=state.length[:, None])
+        for i in range(n):
+            toks = jnp.asarray(committed[i], jnp.int32)[None, :]
+            ref = tm.forward(tp, toks, mode="train").logits[0, -1]
+            err = float(jnp.max(jnp.abs(out_eng.logits[i, 0] - ref)))
+            assert err < 3e-3, f"row {i}: recompute cache drift {err}"
+
+
+class TestEngineScheduling:
+    def test_goodspeed_shifts_budget_to_high_alpha(self):
+        """With a shared draft model but very different temperatures, the
+        cold-temperature (well-aligned) servers should end up with larger
+        allocations under the goodspeed policy."""
+        cfg = _tiny("qwen3-8b")
+        m = Model(cfg)
+        p = m.init(jax.random.PRNGKey(0))
+        n = 4
+        # temp 1.0 == target distribution (alpha ~ 1), temp 3.0 mismatched
+        eng = GoodSpeedEngine(draft_model=m, target_model=m, n_servers=n,
+                              C=16, s_max=8, cache_len=256,
+                              draft_temps=(1.0, 1.0, 3.0, 3.0),
+                              policy="goodspeed")
+        hist = eng.serve(jax.random.PRNGKey(2), _prompts(n, 64), p, p,
+                         rounds=12)
+        tail = np.mean([h.S for h in hist[-4:]], axis=0)
+        assert tail[:2].mean() > tail[2:].mean(), tail
+        ah = hist[-1].alpha_hat
+        assert ah[:2].mean() > ah[2:].mean(), ah

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles, swept over shapes and dtypes
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import flash_decode, flash_decode_ref
+from repro.kernels.spec_verify import gather_logprobs, gather_logprobs_ref
+from tests.proptest import sweep
+
+
+class TestGatherLogprobs:
+    @sweep(cases=25, seed=20)
+    def test_matches_oracle(self, draw):
+        r = draw.integers(1, 12)
+        v = draw.choice([17, 128, 1000, 2048, 4096, 5001])
+        tile = draw.choice([128, 512, 2048])
+        dtype = draw.choice([jnp.float32, jnp.bfloat16])
+        rng = np.random.default_rng(draw.integers(0, 9999))
+        logits = jnp.asarray(rng.normal(size=(r, v)) * 4, dtype)
+        toks = jnp.asarray(rng.integers(0, v, size=(r,)), jnp.int32)
+        lp, lz = gather_logprobs(logits, toks, tile=tile)
+        rlp, rlz = gather_logprobs_ref(logits, toks)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(rlp),
+                                   atol=tol, rtol=tol)
+        np.testing.assert_allclose(np.asarray(lz), np.asarray(rlz),
+                                   atol=tol, rtol=tol)
+
+    def test_batched_leading_dims(self):
+        rng = np.random.default_rng(1)
+        logits = jnp.asarray(rng.normal(size=(3, 5, 300)), jnp.float32)
+        toks = jnp.asarray(rng.integers(0, 300, size=(3, 5)), jnp.int32)
+        lp, lz = gather_logprobs(logits, toks)
+        assert lp.shape == (3, 5) and lz.shape == (3, 5)
+        rlp, _ = gather_logprobs_ref(logits.reshape(-1, 300),
+                                     toks.reshape(-1))
+        np.testing.assert_allclose(np.asarray(lp).reshape(-1),
+                                   np.asarray(rlp), atol=1e-5)
+
+    def test_extreme_logits_stable(self):
+        """Online logsumexp stays finite with +/-1e4 logits."""
+        logits = jnp.asarray([[1e4, -1e4, 0.0, 5.0] * 64], jnp.float32)
+        toks = jnp.asarray([0], jnp.int32)
+        lp, lz = gather_logprobs(logits, toks, tile=128)
+        assert np.isfinite(float(lp[0])) and np.isfinite(float(lz[0]))
+        rlp, _ = gather_logprobs_ref(logits, toks)
+        np.testing.assert_allclose(float(lp[0]), float(rlp[0]), atol=1e-4)
+
+
+class TestFlashDecode:
+    @sweep(cases=25, seed=21)
+    def test_matches_oracle(self, draw):
+        b = draw.integers(1, 3)
+        kv = draw.choice([1, 2, 4])
+        g = draw.choice([1, 2, 4])
+        h = kv * g
+        hd = draw.choice([32, 64, 128])
+        l = draw.choice([32, 64, 96, 160])
+        tile = draw.choice([16, 32, 64])
+        window = draw.choice([0, 0, 24])
+        dtype = draw.choice([jnp.float32, jnp.bfloat16])
+        rng = np.random.default_rng(draw.integers(0, 9999))
+        q = jnp.asarray(rng.normal(size=(b, h, hd)), dtype)
+        k = jnp.asarray(rng.normal(size=(b, l, kv, hd)), dtype)
+        v = jnp.asarray(rng.normal(size=(b, l, kv, hd)), dtype)
+        # realistic cache: some slots filled (ascending pos), some empty
+        fill = rng.integers(l // 2, l + 1, size=(b,))
+        kv_pos = np.full((b, l), -1, np.int32)
+        for i in range(b):
+            kv_pos[i, :fill[i]] = np.arange(fill[i])
+        kv_pos = jnp.asarray(kv_pos)
+        q_pos = jnp.asarray(fill - 1, jnp.int32)
+        out = flash_decode(q, k, v, kv_pos, q_pos, window=window, tile=tile)
+        ref = flash_decode_ref(q, k, v, kv_pos, kv_pos >= 0, q_pos,
+                               window=window)
+        tol = 2e-5 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=tol, rtol=tol)
+
+    def test_ring_buffer_positions(self):
+        """Wrapped (non-monotonic) pos_arr from a sliding ring buffer."""
+        rng = np.random.default_rng(3)
+        b, h, kv, hd, l = 1, 4, 2, 32, 8
+        q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, l, kv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, l, kv, hd)), jnp.float32)
+        # positions 8..15 written into slots (8..15) % 8 -> slot i has pos 8+i
+        kv_pos = jnp.asarray([[8, 9, 10, 11, 12, 13, 14, 15]], jnp.int32)
+        kv_pos = jnp.roll(kv_pos, 3, axis=1)  # arbitrary rotation
+        q_pos = jnp.asarray([15], jnp.int32)
+        out = flash_decode(q, k, v, kv_pos, q_pos, window=6, tile=4)
+        ref = flash_decode_ref(q, k, v, kv_pos, kv_pos >= 0, q_pos, window=6)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+    def test_single_valid_slot(self):
+        b, h, kv, hd, l = 1, 2, 1, 16, 16
+        rng = np.random.default_rng(4)
+        q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, l, kv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, l, kv, hd)), jnp.float32)
+        kv_pos = jnp.full((b, l), -1, jnp.int32).at[0, 0].set(0)
+        q_pos = jnp.asarray([0], jnp.int32)
+        out = flash_decode(q, k, v, kv_pos, q_pos, tile=8)
+        # attention over one slot = that slot's value
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(v[0, 0, 0])[None, None, :]
+                                   .repeat(h, 1), atol=1e-5)
+
+
+class TestFlashPrefill:
+    @sweep(cases=20, seed=22)
+    def test_matches_oracle(self, draw):
+        from repro.kernels.flash_prefill import (flash_prefill,
+                                                 flash_prefill_ref)
+        b = draw.integers(1, 3)
+        kv = draw.choice([1, 2, 4])
+        g = draw.choice([1, 2, 4])
+        h = kv * g
+        hd = draw.choice([16, 32, 64])
+        tile = draw.choice([8, 16, 32])
+        s = tile * draw.integers(1, 4)
+        window = draw.choice([0, 0, 10])
+        dtype = draw.choice([jnp.float32, jnp.bfloat16])
+        rng = np.random.default_rng(draw.integers(0, 9999))
+        q = jnp.asarray(rng.normal(size=(b, s, h, hd)), dtype)
+        k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), dtype)
+        v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), dtype)
+        out = flash_prefill(q, k, v, window=window, q_tile=tile,
+                            kv_tile=tile)
+        ref = flash_prefill_ref(q, k, v, window=window)
+        tol = 2e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=tol, rtol=tol)
+
+    def test_first_position_attends_self_only(self):
+        from repro.kernels.flash_prefill import flash_prefill
+        rng = np.random.default_rng(9)
+        q = jnp.asarray(rng.normal(size=(1, 16, 2, 8)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 16, 2, 8)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 16, 2, 8)), jnp.float32)
+        out = flash_prefill(q, k, v, q_tile=8, kv_tile=8)
+        np.testing.assert_allclose(np.asarray(out[0, 0]),
+                                   np.asarray(v[0, 0]), atol=1e-5)

@@ -1,0 +1,200 @@
+"""Model-substrate invariants: decode==train consistency, ring caches,
+rollback, blockwise attention oracle, MoE dispatch vs dense reference."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import Model
+from repro.models.attention import dot_attention
+from repro.models.moe import apply_moe, apply_moe_reference, init_moe
+from repro.serving.kv_cache import (init_attn_cache, rollback, write_chunk,
+                                    write_prefill)
+from tests.proptest import sweep
+
+CONSISTENCY_ARCHS = ["olmo-1b", "qwen3-8b", "h2o-danube-3-4b", "xlstm-350m",
+                     "recurrentgemma-9b", "deepseek-v2-lite-16b",
+                     "stablelm-12b", "qwen3-moe-235b-a22b", "internvl2-2b"]
+
+
+@pytest.mark.parametrize("arch", CONSISTENCY_ARCHS)
+def test_prefill_decode_matches_train(arch):
+    """prefill(6) + token-by-token decode == full train-mode forward."""
+    cfg = get_reduced(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    kwargs = {}
+    if cfg.frontend == "vision":
+        kwargs["prefix_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.num_prefix_embeds, cfg.d_model))
+    ref = model.forward(params, toks, mode="train", **kwargs).logits
+    p_off = cfg.num_prefix_embeds if cfg.frontend == "vision" else 0
+
+    cache = model.init_cache(B, 40)
+    pre = model.forward(params, toks[:, :6], mode="prefill", cache=cache,
+                        **kwargs)
+    outs = [pre.logits]
+    cache = pre.cache
+    for t in range(6, S):
+        pos = jnp.full((B, 1), t + p_off, jnp.int32)
+        st = model.forward(params, toks[:, t:t + 1], mode="decode",
+                           cache=cache, positions=pos)
+        cache = st.cache
+        outs.append(st.logits)
+    dec = jnp.concatenate(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - ref)))
+    assert err < 3e-3, f"{arch}: decode/train mismatch {err}"
+
+
+def test_sliding_window_ring_beyond_window():
+    """Decoding past the window: ring cache output == train-mode forward
+    (the windowed mask makes both attend to the same last-w tokens)."""
+    cfg = get_reduced("h2o-danube-3-4b", window=8)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 24  # 3x window
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    ref = model.forward(params, toks, mode="train").logits
+    cache = model.init_cache(B, 8)   # ring sized to window
+    pre = model.forward(params, toks[:, :4], mode="prefill", cache=cache)
+    cache, outs = pre.cache, [pre.logits]
+    for t in range(4, S):
+        st = model.forward(params, toks[:, t:t + 1], mode="decode",
+                           cache=cache,
+                           positions=jnp.full((B, 1), t, jnp.int32))
+        cache, _ = st.cache, outs.append(st.logits)
+    dec = jnp.concatenate(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - ref)))
+    assert err < 3e-3, f"ring decode mismatch {err}"
+
+
+def test_encdec_decode_consistency():
+    """Whisper: decoder decode with cross-attention == train-mode."""
+    cfg = get_reduced("whisper-base")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    audio = jax.random.normal(jax.random.PRNGKey(2),
+                              (B, cfg.encoder.source_len, cfg.d_model))
+    enc = model.encode(params, audio)
+    ref = model.forward(params, toks, mode="train", enc_out=enc).logits
+    cache = model.init_cache(B, 24)
+    pre = model.forward(params, toks[:, :5], mode="prefill", cache=cache,
+                        enc_out=enc)
+    cache, outs = pre.cache, [pre.logits]
+    for t in range(5, S):
+        st = model.forward(params, toks[:, t:t + 1], mode="decode",
+                           cache=cache, enc_out=enc,
+                           positions=jnp.full((B, 1), t, jnp.int32))
+        cache = st.cache
+        outs.append(st.logits)
+    err = float(jnp.max(jnp.abs(jnp.concatenate(outs, 1) - ref)))
+    assert err < 3e-3, err
+
+
+class TestKVCache:
+    def test_write_and_rollback(self):
+        cache = init_attn_cache(2, 8, 1, 4, jnp.float32)
+        k = jnp.ones((2, 3, 1, 4))
+        cache = write_prefill(cache, (k, k * 2), jnp.asarray([3, 2]))
+        np.testing.assert_array_equal(np.asarray(cache.next_pos), [3, 2])
+        assert np.asarray(cache.pos_arr)[0, :3].tolist() == [0, 1, 2]
+        assert np.asarray(cache.pos_arr)[1, 2] == -1
+        # append a 2-token chunk with row 1 masked at step 2
+        k2 = jnp.full((2, 2, 1, 4), 5.0)
+        valid = jnp.asarray([[True, True], [True, False]])
+        cache = write_chunk(cache, (k2, k2), valid)
+        np.testing.assert_array_equal(np.asarray(cache.next_pos), [5, 3])
+        # rollback row 0 to position 4
+        cache = rollback(cache, jnp.asarray([4, 3]))
+        pos = np.asarray(cache.pos_arr)
+        assert pos[0].max() == 3 and np.asarray(cache.next_pos)[0] == 4
+
+    @sweep(cases=15, seed=4)
+    def test_ring_prefill_equals_chunked(self, draw):
+        """Bulk ring prefill == writing the same tokens one by one."""
+        l = draw.integers(3, 6)
+        s = draw.integers(1, 10)
+        b = 2
+        k = jnp.asarray(np.random.default_rng(draw.integers(0, 99))
+                        .normal(size=(b, s, 1, 2)), jnp.float32)
+        lengths = jnp.asarray([s, max(1, s - 1)], jnp.int32)
+        c1 = write_prefill(init_attn_cache(b, l, 1, 2, jnp.float32),
+                           (k, k), lengths, ring=True)
+        c2 = init_attn_cache(b, l, 1, 2, jnp.float32)
+        valid = jnp.arange(s)[None, :] < lengths[:, None]
+        c2 = write_chunk(c2, (k, k), valid, ring=True)
+        np.testing.assert_array_equal(np.asarray(c1.pos_arr),
+                                      np.asarray(c2.pos_arr))
+        np.testing.assert_allclose(np.asarray(c1.k), np.asarray(c2.k),
+                                   atol=1e-6)
+
+
+class TestAttentionCore:
+    @sweep(cases=15, seed=5)
+    def test_blockwise_equals_naive(self, draw):
+        """Online-softmax blockwise attention == naive softmax attention."""
+        b = draw.integers(1, 3)
+        sq = draw.integers(1, 6)
+        l = draw.choice([4, 8, 16, 24])
+        h, kv, hd = 4, draw.choice([1, 2, 4]), 8
+        window = draw.choice([0, 0, 3, 7])
+        rng = np.random.default_rng(draw.integers(0, 999))
+        q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, l, kv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, l, kv, hd)), jnp.float32)
+        q_pos = jnp.asarray(rng.integers(0, l, size=(b, sq)), jnp.int32)
+        kv_pos = jnp.asarray(rng.integers(0, l, size=(b, l)), jnp.int32)
+        kv_valid = jnp.asarray(rng.random((b, l)) > 0.2)
+        out = dot_attention(q, k, v, q_pos, kv_pos, kv_valid, window=window,
+                            block_size=4)
+        # naive reference
+        qf = q.reshape(b, sq, kv, h // kv, hd)
+        s = jnp.einsum("bqkgh,blkh->bqkgl", qf, k) / np.sqrt(hd)
+        mask = kv_valid[:, None, :] & (kv_pos[:, None, :] <= q_pos[:, :, None])
+        if window:
+            mask &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+        s = jnp.where(mask[:, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        # rows with no valid kv: zero them like the blockwise code does
+        any_valid = jnp.any(mask, axis=-1)[:, :, None, None, None]
+        ref = jnp.einsum("bqkgl,blkh->bqkgh", p, v) * any_valid
+        ref = ref.reshape(b, sq, h, hd)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+
+class TestMoE:
+    @sweep(cases=10, seed=6)
+    def test_dispatch_matches_dense_reference(self, draw):
+        """Capacity dispatch == dense all-experts oracle when nothing drops."""
+        from repro.configs import get_reduced
+        cfg = get_reduced("qwen3-moe-235b-a22b")
+        params = init_moe(jax.random.PRNGKey(draw.integers(0, 99)), cfg,
+                          jnp.float32)
+        x = jnp.asarray(np.random.default_rng(draw.integers(0, 99))
+                        .normal(size=(2, 6, cfg.d_model)), jnp.float32)
+        y, aux = apply_moe(params, x, cfg)
+        ref = apply_moe_reference(params, x, cfg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   atol=2e-5)
+        assert float(aux) >= 0.0
+
+    def test_router_loadbalance_loss_range(self):
+        """Uniform routing minimizes the aux loss at weight * 1.0."""
+        cfg = get_reduced("qwen3-moe-235b-a22b")
+        params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            size=(4, 16, cfg.d_model)), jnp.float32)
+        _, aux = apply_moe(params, x, cfg)
+        w = cfg.moe.router_aux_weight
+        assert float(aux) >= 0.9 * w  # >= the uniform lower bound E*(1/E)*1

@@ -1,0 +1,107 @@
+"""Sampling warpers + request lifecycle management."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.speculative import acceptance_probability, verify
+from repro.serving.request import Request, RequestManager
+from repro.serving.sampling import SamplingParams, sample, warp_logits
+from tests.proptest import sweep
+
+
+class TestWarpers:
+    @sweep(cases=20, seed=40)
+    def test_topk_keeps_k(self, draw):
+        v = draw.integers(8, 64)
+        k = draw.integers(1, v - 1)
+        rng = np.random.default_rng(draw.integers(0, 999))
+        logits = jnp.asarray(rng.normal(size=(v,)) * 3, jnp.float32)
+        out = warp_logits(logits, SamplingParams(top_k=k))
+        assert int(jnp.sum(out > -1e29)) == k
+
+    def test_topp_mass(self):
+        logits = jnp.log(jnp.asarray([0.5, 0.3, 0.15, 0.05]))
+        out = warp_logits(logits, SamplingParams(top_p=0.8))
+        kept = np.asarray(out > -1e29)
+        # smallest prefix reaching 0.8 = {0.5, 0.3}
+        assert kept.tolist() == [True, True, False, False]
+
+    def test_min_p(self):
+        logits = jnp.log(jnp.asarray([0.6, 0.3, 0.05, 0.05]))
+        out = warp_logits(logits, SamplingParams(min_p=0.2))
+        kept = np.asarray(out > -1e29)
+        assert kept.tolist() == [True, True, False, False]  # 0.05 < 0.2*0.6
+
+    def test_temperature_flattens(self):
+        logits = jnp.asarray([2.0, 0.0])
+        hot = jax.nn.softmax(warp_logits(logits, SamplingParams(
+            temperature=4.0)))
+        cold = jax.nn.softmax(warp_logits(logits, SamplingParams(
+            temperature=0.25)))
+        assert float(hot[0]) < float(jax.nn.softmax(logits)[0]) \
+            < float(cold[0])
+
+    def test_warped_q_losslessness(self):
+        """Speculative decoding with a top-k-warped draft stays lossless iff
+        q = the WARPED distribution (acceptance uses the true q)."""
+        rng = np.random.default_rng(7)
+        v, trials = 16, 4000
+        q_raw = jnp.asarray(rng.normal(size=(v,)) * 2, jnp.float32)
+        p_l = jnp.asarray(rng.normal(size=(v,)) * 2, jnp.float32)
+        q_warp = warp_logits(q_raw, SamplingParams(top_k=4))
+        keys = jax.random.split(jax.random.PRNGKey(0), trials)
+        toks = jax.vmap(lambda k: sample(k, q_warp))(keys)[:, None]
+        q_b = jnp.tile(q_warp, (trials, 1, 1))
+        p_b = jnp.tile(p_l, (trials, 2, 1))
+        res = verify(jax.random.PRNGKey(1), toks, q_b, p_b,
+                     jnp.ones((trials,), jnp.int32))
+        first = np.asarray(res.emitted[:, 0])
+        p0 = np.asarray(jax.nn.softmax(p_l))
+        counts = np.bincount(first, minlength=v) / trials
+        sigma = np.sqrt(p0 * (1 - p0) / trials)
+        assert np.all(np.abs(counts - p0) < 4.5 * sigma + 6e-3)
+
+
+class TestRequestManager:
+    def _mk(self, n=2):
+        rm = RequestManager(n)
+        for i in range(n):
+            rm.submit(i, Request(prompt=np.arange(4, dtype=np.int32),
+                                 max_new_tokens=5))
+        return rm
+
+    def test_admission_fifo(self):
+        rm = self._mk()
+        rm.submit(0, Request(prompt=np.zeros(2, np.int32), max_new_tokens=3))
+        fresh = rm.admit()
+        assert fresh == [0, 1]
+        assert rm.active[0].max_new_tokens == 5  # first submitted first
+
+    def test_remaining_caps_and_completion(self):
+        rm = self._mk()
+        rm.admit()
+        np.testing.assert_array_equal(rm.remaining_caps(), [5, 5])
+        emitted = np.asarray([[1, 2, 3, -1], [7, -1, -1, -1]], np.int32)
+        rm.record_emitted(emitted)
+        np.testing.assert_array_equal(rm.remaining_caps(), [2, 4])
+        rm.record_emitted(np.asarray([[4, 5, 6, 9], [8, -1, -1, -1]],
+                                     np.int32))
+        assert rm.active[0].done          # capped at 5 generated
+        assert rm.active[0].generated == [1, 2, 3, 4, 5]
+        assert not rm.active[1].done
+
+    def test_eos_completion_and_refill(self):
+        rm = RequestManager(1)
+        rm.submit(0, Request(prompt=np.zeros(2, np.int32),
+                             max_new_tokens=10, eos_token=42))
+        rm.submit(0, Request(prompt=np.zeros(2, np.int32), max_new_tokens=4))
+        rm.admit()
+        rm.record_emitted(np.asarray([[5, 42, -1]], np.int32))
+        assert rm.active[0].done
+        fresh = rm.admit()                 # next request admitted
+        assert fresh == [0]
+        assert rm.active[0].max_new_tokens == 4
+        st = rm.stats()
+        assert st["completed"] == 1
+        assert st["mean_latency_rounds"] >= 0

@@ -1,0 +1,117 @@
+"""GOODSPEED-SCHED solver tests: exactness, feasibility, fairness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.goodput import expected_goodput, marginal_gain
+from repro.core.scheduler import (fixed_s, objective_value, random_s,
+                                  solve_greedy, solve_threshold)
+from repro.core.utility import UtilitySpec
+from tests.proptest import sweep
+
+
+def brute_force(alpha, weights, C):
+    """Exact greedy in numpy (provably optimal for separable concave)."""
+    n = len(alpha)
+    S = np.zeros(n, dtype=np.int64)
+    for _ in range(C):
+        g = weights * alpha ** (S + 1.0)
+        S[np.argmax(g)] += 1
+    return S
+
+
+class TestSolverExactness:
+    @sweep(cases=25, seed=1)
+    def test_greedy_matches_numpy_objective(self, draw):
+        n = draw.integers(1, 12)
+        C = draw.integers(1, 48)
+        alpha = draw.float_array((n,), 0.02, 0.98)
+        w = draw.float_array((n,), 0.05, 5.0)
+        S_np = brute_force(alpha, w, C)
+        out = solve_greedy(jnp.asarray(alpha), jnp.asarray(w), C)
+        obj_np = float(np.sum(w * np.asarray(
+            expected_goodput(jnp.asarray(S_np, jnp.float32), jnp.asarray(alpha)))))
+        assert int(jnp.sum(out.S)) == C
+        np.testing.assert_allclose(float(out.objective), obj_np, rtol=1e-5)
+
+    @sweep(cases=25, seed=2)
+    def test_threshold_matches_greedy(self, draw):
+        n = draw.integers(1, 16)
+        C = draw.integers(1, 64)
+        alpha = jnp.asarray(draw.float_array((n,), 0.02, 0.98))
+        w = jnp.asarray(draw.float_array((n,), 0.05, 5.0))
+        g = solve_greedy(alpha, w, C)
+        t = solve_threshold(alpha, w, C)
+        # allocations can differ at exact ties; objectives must match
+        np.testing.assert_allclose(float(t.objective), float(g.objective),
+                                   rtol=1e-5, atol=1e-6)
+        assert int(jnp.sum(t.S)) == C
+
+    @sweep(cases=20, seed=3)
+    def test_s_max_cap_respected(self, draw):
+        n = draw.integers(2, 10)
+        C = draw.integers(4, 64)
+        alpha = jnp.asarray(draw.float_array((n,), 0.1, 0.95))
+        w = jnp.ones((n,))
+        cap = jnp.asarray(draw.int_array((n,), 0, 6), jnp.int32)
+        t = solve_threshold(alpha, w, C, s_max=cap)
+        assert bool(jnp.all(t.S <= cap))
+        assert int(jnp.sum(t.S)) <= C
+        # budget is saturated unless every client is capped
+        if int(jnp.sum(cap)) >= C:
+            assert int(jnp.sum(t.S)) == C
+
+    def test_optimality_vs_exhaustive_small(self):
+        """Exhaustive enumeration on a tiny instance certifies optimality."""
+        import itertools
+        alpha = np.array([0.9, 0.5, 0.2])
+        w = np.array([1.0, 2.0, 3.0])
+        C = 6
+        best = -1.0
+        for S in itertools.product(range(C + 1), repeat=3):
+            if sum(S) <= C:
+                obj = float(np.sum(w * np.asarray(expected_goodput(
+                    jnp.asarray(S, jnp.float32), jnp.asarray(alpha)))))
+                best = max(best, obj)
+        out = solve_threshold(jnp.asarray(alpha), jnp.asarray(w), C)
+        np.testing.assert_allclose(float(out.objective), best, rtol=1e-6)
+
+
+class TestSchedulerBehaviour:
+    def test_high_alpha_gets_more_slots(self):
+        alpha = jnp.asarray([0.95, 0.5, 0.1])
+        w = jnp.ones((3,))
+        S = solve_threshold(alpha, w, 24).S
+        assert S[0] > S[1] > S[2]
+
+    def test_log_utility_weights_prioritize_starved(self):
+        """With 1/x weights, a starved client wins slots despite lower alpha."""
+        alpha = jnp.asarray([0.6, 0.6])
+        x = jnp.asarray([10.0, 0.5])  # client 1 starved
+        w = UtilitySpec(alpha=1.0).grad(x)
+        S = solve_threshold(alpha, w, 10).S
+        assert S[1] > S[0]
+
+    def test_fixed_and_random_budget(self):
+        S = fixed_s(8, 20)
+        assert int(jnp.sum(S)) == 16  # floor(20/8)*8
+        Sr = random_s(jax.random.PRNGKey(0), 8, 20)
+        assert int(jnp.sum(Sr)) == 20
+        assert bool(jnp.all(Sr >= 0))
+
+    def test_marginal_gain_is_decreasing(self):
+        a = jnp.asarray([0.7])
+        gains = [float(marginal_gain(jnp.asarray([s], jnp.float32), a)[0])
+                 for s in range(10)]
+        assert all(g1 > g2 for g1, g2 in zip(gains, gains[1:]))
+
+    def test_degenerate_single_client(self):
+        out = solve_threshold(jnp.asarray([0.8]), jnp.asarray([1.0]), 16)
+        assert int(out.S[0]) == 16
+
+    def test_extreme_alphas_do_not_nan(self):
+        out = solve_threshold(jnp.asarray([1e-9, 1.0 - 1e-9]),
+                              jnp.asarray([1.0, 1.0]), 8)
+        assert np.isfinite(float(out.objective))
+        assert int(jnp.sum(out.S)) == 8

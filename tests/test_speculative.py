@@ -1,0 +1,146 @@
+"""Speculative verification: losslessness, acceptance statistics, ragged batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.goodput import expected_goodput
+from repro.core.speculative import acceptance_probability, verify
+from tests.proptest import sweep
+
+
+def _random_logit_pair(rng, v, sharp_q=1.0, sharp_p=1.0):
+    q = rng.normal(size=(v,)) * sharp_q
+    p = rng.normal(size=(v,)) * sharp_p
+    return p, q
+
+
+def _make_batch(rng, n, s_max, v, couple=0.0):
+    """Random draft/target logits; `couple` in [0,1] interpolates q toward p
+    (couple=1 -> q==p -> alpha=1)."""
+    p = rng.normal(size=(n, s_max + 1, v)).astype(np.float32)
+    q_ind = rng.normal(size=(n, s_max, v)).astype(np.float32)
+    q = couple * p[:, :s_max, :] + (1.0 - couple) * q_ind
+    return jnp.asarray(q), jnp.asarray(p)
+
+
+class TestVerifyMechanics:
+    @sweep(cases=20, seed=10)
+    def test_shapes_and_feasibility(self, draw):
+        n = draw.integers(1, 6)
+        s_max = draw.integers(1, 8)
+        v = draw.integers(3, 40)
+        rng = np.random.default_rng(draw.integers(0, 10_000))
+        q, p = _make_batch(rng, n, s_max, v)
+        lengths = jnp.asarray(rng.integers(0, s_max + 1, size=(n,)), jnp.int32)
+        toks = jnp.asarray(rng.integers(0, v, size=(n, s_max)), jnp.int32)
+        res = verify(jax.random.PRNGKey(draw.integers(0, 99)), toks, q, p, lengths)
+        assert res.accepted.shape == (n,)
+        assert bool(jnp.all(res.accepted <= lengths))
+        assert bool(jnp.all(res.accepted >= 0))
+        assert bool(jnp.all(res.num_emitted == res.accepted + 1))
+        assert bool(jnp.all((res.extra_token >= 0) & (res.extra_token < v)))
+        # emitted row i: first m_i tokens match the draft, position m_i is extra
+        em = np.asarray(res.emitted)
+        m = np.asarray(res.accepted)
+        for i in range(n):
+            np.testing.assert_array_equal(em[i, :m[i]], np.asarray(toks)[i, :m[i]])
+            assert em[i, m[i]] == int(res.extra_token[i])
+            assert np.all(em[i, m[i] + 1:] == -1)
+        # Eq.3 indicator sums are within [0, S_i]
+        rs = np.asarray(res.accept_ratio_sum)
+        assert np.all(rs >= -1e-6) and np.all(rs <= np.asarray(lengths) + 1e-5)
+
+    def test_identical_models_accept_everything(self):
+        """q == p => ratio = 1 => all drafts accepted, extra from bonus row."""
+        rng = np.random.default_rng(0)
+        n, s_max, v = 4, 6, 50
+        p = jnp.asarray(rng.normal(size=(n, s_max + 1, v)), jnp.float32)
+        q = p[:, :s_max, :]
+        toks = jnp.asarray(rng.integers(0, v, size=(n, s_max)), jnp.int32)
+        lengths = jnp.full((n,), s_max, jnp.int32)
+        res = verify(jax.random.PRNGKey(1), toks, q, p, lengths)
+        assert bool(jnp.all(res.accepted == s_max))
+        np.testing.assert_allclose(np.asarray(res.accept_ratio_sum),
+                                   np.full(n, s_max), rtol=1e-5)
+
+    def test_disjoint_support_rejects_first(self):
+        """q puts all mass on token 0, p on token 1 => reject at position 0
+        and the correction is forced to token 1."""
+        n, s_max, v = 2, 4, 8
+        q = jnp.full((n, s_max, v), -30.0).at[:, :, 0].set(30.0)
+        p = jnp.full((n, s_max + 1, v), -30.0).at[:, :, 1].set(30.0)
+        toks = jnp.zeros((n, s_max), jnp.int32)
+        res = verify(jax.random.PRNGKey(2), toks, q, p,
+                     jnp.full((n,), s_max, jnp.int32))
+        assert bool(jnp.all(res.accepted == 0))
+        assert bool(jnp.all(res.extra_token == 1))
+
+    def test_zero_length_rows(self):
+        """S_i = 0 rows emit exactly one token sampled from p row 0."""
+        rng = np.random.default_rng(3)
+        n, s_max, v = 3, 5, 16
+        q, p = _make_batch(rng, n, s_max, v)
+        toks = jnp.asarray(rng.integers(0, v, size=(n, s_max)), jnp.int32)
+        lengths = jnp.zeros((n,), jnp.int32)
+        res = verify(jax.random.PRNGKey(4), toks, q, p, lengths)
+        assert bool(jnp.all(res.accepted == 0))
+        assert bool(jnp.all(res.num_emitted == 1))
+        assert float(jnp.sum(res.accept_ratio_sum)) == 0.0
+
+
+class TestLosslessness:
+    def test_acceptance_rate_matches_analytic(self):
+        """Empirical acceptance fraction at position 0 == 1 - TV(p, q)."""
+        rng = np.random.default_rng(7)
+        v, trials = 24, 4000
+        q1, p1 = _make_batch(rng, 1, 1, v, couple=0.5)
+        alpha = float(acceptance_probability(p1[0, 0], q1[0, 0]))
+        q = jnp.tile(q1, (trials, 1, 1))
+        p = jnp.tile(p1, (trials, 1, 1))
+        keys = jax.random.split(jax.random.PRNGKey(8), trials)
+        toks = jax.vmap(lambda k: jax.random.categorical(k, q1[0, 0]))(keys)
+        res = verify(jax.random.PRNGKey(9), toks[:, None].astype(jnp.int32),
+                     q, p, jnp.ones((trials,), jnp.int32))
+        emp = float(jnp.mean(res.accepted == 1))
+        assert abs(emp - alpha) < 0.03, (emp, alpha)
+
+    def test_output_distribution_matches_target(self):
+        """The FIRST emitted token must be distributed exactly as the target
+        model's p_0 — the defining losslessness property of speculative
+        sampling.  Statistical check over many trials."""
+        rng = np.random.default_rng(11)
+        v, trials = 12, 6000
+        q1, p1 = _make_batch(rng, 1, 1, v, couple=0.3)
+        p0 = np.asarray(jax.nn.softmax(p1[0, 0]))
+        q = jnp.tile(q1, (trials, 1, 1))
+        p = jnp.tile(p1, (trials, 1, 1))
+        kd, kv = jax.random.split(jax.random.PRNGKey(12))
+        toks = jax.random.categorical(kd, jnp.tile(q1[0, 0], (trials, 1)),
+                                      axis=-1)[:, None].astype(jnp.int32)
+        res = verify(kv, toks, q, p, jnp.ones((trials,), jnp.int32))
+        first = np.asarray(res.emitted[:, 0])
+        counts = np.bincount(first, minlength=v) / trials
+        # chi-square-ish bound: each bin within 4 sigma
+        sigma = np.sqrt(p0 * (1 - p0) / trials)
+        assert np.all(np.abs(counts - p0) < 4.5 * sigma + 5e-3), \
+            np.max(np.abs(counts - p0) / (sigma + 1e-9))
+
+    def test_expected_goodput_formula(self):
+        """E[num_emitted] == (1 - a^(S+1)) / (1 - a) for iid acceptance."""
+        rng = np.random.default_rng(13)
+        v, s_max, trials = 16, 6, 3000
+        q1, p1 = _make_batch(rng, 1, s_max, v, couple=0.6)
+        # same (p,q) at every position -> iid acceptance with analytic alpha
+        q1 = jnp.tile(q1[:, :1, :], (1, s_max, 1))
+        p1 = jnp.tile(p1[:, :1, :], (1, s_max + 1, 1))
+        alpha = float(acceptance_probability(p1[0, 0], q1[0, 0]))
+        kd, kv = jax.random.split(jax.random.PRNGKey(14))
+        toks = jax.random.categorical(
+            kd, jnp.tile(q1[0, 0], (trials, s_max, 1)), axis=-1).astype(jnp.int32)
+        res = verify(kv, toks, jnp.tile(q1, (trials, 1, 1)),
+                     jnp.tile(p1, (trials, 1, 1)),
+                     jnp.full((trials,), s_max, jnp.int32))
+        expected = float(expected_goodput(jnp.asarray(float(s_max)),
+                                          jnp.asarray(alpha)))
+        emp = float(jnp.mean(res.num_emitted))
+        assert abs(emp - expected) / expected < 0.05, (emp, expected, alpha)
