@@ -5,6 +5,8 @@
   fig4  utility_convergence  — U(x_bar) convergence + gap to fluid optimum
   tblI  scheduler_bench      — GOODSPEED-SCHED solver timings + C* budgets
   e2e   engine_e2e           — real-model Algorithm-1 rounds
+  serve serve_requests       — request throughput + completion latency
+                               under Poisson-ish arrivals (continuous batching)
   ablations                  — utility-family / budget / top-k sweeps
   roofline                   — terms from the dry-run artifacts (§Roofline)
 
@@ -18,10 +20,11 @@ import traceback
 
 def main() -> None:
     from benchmarks import (ablations, engine_e2e, goodput_estimation,
-                            roofline, scheduler_bench, time_distribution,
-                            utility_convergence)
+                            roofline, scheduler_bench, serve_requests,
+                            time_distribution, utility_convergence)
     modules = [goodput_estimation, time_distribution, utility_convergence,
-               scheduler_bench, engine_e2e, ablations, roofline]
+               scheduler_bench, engine_e2e, serve_requests, ablations,
+               roofline]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

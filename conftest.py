@@ -4,3 +4,11 @@ import sys
 # make `tests.proptest` and `benchmarks.*` importable regardless of how
 # pytest is invoked (the documented command is `PYTHONPATH=src pytest tests/`)
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def pytest_configure(config):
+    # Registered (not auto-skipped) marker: the ~2-minute dry-run compile
+    # tests stay in tier-1 by default; deselect with `-m "not slow"`.
+    config.addinivalue_line(
+        "markers", "slow: long-running compile/integration tests "
+                   "(on by default; deselect with -m 'not slow')")

@@ -4,7 +4,10 @@ N draft servers each run a REAL (reduced-dim) draft transformer; the
 verification server runs a larger target transformer.  Every round executes
 Algorithm 1 with actual logits: autoregressive drafting, batched rejection-
 sampling verification, Eq.3/Eq.4 estimator updates and GOODSPEED-SCHED
-allocation.  Compares goodspeed / fixed / random policies.
+allocation.  Compares goodspeed / fixed / random policies, then drains a
+multi-user request workload through the continuous-batching lifecycle loop
+(``serve_requests``): FIFO admission per server, per-row cache re-prefill
+on admission, completion-aware scheduling, EOS/cap termination.
 
 Run:  PYTHONPATH=src python examples/serve_goodspeed.py [--rounds 30]
 """
@@ -17,6 +20,7 @@ from repro.configs import get_reduced
 from repro.data.pipeline import PAPER_DATASETS, SyntheticDomain
 from repro.models import Model
 from repro.serving.engine import GoodSpeedEngine
+from repro.serving.request import Request
 
 N = 4
 
@@ -55,6 +59,22 @@ def main():
               f"wall/round={wall * 1e3:6.1f}ms  "
               f"alpha_hat={np.round(hist[-1].alpha_hat, 2)}  "
               f"S(final)={hist[-1].S}")
+
+    # ---- multi-user request lifecycle (continuous batching) ---------------
+    reqs = [Request(prompt=SyntheticDomain(PAPER_DATASETS[j % 8], vocab, 100 + j)
+                    .sample_prompt(rng)[:16],
+                    max_new_tokens=int(rng.integers(8, 16)))
+            for j in range(3 * N)]
+    eng = GoodSpeedEngine(draft_model=draft, target_model=target,
+                          n_servers=N, C=args.C, s_max=6, cache_len=512,
+                          draft_temps=temps)
+    rep = eng.serve_requests(jax.random.PRNGKey(3), reqs, dp, tp,
+                             rounds=8 * args.rounds)
+    s = rep["summary"]
+    print(f"\nserve_requests: {s['completed']}/{len(reqs)} requests in "
+          f"{s['rounds_run']} rounds  tokens/round={s['tokens_per_round']:.2f}  "
+          f"mean latency={s['mean_latency_rounds']:.1f} rounds  "
+          f"mean queue delay={s['mean_queue_delay_rounds']:.1f} rounds")
 
 
 if __name__ == "__main__":

@@ -166,8 +166,19 @@ def random_s(key: Array, n: int, C: int) -> Array:
     return jnp.zeros((n,), jnp.int32).at[owners].add(1)
 
 
+def _capped(S: Array, s_max: Array | None) -> Array:
+    return S if s_max is None else jnp.minimum(S, jnp.asarray(s_max, jnp.int32))
+
+
 def make_scheduler(name: str):
-    """Factory used by the serving engine; returns fn(alpha, weights, C, key)->S."""
+    """Factory used by the serving engine; returns
+    ``fn(alpha, weights, C, key=None, s_max=None) -> S``.
+
+    The exact solvers (goodspeed/greedy) treat ``s_max`` as a per-client
+    constraint INSIDE the optimization — a zero-cap (idle) client gets
+    S_i = 0 and its share of the budget flows to the others.  The paper
+    baselines ignore the budget shape by definition, so their allocations
+    are clipped to the caps after the fact (an idle row still ends at 0)."""
     name = name.lower()
     if name in ("goodspeed", "gradient", "threshold"):
         return lambda alpha, weights, C, key=None, s_max=None: \
@@ -177,8 +188,8 @@ def make_scheduler(name: str):
             solve_greedy(alpha, weights, C, s_max).S
     if name in ("fixed", "fixed-s"):
         return lambda alpha, weights, C, key=None, s_max=None: \
-            fixed_s(alpha.shape[0], C)
+            _capped(fixed_s(alpha.shape[0], C), s_max)
     if name in ("random", "random-s"):
         return lambda alpha, weights, C, key=None, s_max=None: \
-            random_s(key, alpha.shape[0], C)
+            _capped(random_s(key, alpha.shape[0], C), s_max)
     raise ValueError(f"unknown scheduler {name!r}")

@@ -28,7 +28,7 @@ from repro.configs import (ARCHITECTURES, INPUT_SHAPES, get_config,
 from repro.distributed.sharding import (BATCH_AXES, CACHE_AXES, SERVE_RULES,
                                         TRAIN_RULES, ShardingContext,
                                         tree_shardings, use_sharding)
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_compat_mesh, make_production_mesh
 from repro.launch.specs import batch_specs
 from repro.models import Model
 from repro.training.optimizer import AdamW
@@ -205,6 +205,8 @@ def _lower_and_compile(cfg, shape_name, mesh, rules):
 
 def _costs(compiled):
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):       # JAX <= 0.4.x: one dict per program
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     return (float(cost.get("flops") or 0.0),
             float(cost.get("bytes accessed") or 0.0),
@@ -257,9 +259,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         return record
 
     if debug_mesh is not None:
-        mesh = jax.make_mesh(
-            debug_mesh, ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_compat_mesh(debug_mesh, ("data", "model"))
         record["mesh"] = mesh_name = "x".join(map(str, debug_mesh))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)

@@ -12,14 +12,26 @@ from __future__ import annotations
 import jax
 
 
+def make_compat_mesh(shape: tuple, names: tuple):
+    """``jax.make_mesh`` across JAX versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist from JAX
+    0.5.x onward; on older installs (0.4.37 ships in the container) the
+    plain call already yields Auto-typed axes, which is what we want.
+    """
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    return jax.make_mesh(shape, names)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 4):
     """Small mesh over forced host devices for CPU integration tests."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_compat_mesh((data, model), ("data", "model"))

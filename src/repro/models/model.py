@@ -91,9 +91,14 @@ class Model:
             pos_embedding="learned")
 
     # ------------------------------------------------------------------
-    def init_cache(self, batch: int, cache_len: int, dtype=None):
+    def init_cache(self, batch: int, cache_len: int, dtype=None,
+                   ring_headroom: int = 0):
+        """ring_headroom: extra ring slots for chunked decode — see
+        ``init_block_cache``; pass chunk_len - 1 when decoding S-token
+        chunks against sliding-window layers."""
         dtype = dtype or jnp.dtype(self.cfg.dtype)
-        return init_stack_cache(self.cfg, batch, cache_len, dtype)
+        return init_stack_cache(self.cfg, batch, cache_len, dtype,
+                                ring_headroom)
 
     # ------------------------------------------------------------------
     def encode(self, params, audio_embeds: Array) -> Array:

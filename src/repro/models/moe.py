@@ -20,6 +20,21 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models.layers import _dense_init
 
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across JAX versions: the top-level binding (with
+    check_vma) only exists from 0.5.x; 0.4.x ships it under
+    jax.experimental with check_rep.  Both calls are fully-manual over
+    every mesh axis, which is what the EP dispatch wants."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=set(mesh.axis_names),
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
 Array = jnp.ndarray
 
 
@@ -257,15 +272,13 @@ def apply_moe_shardmap(params, x: Array, cfg: ModelConfig, mesh):
         return y.reshape(xb.shape), aux
 
     bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         body,
         mesh=mesh,
         in_specs=(P(bspec, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=(P(bspec, None, None), P()),
-        axis_names=set(mesh.axis_names),
-        check_vma=False,
     )(x, params["router"], params["w_gate_e"], params["w_up_e"],
       params["w_down_e"])
 

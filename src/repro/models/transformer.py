@@ -80,12 +80,20 @@ def init_block(key, kind: str, cfg: ModelConfig, dtype):
 
 
 def init_block_cache(kind: str, cfg: ModelConfig, batch: int,
-                     cache_len: int, dtype):
+                     cache_len: int, dtype, ring_headroom: int = 0):
     """Zero cache/state for one block.  cache_len applies to attention kinds;
-    sliding/local kinds allocate min(cache_len, window) ring buffers."""
+    sliding/local kinds allocate min(cache_len, window) ring buffers.
+
+    ring_headroom: extra ring slots beyond the window.  ``write_chunk``
+    commits a whole S-token decode chunk BEFORE attention runs, so a ring
+    sized exactly ``window`` evicts up to S-1 of the oldest keys the
+    chunk's first queries still need.  Chunked-decode callers (the
+    speculative verify path) must pass ``chunk_len - 1`` headroom; the
+    window mask keeps the extra older keys out of attention."""
     if kind in ATTN_KINDS:
         ring = _is_ring(kind, cfg)
-        length = min(cache_len, cfg.window) if ring else cache_len
+        length = (min(cache_len, cfg.window) + ring_headroom) if ring \
+            else cache_len
         if cfg.mla is not None:
             return init_mla_cache(batch, length, cfg.mla.kv_lora_rank,
                                   cfg.mla.qk_rope_head_dim, dtype)
@@ -246,16 +254,19 @@ def init_stack(key, cfg: ModelConfig, dtype):
     return params
 
 
-def init_stack_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+def init_stack_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
+                     ring_headroom: int = 0):
     pattern, groups, rest = stack_layout(cfg)
     cache = {"scan": {}, "rest": {}}
     for i, kind in enumerate(pattern):
-        one = init_block_cache(kind, cfg, batch, cache_len, dtype)
+        one = init_block_cache(kind, cfg, batch, cache_len, dtype,
+                               ring_headroom)
         cache["scan"][f"slot{i}"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (groups,) + a.shape), one)
     for j, kind in enumerate(rest):
         cache["rest"][f"layer{j}"] = init_block_cache(kind, cfg, batch,
-                                                      cache_len, dtype)
+                                                      cache_len, dtype,
+                                                      ring_headroom)
     return cache
 
 

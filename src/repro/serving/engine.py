@@ -2,14 +2,32 @@
 with REAL transformer models end-to-end (Algorithm 1 over actual logits).
 
 Round structure (paper Fig. 1):
+  (0) GOODSPEED-SCHED allocates S(t) from the current estimates, with each
+      server's remaining-request cap fed in as its per-server s_max
+      (completion-aware allocation; idle servers get zero budget and are
+      masked out of the verify chunk entirely);
   (1) each draft server autoregressively samples S_i(t) tokens from its
       draft model (KV-cached decode steps);
   (2-3) drafts are batched into one ragged [N, S_max] verify batch;
   (4) the target model scores the chunk [pending_i, d_1..d_S] in ONE
       decode-chunk forward (positions len_i..len_i+S), and the verifier
       runs lossless rejection sampling (core.speculative.verify);
-  (5) estimators update (Eqs. 3-4) and GOODSPEED-SCHED allocates S(t+1);
+  (5) estimators update (Eqs. 3-4);
   (6) accepted tokens commit; caches roll back past rejected drafts.
+
+The whole round is ONE jit-compiled function with the engine state donated,
+so the dynamic serving loop pays no per-round retrace or cache-copy cost.
+
+Request lifecycle (``serve_requests``): the verification server owns a
+``RequestManager`` (serving.request) with one FIFO queue per draft server.
+Each server carries one ACTIVE request; when it completes (per-request cap
+reached or EOS emitted) the next queued request is admitted immediately —
+continuous batching at server granularity.  Admission re-prefills ONLY the
+fresh rows of both model caches — ``_admit_rows`` runs a full-batch prefill
+and row-merges it into the live stack caches (``_merge_cache_rows``, the
+stack-level analogue of the single-cache ``kv_cache.prefill_rows``) while
+the neighbouring rows keep decoding — and ``remaining_caps()`` flows into
+the scheduler every round so budget never lands on finished work.
 
 Cache-consistency invariant: a model's cache always contains the committed
 sequence EXCEPT the final committed token, which is the next chunk's first
@@ -32,11 +50,12 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.estimator import EstimatorState, GoodputEstimator
 from repro.core.latency import LatencyModel
-from repro.core.scheduler import fixed_s, random_s, solve_threshold
+from repro.core.scheduler import fixed_s, make_scheduler
 from repro.core.speculative import verify
 from repro.core.utility import UtilitySpec
 from repro.models import Model
 from repro.serving.kv_cache import AttnCache, MLACache, rollback
+from repro.serving.request import Request, RequestManager
 
 Array = jnp.ndarray
 
@@ -58,6 +77,21 @@ def _cache_rollback(cache, keep_pos: Array):
                         is_leaf=lambda c: isinstance(c, (AttnCache, MLACache)))
 
 
+def _merge_cache_rows(old, new, rows: Array):
+    """Row-select between two stack caches of identical structure: rows
+    where ``rows[b]`` take the fresh cache, others keep the old one.
+    Scan-group subtrees stack a leading layer-group axis, so batch sits at
+    axis 1 there and at axis 0 in the "rest" subtree.  (This is the
+    stack-level analogue of ``kv_cache.prefill_rows``.)"""
+    def sel(axis):
+        def f(o, n_):
+            m = rows.reshape((1,) * axis + (-1,) + (1,) * (o.ndim - axis - 1))
+            return jnp.where(m, n_, o)
+        return f
+    return {"scan": jax.tree.map(sel(1), old["scan"], new["scan"]),
+            "rest": jax.tree.map(sel(0), old["rest"], new["rest"])}
+
+
 class EngineState(NamedTuple):
     # sequences: committed tokens per server (host-side ragged bookkeeping)
     target_cache: object
@@ -65,7 +99,7 @@ class EngineState(NamedTuple):
     pending: Array        # i32[N] last committed token (next chunk input)
     length: Array         # i32[N] committed length EXCLUDING pending
     est: EstimatorState
-    S: Array              # i32[N] current allocation
+    S: Array              # i32[N] allocation used in the last round
     key: Array
 
 
@@ -88,16 +122,25 @@ class GoodSpeedEngine:
     C: int
     s_max: int                     # per-server draft cap (latency bound)
     cache_len: int = 512
-    policy: str = "goodspeed"      # goodspeed | fixed | random
+    policy: str = "goodspeed"      # goodspeed | greedy | fixed | random
     estimator: GoodputEstimator = GoodputEstimator()
     utility: UtilitySpec = UtilitySpec(alpha=1.0)
     latency: LatencyModel = LatencyModel()
     draft_temps: tuple = ()        # per-server draft temperature (heterogeneity)
 
+    def __post_init__(self):
+        # resolve the policy once; validates the name at construction time
+        object.__setattr__(self, "_sched", make_scheduler(self.policy))
+        # ONE compiled round: engine state is donated so caches update
+        # in place — the dynamic serve loop stays retrace-free.
+        object.__setattr__(self, "_round_fn",
+                           jax.jit(self._round_core, donate_argnums=(0,)))
+
     # ------------------------------------------------------------------
-    def init(self, key: Array, prompts: list[np.ndarray],
-             draft_params, target_params) -> EngineState:
-        """Prefill both models on the per-server prompts."""
+    def _prefill_rows(self, prompts: list[np.ndarray], draft_params,
+                      target_params):
+        """Prefill FRESH caches for the given per-row prompts; returns
+        (target_cache, draft_cache, pending, length)."""
         n = self.n_servers
         assert len(prompts) == n
         maxlen = max(len(p) for p in prompts)
@@ -114,8 +157,13 @@ class GoodSpeedEngine:
         # feeding token t writes slot t; "pending" = last prompt token.
         pend_idx = jnp.maximum(lengths - 1, 0)
         feed_valid = valid_j & (jnp.arange(maxlen)[None, :] < pend_idx[:, None])
-        tcache = self.target_model.init_cache(n, self.cache_len)
-        dcache = self.draft_model.init_cache(n, self.cache_len)
+        # Ring (sliding-window) layers need chunk_len-1 slots of headroom:
+        # the verify/recompute chunks are s_max+1 tokens, written before
+        # attention runs (see init_block_cache).
+        tcache = self.target_model.init_cache(n, self.cache_len,
+                                              ring_headroom=self.s_max)
+        dcache = self.draft_model.init_cache(n, self.cache_len,
+                                             ring_headroom=self.s_max)
         t_out = self.target_model.forward(target_params, toks_j,
                                           mode="prefill", cache=tcache,
                                           chunk_valid=feed_valid)
@@ -123,11 +171,71 @@ class GoodSpeedEngine:
                                          mode="prefill", cache=dcache,
                                          chunk_valid=feed_valid)
         pending = jnp.take_along_axis(toks_j, pend_idx[:, None], axis=1)[:, 0]
+        return t_out.cache, d_out.cache, pending, pend_idx
+
+    def init(self, key: Array, prompts: list[np.ndarray],
+             draft_params, target_params) -> EngineState:
+        """Prefill both models on the per-server prompts."""
+        tcache, dcache, pending, length = self._prefill_rows(
+            prompts, draft_params, target_params)
         return EngineState(
-            target_cache=t_out.cache, draft_cache=d_out.cache,
-            pending=pending, length=pend_idx,
+            target_cache=tcache, draft_cache=dcache,
+            pending=pending, length=length,
+            est=self.estimator.init(self.n_servers),
+            S=fixed_s(self.n_servers, self.C), key=key)
+
+    def cold_start(self, key: Array) -> EngineState:
+        """All-idle engine state with empty caches — no model forward.
+        ``serve_requests`` starts here: every row is masked out until its
+        first admission re-prefills it, so prefilling dummy prompts would
+        be wasted compute."""
+        n = self.n_servers
+        return EngineState(
+            target_cache=self.target_model.init_cache(
+                n, self.cache_len, ring_headroom=self.s_max),
+            draft_cache=self.draft_model.init_cache(
+                n, self.cache_len, ring_headroom=self.s_max),
+            pending=jnp.zeros((n,), jnp.int32),
+            length=jnp.zeros((n,), jnp.int32),
             est=self.estimator.init(n),
             S=fixed_s(n, self.C), key=key)
+
+    # ------------------------------------------------------------------
+    def _admit_rows(self, state: EngineState, rows: list[int],
+                    prompts: dict, draft_params, target_params,
+                    budgets: Optional[dict] = None) -> EngineState:
+        """Continuous-batching admission: re-prefill ONLY the cache rows in
+        ``rows`` with their new request prompts; every other row's cache,
+        pending token and length are untouched.  Estimator state persists —
+        alpha_hat / X^beta track the draft SERVER, not the request.
+
+        budgets: optional per-row generation budget; when either model
+        keeps a full (non-ring) attention cache, admission fails loudly if
+        prompt + budget + 1 (bonus token) cannot fit in cache_len —
+        ``write_chunk`` would otherwise silently clobber the last slot.
+        Ring/recurrent-only stacks are O(window) and carry no such bound."""
+        n = self.n_servers
+        mask = np.zeros((n,), bool)
+        mask[list(rows)] = True
+        row_prompts = [np.asarray(prompts[i], np.int32) if mask[i]
+                       else np.zeros(1, np.int32) for i in range(n)]
+        bounded = any(k == "attn" for m in (self.draft_model,
+                                            self.target_model)
+                      for k in m.cfg.layer_kinds)
+        for i in rows:
+            need = len(row_prompts[i]) + (budgets or {}).get(i, 0) + 1
+            assert not bounded or need <= self.cache_len, \
+                (f"request needs {need} cache slots (prompt "
+                 f"{len(row_prompts[i])} + budget {(budgets or {}).get(i, 0)}"
+                 f" + bonus) but cache_len is {self.cache_len}")
+        tcache, dcache, pending, length = self._prefill_rows(
+            row_prompts, draft_params, target_params)
+        mask_j = jnp.asarray(mask)
+        return state._replace(
+            target_cache=_merge_cache_rows(state.target_cache, tcache, mask_j),
+            draft_cache=_merge_cache_rows(state.draft_cache, dcache, mask_j),
+            pending=jnp.where(mask_j, pending, state.pending),
+            length=jnp.where(mask_j, length, state.length))
 
     # ------------------------------------------------------------------
     def _draft(self, params, state: EngineState, key: Array):
@@ -167,13 +275,16 @@ class GoodSpeedEngine:
         return logits
 
     # ------------------------------------------------------------------
-    def _verify_chunk(self, params, state: EngineState, draft_toks: Array):
+    def _verify_chunk(self, params, state: EngineState, draft_toks: Array,
+                      S: Array, active: Array):
         """Step (4a): target scores [pending, d_1..d_{S-1}, d_S] in one
-        decode-chunk; output j is the distribution of chunk position j+1."""
+        decode-chunk; output j is the distribution of chunk position j+1.
+        Inactive (idle-server) rows are masked out of the chunk entirely —
+        their caches see no writes and they commit nothing."""
         n, s_cap = self.n_servers, self.s_max
         chunk = jnp.concatenate([state.pending[:, None], draft_toks], axis=1)
-        in_draft = jnp.arange(s_cap)[None, :] < state.S[:, None]
-        chunk_valid = jnp.concatenate(
+        in_draft = jnp.arange(s_cap)[None, :] < S[:, None]
+        chunk_valid = active[:, None] & jnp.concatenate(
             [jnp.ones((n, 1), bool), in_draft], axis=1)
         positions = state.length[:, None] + jnp.cumsum(
             chunk_valid.astype(jnp.int32), axis=1) - 1
@@ -184,66 +295,93 @@ class GoodSpeedEngine:
         return p_logits, out.cache, in_draft
 
     # ------------------------------------------------------------------
-    def run_round(self, state: EngineState, draft_params, target_params
-                  ) -> tuple[EngineState, RoundStats]:
+    def _round_core(self, state: EngineState, draft_params, target_params,
+                    caps: Array):
+        """One full Algorithm-1 round (jit'd, state donated).
+
+        caps: i32[N] per-server remaining-token budget.  cap == 0 marks an
+        IDLE server: it gets S_i = 0 from the scheduler (inside the solver,
+        so the budget flows to live servers), is masked out of the verify
+        chunk, commits nothing, and its estimator state holds.
+        """
         key, k_draft, k_verify, k_sched, k_jit = jax.random.split(state.key, 5)
         cfg_t = self.target_model.cfg
+        n = self.n_servers
+
+        # ---- step (0): completion-aware scheduling -----------------------
+        active = caps > 0
+        s_cap = jnp.minimum(caps, self.s_max)
+        w = self.utility.grad(state.est.goodput)
+        S = self._sched(state.est.alpha_hat, w, self.C,
+                        key=k_sched, s_max=s_cap)
+        S = jnp.where(active, S, 0)
 
         draft_toks, q_logits, draft_cache = self._draft(
             draft_params, state, k_draft)
         p_logits, target_cache, in_draft = self._verify_chunk(
-            target_params, state, draft_toks)
+            target_params, state, draft_toks, S, active)
 
-        res = verify(k_verify, draft_toks, q_logits, p_logits, state.S)
-        m = res.accepted                               # accepted drafts
-        realized = res.num_emitted.astype(jnp.float32)
+        res = verify(k_verify, draft_toks, q_logits, p_logits, S)
+        m = jnp.where(active, res.accepted, 0)
+        num_emitted = jnp.where(active, res.num_emitted, 0)
+        realized = num_emitted.astype(jnp.float32)
 
         # ---- commit / rollback -------------------------------------------
-        new_length = state.length + m + 1              # commits m+1 tokens
-        keep_pos = new_length                          # cache keeps < keep (pending excl.)
+        new_length = state.length + num_emitted       # m+1 tokens if active
+        keep_pos = new_length                         # cache keeps < keep (pending excl.)
+        m_eff = jnp.where(active, m, -1)              # -1: recompute holds the row
         if _is_rollbackable(cfg_t):
             target_cache = _cache_rollback(target_cache, keep_pos)
         else:
             target_cache = self._recompute_cache(
                 self.target_model, target_params, state.target_cache,
-                state.pending, draft_toks, m, state.length)
+                state.pending, draft_toks, m_eff, state.length)
         if _is_rollbackable(self.draft_model.cfg):
             draft_cache = _cache_rollback(draft_cache, keep_pos)
         else:
             draft_cache = self._recompute_cache(
                 self.draft_model, draft_params, state.draft_cache,
-                state.pending, draft_toks, m, state.length)
+                state.pending, draft_toks, m_eff, state.length)
 
-        # ---- estimator + scheduler (steps 5-6) ----------------------------
-        est = self.estimator.update(state.est, res.accept_ratio_sum,
-                                    state.S, realized)
-        if self.policy == "goodspeed":
-            w = self.utility.grad(est.goodput)
-            s_next = solve_threshold(
-                est.alpha_hat, w, self.C,
-                s_max=jnp.full((self.n_servers,), self.s_max, jnp.int32)).S
-        elif self.policy == "fixed":
-            s_next = jnp.minimum(fixed_s(self.n_servers, self.C), self.s_max)
-        else:
-            s_next = jnp.minimum(
-                random_s(k_sched, self.n_servers, self.C), self.s_max)
+        # ---- estimator update (step 5); idle rows hold their estimates ---
+        est_new = self.estimator.update(state.est, res.accept_ratio_sum,
+                                        S, realized)
+        est = EstimatorState(
+            alpha_hat=jnp.where(active, est_new.alpha_hat,
+                                state.est.alpha_hat),
+            goodput=jnp.where(active, est_new.goodput, state.est.goodput),
+            t=est_new.t)
 
-        jitter = jax.random.uniform(k_jit, (self.n_servers,),
-                                    minval=-1.0, maxval=1.0)
+        jitter = jax.random.uniform(k_jit, (n,), minval=-1.0, maxval=1.0)
         total, (rt, vt, st) = self.latency.round_time(
-            state.S, res.num_emitted, cfg_t.vocab_size, jitter)
+            S, num_emitted, cfg_t.vocab_size, jitter)
 
+        pending = jnp.where(active, res.extra_token, state.pending)
+        emitted = jnp.where(active[:, None], res.emitted, -1)
         new_state = EngineState(
             target_cache=target_cache, draft_cache=draft_cache,
-            pending=res.extra_token, length=new_length, est=est, S=s_next,
-            key=key)
+            pending=pending, length=new_length, est=est, S=S, key=key)
+        stats = (S, m, realized, est.alpha_hat, est.goodput,
+                 self.utility.value(est.goodput),
+                 jnp.stack([total, rt, vt, st]), emitted)
+        return new_state, stats
+
+    def run_round(self, state: EngineState, draft_params, target_params,
+                  caps: Optional[np.ndarray] = None
+                  ) -> tuple[EngineState, RoundStats]:
+        """One round.  caps defaults to "every server live at full s_max"
+        (the fixed-round simulator behaviour).  NOTE: ``state`` is donated
+        to the compiled round — use the returned state, not the argument."""
+        if caps is None:
+            caps = np.full((self.n_servers,), self.s_max, np.int32)
+        new_state, raw = self._round_fn(
+            state, draft_params, target_params, jnp.asarray(caps, jnp.int32))
+        S, m, realized, alpha_hat, goodput, util, wall, emitted = raw
         stats = RoundStats(
-            S=np.asarray(state.S), accepted=np.asarray(m),
-            realized=np.asarray(realized), alpha_hat=np.asarray(est.alpha_hat),
-            goodput_est=np.asarray(est.goodput),
-            utility=float(self.utility.value(est.goodput)),
-            wall=np.asarray(jnp.stack([total, rt, vt, st])),
-            emitted=np.asarray(res.emitted))
+            S=np.asarray(S), accepted=np.asarray(m),
+            realized=np.asarray(realized), alpha_hat=np.asarray(alpha_hat),
+            goodput_est=np.asarray(goodput), utility=float(util),
+            wall=np.asarray(wall), emitted=np.asarray(emitted))
         return new_state, stats
 
     # ------------------------------------------------------------------
@@ -251,7 +389,8 @@ class GoodSpeedEngine:
                          pending: Array, draft_toks: Array, m: Array,
                          length: Array):
         """Recompute strategy: advance the PRE-CHUNK cache by the accepted
-        prefix [pending, d_1..d_m] only (masked chunk)."""
+        prefix [pending, d_1..d_m] only (masked chunk; m = -1 keeps the
+        row's checkpoint untouched)."""
         n, s_cap = draft_toks.shape
         chunk = jnp.concatenate([pending[:, None], draft_toks], axis=1)
         valid = jnp.arange(s_cap + 1)[None, :] <= m[:, None]
@@ -264,9 +403,109 @@ class GoodSpeedEngine:
     # ------------------------------------------------------------------
     def serve(self, key: Array, prompts: list[np.ndarray], draft_params,
               target_params, rounds: int) -> list[RoundStats]:
+        """Fixed-round simulator: every server decodes forever (no request
+        lifecycle).  The paper's Fig. 2-4 experiments run through here."""
         state = self.init(key, prompts, draft_params, target_params)
         history = []
         for _ in range(rounds):
             state, stats = self.run_round(state, draft_params, target_params)
             history.append(stats)
         return history
+
+    # ------------------------------------------------------------------
+    def serve_requests(self, key: Array, workload, draft_params,
+                       target_params, rounds: int,
+                       manager: Optional[RequestManager] = None) -> dict:
+        """Multi-user serving: drain a request workload with continuous
+        batching (the production loop; see module docstring).
+
+        workload: an iterable of ``Request`` (all arrive at round 0,
+        assigned round-robin over servers) or of ``(arrival_round, server,
+        Request)`` triples for timed arrivals.  Runs at most ``rounds``
+        rounds, stopping early once every request has completed.
+
+        Returns ``{"requests": [...], "rounds": [RoundStats...],
+        "summary": {...}}`` with per-request latency (arrival -> finish,
+        in rounds), queue delay, and token counts.  ``rounds_run`` counts
+        EXECUTED rounds; all-idle rounds spent waiting for future arrivals
+        only tick the clock.  Pass the returned manager back in (with more
+        rounds) to resume an interrupted drain — mid-flight requests are
+        re-prefilled from prompt + generated-so-far.
+        """
+        n = self.n_servers
+        mgr = manager if manager is not None else RequestManager(n)
+        sched = []
+        for j, item in enumerate(workload):
+            if isinstance(item, Request):
+                sched.append((0, j % n, item))
+            else:
+                arr, srv, req = item
+                sched.append((int(arr), int(srv) % n, req))
+        sched.sort(key=lambda x: x[0])
+
+        def ctx(req: Request) -> np.ndarray:
+            """Committed context of a request: prompt + tokens generated in
+            a previous (interrupted) serve_requests call."""
+            return np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(req.generated, np.int32)])
+
+        # All slots start idle and masked; first admission re-prefills.
+        state = self.cold_start(key)
+        # requests already active in a caller-supplied manager need their
+        # rows rebuilt too — this engine state starts cold
+        carried = [i for i in range(n) if mgr.active[i] is not None
+                   and not mgr.active[i].done]
+        prev_done = len(mgr.completed)     # completions from earlier calls
+        history: list[RoundStats] = []
+        next_arrival = 0
+        for r in range(rounds):
+            while next_arrival < len(sched) and sched[next_arrival][0] <= r:
+                _, srv, req = sched[next_arrival]
+                mgr.submit(srv, req)
+                next_arrival += 1
+            fresh = sorted(set(mgr.admit()) | set(carried))
+            carried = []
+            if fresh:
+                state = self._admit_rows(
+                    state, fresh, {i: ctx(mgr.active[i]) for i in fresh},
+                    draft_params, target_params,
+                    budgets={i: mgr.active[i].remaining for i in fresh})
+            if mgr.idle() and next_arrival >= len(sched):
+                break                      # workload drained
+            caps = mgr.remaining_caps()
+            if not caps.any():
+                mgr.tick()                 # all idle: await arrivals without
+                continue                   # burning a full model round
+            state, stats = self.run_round(state, draft_params, target_params,
+                                          caps=caps)
+            mgr.record_emitted(stats.emitted)
+            history.append(stats)
+        mgr.retire_done()                  # last-round completions (retire
+                                           # ONLY: admitting here would seat
+                                           # requests no round will serve)
+
+        # per-request records and throughput cover THIS call's completions;
+        # mgr.stats() keys keep the manager-lifetime view (resume-safe).
+        requests = [{
+            "request_id": req.request_id,
+            "arrival_round": req.arrival_round,
+            "admit_round": req.admit_round,
+            "finish_round": req.finish_round,
+            "latency_rounds": req.finish_round - req.arrival_round,
+            "queue_delay_rounds": (req.admit_round - req.arrival_round
+                                   if req.admit_round is not None else None),
+            "tokens": len(req.generated),
+            "generated": list(req.generated),
+        } for req in mgr.completed[prev_done:]]
+        rounds_run = len(history)
+        toks_done = sum(r["tokens"] for r in requests)
+        summary = dict(mgr.stats(),
+                       rounds_run=rounds_run,
+                       completed_this_call=len(requests),
+                       # workload items whose arrival_round fell past the
+                       # rounds budget — never submitted to the manager
+                       unsubmitted=len(sched) - next_arrival,
+                       tokens_per_round=toks_done / max(1, rounds_run),
+                       requests_per_round=len(requests) / max(1, rounds_run))
+        return {"requests": requests, "rounds": history, "summary": summary,
+                "state": state, "manager": mgr}

@@ -155,3 +155,31 @@ def rollback(cache, keep_pos: Array):
     drop = cache.pos_arr >= keep_pos[:, None]
     return cache._replace(pos_arr=jnp.where(drop, -1, cache.pos_arr),
                           next_pos=jnp.minimum(cache.next_pos, keep_pos))
+
+
+def reset_rows(cache, rows: Array):
+    """Invalidate ALL slots of the selected rows (bool[B]) — used when a
+    fresh request is admitted into a draft-server slot.  Stale K/V values
+    stay in memory but are unreachable (pos_arr == -1 masks them)."""
+    return cache._replace(
+        pos_arr=jnp.where(rows[:, None], -1, cache.pos_arr),
+        next_pos=jnp.where(rows, 0, cache.next_pos))
+
+
+def prefill_rows(cache, new_values: tuple, lengths: Array, rows: Array,
+                 ring: bool = False):
+    """Per-row re-prefill: rows where ``rows[b]`` is True are replaced by a
+    fresh prefill of ``new_values``/``lengths`` (see ``write_prefill``);
+    all other rows keep their existing contents untouched.  Single-cache
+    primitive of the continuous-batching admission row-turnover; the
+    serving engine applies the same row-select at the stack-cache level
+    (``engine._merge_cache_rows``) since per-layer K/V is produced inside
+    ``model.forward``."""
+    fresh = write_prefill(reset_rows(cache, rows), new_values, lengths,
+                          ring=ring)
+
+    def sel(new, old):
+        mask = rows.reshape((-1,) + (1,) * (old.ndim - 1))
+        return jnp.where(mask, new, old)
+
+    return jax.tree.map(sel, fresh, cache)

@@ -32,6 +32,7 @@ class Request:
     # lifecycle
     generated: list = dataclasses.field(default_factory=list)
     arrival_round: int = 0
+    admit_round: Optional[int] = None
     finish_round: Optional[int] = None
 
     @property
@@ -60,45 +61,80 @@ class RequestManager:
         request.arrival_round = self.round
         self.queues[server].append(request)
 
+    def retire_done(self) -> list[int]:
+        """Move done active requests to ``completed``; returns their
+        servers.  A done request retires even when its queue is empty —
+        the slot goes idle (``remaining_caps`` reports 0) rather than
+        holding a finished request forever."""
+        retired = []
+        for i in range(self.n):
+            if self.active[i] is not None and self.active[i].done:
+                self.active[i].finish_round = self.round
+                self.completed.append(self.active[i])
+                self.active[i] = None
+                retired.append(i)
+        return retired
+
     def admit(self) -> list[int]:
-        """Fill empty slots from the FIFO queues; returns servers that got a
-        NEW request this call (their caches need re-prefilling)."""
+        """Retire done active requests, then fill empty slots from the FIFO
+        queues; returns servers that got a NEW request this call (their
+        caches need re-prefilling)."""
+        self.retire_done()
         fresh = []
         for i in range(self.n):
-            if (self.active[i] is None or self.active[i].done) \
-                    and self.queues[i]:
-                if self.active[i] is not None and self.active[i].done:
-                    self.active[i].finish_round = self.round
-                    self.completed.append(self.active[i])
+            if self.active[i] is None and self.queues[i]:
                 self.active[i] = self.queues[i].popleft()
+                self.active[i].admit_round = self.round
                 fresh.append(i)
         return fresh
 
     # -- round bookkeeping ---------------------------------------------------
     def record_emitted(self, emitted: np.ndarray) -> None:
-        """emitted: i32[N, S+1], -1 padded (engine RoundStats.emitted)."""
+        """emitted: i32[N, S+1], -1 padded (engine RoundStats.emitted).
+
+        Tokens are truncated at the request's cap AND at the first EOS
+        token (the EOS itself is kept so ``done`` observes it); anything
+        past EOS never enters ``generated``, keeping ``remaining``, goodput
+        accounting, and returned text consistent with completion."""
         for i in range(self.n):
             req = self.active[i]
             if req is None:
                 continue
             toks = [int(t) for t in emitted[i] if t >= 0]
+            if req.eos_token >= 0 and req.eos_token in toks:
+                toks = toks[: toks.index(req.eos_token) + 1]
             room = req.remaining
             req.generated.extend(toks[:room])
         self.round += 1
 
+    def tick(self) -> None:
+        """Advance the round clock without emissions — an all-idle round
+        spent waiting for future arrivals."""
+        self.round += 1
+
     # -- dense views for the jit'd loop --------------------------------------
     def remaining_caps(self) -> np.ndarray:
-        """i32[N] remaining tokens per server (0 where idle) — feeds
-        GOODSPEED-SCHED's s_max."""
+        """i32[N] remaining tokens per server (0 where idle or done — an
+        EOS-finished request may have cap budget left but must not be
+        scheduled) — feeds GOODSPEED-SCHED's s_max."""
         return np.asarray(
-            [r.remaining if r is not None else 0 for r in self.active],
-            np.int32)
+            [r.remaining if r is not None and not r.done else 0
+             for r in self.active], np.int32)
+
+    def idle(self) -> bool:
+        """True when nothing is in flight anywhere (drain detection)."""
+        return all(r is None or r.done for r in self.active) \
+            and not any(self.queues)
 
     def stats(self) -> dict:
         lat = [r.finish_round - r.arrival_round for r in self.completed]
+        qd = [r.admit_round - r.arrival_round for r in self.completed
+              if r.admit_round is not None]
         return {
             "completed": len(self.completed),
             "queued": sum(len(q) for q in self.queues),
             "active": sum(r is not None and not r.done for r in self.active),
             "mean_latency_rounds": float(np.mean(lat)) if lat else 0.0,
+            "mean_queue_delay_rounds": float(np.mean(qd)) if qd else 0.0,
+            "tokens_generated": sum(len(r.generated) for r in self.completed),
         }

@@ -77,6 +77,7 @@ SMOKE_COMBOS = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", SMOKE_COMBOS)
 def test_dryrun_debug_mesh(arch, shape, tmp_path):
     """lower+compile on a forced-8-host-device (2,4) mesh: proves the

@@ -8,6 +8,7 @@ from repro.configs import get_reduced
 from repro.data.pipeline import SyntheticDomain, make_workload
 from repro.models import Model
 from repro.serving.engine import GoodSpeedEngine
+from repro.serving.request import Request, RequestManager
 
 
 def _tiny(arch, vocab=64, **kw):
@@ -134,6 +135,180 @@ class TestEngineBasics:
             ref = tm.forward(tp, toks, mode="train").logits[0, -1]
             err = float(jnp.max(jnp.abs(out_eng.logits[i, 0] - ref)))
             assert err < 3e-3, f"row {i}: recompute cache drift {err}"
+
+
+class TestServeRequests:
+    """Request-lifecycle serving loop: continuous batching over more
+    requests than draft servers."""
+
+    def _requests(self, k, vocab=64, max_new=5, seed=11):
+        rng = np.random.default_rng(seed)
+        return [Request(prompt=SyntheticDomain("alpaca", vocab, 50 + i)
+                        .sample_prompt(rng)[:8], max_new_tokens=max_new)
+                for i in range(k)]
+
+    def test_drains_oversubscribed_workload(self, dense_pair):
+        """7 requests on 2 servers: all complete, every request gets its
+        full token budget, and latency/goodput stats are reported."""
+        dm, tm, dp, tp = dense_pair
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=2,
+                              C=8, s_max=4, cache_len=128)
+        rep = eng.serve_requests(jax.random.PRNGKey(0), self._requests(7),
+                                 dp, tp, rounds=60)
+        assert rep["summary"]["completed"] == 7
+        assert rep["summary"]["queued"] == 0
+        assert rep["summary"]["active"] == 0
+        for r in rep["requests"]:
+            assert r["tokens"] == 5
+            assert r["finish_round"] > r["arrival_round"]
+            assert r["latency_rounds"] >= 1
+        # early admissions should not wait; later ones queue behind them
+        delays = [r["queue_delay_rounds"] for r in rep["requests"]]
+        assert min(delays) == 0 and max(delays) >= 1
+
+    def test_idle_servers_get_zero_budget(self, dense_pair):
+        """With a single 1-request workload on server 0, server 1 is idle:
+        zero scheduler budget, nothing emitted, cache row untouched."""
+        dm, tm, dp, tp = dense_pair
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=2,
+                              C=8, s_max=4, cache_len=128)
+        req = self._requests(1, max_new=6)[0]
+        rep = eng.serve_requests(jax.random.PRNGKey(1), [(0, 0, req)],
+                                 dp, tp, rounds=40)
+        assert rep["summary"]["completed"] == 1
+        for h in rep["rounds"]:
+            assert h.S[1] == 0
+            assert h.realized[1] == 0
+            assert np.all(h.emitted[1] == -1)
+
+    def test_timed_arrivals_and_caches_consistent(self, dense_pair):
+        """Staggered arrivals: fresh admissions re-prefill their rows
+        mid-run and every row's cache stays equal to a from-scratch
+        recompute of its committed sequence."""
+        dm, tm, dp, tp = dense_pair
+        n, vocab = 2, 64
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=n,
+                              C=6, s_max=3, cache_len=96)
+        reqs = self._requests(5, max_new=4, seed=13)
+        workload = [(j, j % n, r) for j, r in enumerate(reqs)]
+        mgr = RequestManager(n)
+        state = eng.init(jax.random.PRNGKey(2),
+                         [np.zeros(1, np.int32)] * n, dp, tp)
+        committed = [[0] for _ in range(n)]
+        next_arr = 0
+        for r in range(40):
+            while next_arr < len(workload) and workload[next_arr][0] <= r:
+                mgr.submit(workload[next_arr][1], workload[next_arr][2])
+                next_arr += 1
+            fresh = mgr.admit()
+            if fresh:
+                state = eng._admit_rows(
+                    state, fresh, {i: mgr.active[i].prompt for i in fresh},
+                    dp, tp)
+                for i in fresh:
+                    committed[i] = list(mgr.active[i].prompt)
+            if mgr.idle() and next_arr >= len(workload):
+                break
+            caps = mgr.remaining_caps()
+            state, stats = eng.run_round(state, dp, tp, caps=caps)
+            mgr.record_emitted(stats.emitted)
+            for i in range(n):
+                if caps[i] > 0:
+                    row = stats.emitted[i]
+                    committed[i].extend(int(t) for t in row[row >= 0])
+        mgr.admit()
+        assert mgr.stats()["completed"] == 5
+        out_eng = tm.forward(tp, state.pending[:, None], mode="decode",
+                             cache=state.target_cache,
+                             positions=state.length[:, None])
+        for i in range(n):
+            toks = jnp.asarray(committed[i], jnp.int32)[None, :]
+            ref = tm.forward(tp, toks, mode="train").logits[0, -1]
+            err = float(jnp.max(jnp.abs(out_eng.logits[i, 0] - ref)))
+            assert err < 3e-3, f"row {i}: cache drift {err}"
+
+    def test_interrupted_drain_resumes_with_manager(self, dense_pair):
+        """A rounds budget too small to drain: the post-loop step retires
+        only (never seats a request no round will serve), and resuming
+        with the same manager re-prefills mid-flight requests from
+        prompt + generated-so-far and completes everything."""
+        dm, tm, dp, tp = dense_pair
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=1,
+                              C=4, s_max=2, cache_len=128)
+        reqs = self._requests(3, max_new=6, seed=17)
+        mgr = RequestManager(1)
+        rep1 = eng.serve_requests(jax.random.PRNGKey(4), reqs, dp, tp,
+                                  rounds=2, manager=mgr)
+        s1 = rep1["summary"]
+        assert s1["completed"] < 3
+        # an unfinished in-flight request may remain active; none of the
+        # queued ones may have been seated post-loop with zero rounds left
+        for req in mgr.active:
+            assert req is None or not req.done
+        mid = [r for r in mgr.active if r is not None]
+        rep2 = eng.serve_requests(jax.random.PRNGKey(5), [], dp, tp,
+                                  rounds=60, manager=mgr)
+        assert rep2["summary"]["completed"] == 3          # manager lifetime
+        # per-call records/throughput cover only this call's completions
+        assert rep2["summary"]["completed_this_call"] == len(rep2["requests"])
+        assert rep1["summary"]["completed_this_call"] \
+            + rep2["summary"]["completed_this_call"] == 3
+        for r in rep2["requests"]:
+            assert r["tokens"] == 6
+        # the resumed request kept its pre-interruption tokens
+        if mid:
+            done = next(r for r in rep2["requests"]
+                        if r["request_id"] == mid[0].request_id)
+            assert done["tokens"] == 6
+
+    def test_arrival_gap_ticks_without_rounds(self, dense_pair):
+        """A gap before a late arrival must not burn model rounds: the
+        clock ticks, rounds_run counts only executed rounds, and latency
+        still measures from arrival."""
+        dm, tm, dp, tp = dense_pair
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=2,
+                              C=8, s_max=4, cache_len=128)
+        req = self._requests(1, max_new=4, seed=19)[0]
+        rep = eng.serve_requests(jax.random.PRNGKey(6), [(10, 0, req)],
+                                 dp, tp, rounds=40)
+        s = rep["summary"]
+        assert s["completed"] == 1
+        assert s["unsubmitted"] == 0
+        r = rep["requests"][0]
+        assert r["arrival_round"] == 10 and r["admit_round"] == 10
+        # rounds 0..9 were idle ticks, not executed engine rounds
+        assert s["rounds_run"] <= 6
+        # an arrival past the budget is counted, not silently dropped
+        late = self._requests(1, max_new=4, seed=23)[0]
+        rep2 = eng.serve_requests(jax.random.PRNGKey(7), [(100, 0, late)],
+                                  dp, tp, rounds=20)
+        assert rep2["summary"]["completed"] == 0
+        assert rep2["summary"]["unsubmitted"] == 1
+
+    def test_eos_stops_generation(self):
+        """Draft == target with a forced-EOS vocab distribution: requests
+        finish on EOS before their cap and generated text stops at EOS."""
+        cfg = _tiny("qwen3-8b", vocab=16)
+        m = Model(cfg)
+        p = m.init(jax.random.PRNGKey(0))
+        eng = GoodSpeedEngine(draft_model=m, target_model=m, n_servers=2,
+                              C=6, s_max=3, cache_len=128)
+        reqs = [Request(prompt=np.asarray([1, 2, 3], np.int32),
+                        max_new_tokens=40, eos_token=e)
+                for e in (4, 7, 4, 7)]
+        rep = eng.serve_requests(jax.random.PRNGKey(3), reqs, p, p,
+                                 rounds=80)
+        assert rep["summary"]["completed"] == 4
+        eos_of = {q.request_id: q.eos_token for q in reqs}
+        hit = 0
+        for r in rep["requests"]:
+            g = r["generated"]
+            eos = eos_of[r["request_id"]]
+            if eos in g:
+                hit += 1
+                assert g.index(eos) == len(g) - 1, g
+                assert r["tokens"] < 40            # finished early on EOS
+        assert hit > 0   # a 16-token vocab must hit EOS within 40 draws
 
 
 class TestEngineScheduling:

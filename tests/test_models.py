@@ -119,6 +119,35 @@ class TestKVCache:
         pos = np.asarray(cache.pos_arr)
         assert pos[0].max() == 3 and np.asarray(cache.next_pos)[0] == 4
 
+    def test_reset_and_prefill_rows(self):
+        """Continuous-batching admission: one row re-prefills, neighbours
+        keep their contents bit-exact."""
+        from repro.serving.kv_cache import prefill_rows, reset_rows
+        rng = np.random.default_rng(0)
+        k0 = jnp.asarray(rng.normal(size=(2, 5, 1, 4)), jnp.float32)
+        cache = write_prefill(init_attn_cache(2, 8, 1, 4, jnp.float32),
+                              (k0, k0 * 2), jnp.asarray([5, 4]))
+        rows = jnp.asarray([True, False])
+        cleared = reset_rows(cache, rows)
+        assert np.all(np.asarray(cleared.pos_arr)[0] == -1)
+        assert np.asarray(cleared.next_pos).tolist() == [0, 4]
+        np.testing.assert_array_equal(np.asarray(cleared.pos_arr)[1],
+                                      np.asarray(cache.pos_arr)[1])
+        # re-prefill row 0 with a 3-token prompt; row 1 must be untouched
+        k1 = jnp.asarray(rng.normal(size=(2, 3, 1, 4)), jnp.float32)
+        out = prefill_rows(cache, (k1, k1), jnp.asarray([3, 0]), rows)
+        np.testing.assert_array_equal(np.asarray(out.pos_arr)[0],
+                                      [0, 1, 2, -1, -1, -1, -1, -1])
+        np.testing.assert_allclose(np.asarray(out.k)[0, :3],
+                                   np.asarray(k1)[0], atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(out.pos_arr)[1],
+                                      np.asarray(cache.pos_arr)[1])
+        np.testing.assert_allclose(np.asarray(out.k)[1],
+                                   np.asarray(cache.k)[1], atol=1e-6)
+        np.testing.assert_allclose(np.asarray(out.v)[1],
+                                   np.asarray(cache.v)[1], atol=1e-6)
+        assert np.asarray(out.next_pos).tolist() == [3, 4]
+
     @sweep(cases=15, seed=4)
     def test_ring_prefill_equals_chunked(self, draw):
         """Bulk ring prefill == writing the same tokens one by one."""

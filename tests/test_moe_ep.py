@@ -5,6 +5,8 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = r"""
@@ -43,6 +45,7 @@ for arch in ("qwen3-moe-235b-a22b", "deepseek-v2-lite-16b"):
 """
 
 
+@pytest.mark.slow
 def test_moe_expert_parallel_equivalence(tmp_path):
     script = tmp_path / "moe_ep.py"
     script.write_text(SCRIPT)

@@ -91,6 +91,44 @@ class TestRequestManager:
         assert rm.active[0].generated == [1, 2, 3, 4, 5]
         assert not rm.active[1].done
 
+    def test_done_request_retires_with_empty_queue(self):
+        """A finished request must move to ``completed`` even when no
+        successor is queued — the slot goes idle, not zombie."""
+        rm = RequestManager(1)
+        rm.submit(0, Request(prompt=np.zeros(2, np.int32), max_new_tokens=2))
+        rm.admit()
+        rm.record_emitted(np.asarray([[7, 9, -1]], np.int32))
+        assert rm.active[0].done
+        fresh = rm.admit()                 # queue is EMPTY
+        assert fresh == []
+        assert rm.active[0] is None
+        st = rm.stats()
+        assert st["completed"] == 1
+        assert st["active"] == 0
+        np.testing.assert_array_equal(rm.remaining_caps(), [0])
+
+    def test_eos_truncates_generated(self):
+        """Tokens past the first EOS never enter ``generated``: remaining,
+        goodput accounting and returned text stay consistent with done."""
+        rm = RequestManager(1)
+        rm.submit(0, Request(prompt=np.zeros(2, np.int32),
+                             max_new_tokens=10, eos_token=42))
+        rm.admit()
+        rm.record_emitted(np.asarray([[5, 42, 7, 8]], np.int32))
+        req = rm.active[0]
+        assert req.generated == [5, 42]    # EOS kept, tail dropped
+        assert req.done
+        assert req.remaining == 8          # consistent with truncation
+        np.testing.assert_array_equal(rm.remaining_caps(), [0])
+
+    def test_admit_round_recorded(self):
+        rm = RequestManager(1)
+        rm.submit(0, Request(prompt=np.zeros(2, np.int32), max_new_tokens=2))
+        rm.record_emitted(np.asarray([[-1]], np.int32))   # a round passes
+        rm.admit()
+        assert rm.active[0].arrival_round == 0
+        assert rm.active[0].admit_round == 1
+
     def test_eos_completion_and_refill(self):
         rm = RequestManager(1)
         rm.submit(0, Request(prompt=np.zeros(2, np.int32),

@@ -115,3 +115,55 @@ class TestSchedulerBehaviour:
                               jnp.asarray([1.0, 1.0]), 8)
         assert np.isfinite(float(out.objective))
         assert int(jnp.sum(out.S)) == 8
+
+
+class TestZeroCapRows:
+    """Idle draft servers (remaining cap 0) must get S_i = 0 INSIDE the
+    solver, with their share of the budget flowing to live servers —
+    completion-aware scheduling for the request-lifecycle serve loop."""
+
+    def test_threshold_and_greedy_zero_caps(self):
+        alpha = jnp.asarray([0.9, 0.8, 0.7, 0.6])
+        w = jnp.ones((4,))
+        cap = jnp.asarray([0, 6, 0, 6], jnp.int32)
+        for solver in (solve_threshold, solve_greedy):
+            out = solver(alpha, w, 10, s_max=cap)
+            S = np.asarray(out.S)
+            assert S[0] == 0 and S[2] == 0, S
+            # the idle budget lands on the live rows (caps allow 12 >= 10)
+            assert S.sum() == 10, S
+
+    def test_all_rows_idle(self):
+        alpha = jnp.asarray([0.5, 0.5])
+        w = jnp.ones((2,))
+        cap = jnp.zeros((2,), jnp.int32)
+        for solver in (solve_threshold, solve_greedy):
+            out = solver(alpha, w, 8, s_max=cap)
+            assert int(jnp.sum(out.S)) == 0
+
+    @sweep(cases=15, seed=7)
+    def test_random_idle_patterns(self, draw):
+        n = draw.integers(2, 10)
+        C = draw.integers(2, 40)
+        alpha = jnp.asarray(draw.float_array((n,), 0.05, 0.95))
+        w = jnp.asarray(draw.float_array((n,), 0.1, 4.0))
+        cap = jnp.asarray(draw.int_array((n,), 0, 8), jnp.int32)
+        out = solve_threshold(alpha, w, C, s_max=cap)
+        S = np.asarray(out.S)
+        assert np.all(S[np.asarray(cap) == 0] == 0)
+        assert np.all(S <= np.asarray(cap))
+        assert S.sum() == min(C, int(np.asarray(cap).sum()))
+
+    def test_make_scheduler_routes_and_caps(self):
+        from repro.core.scheduler import make_scheduler
+        alpha = jnp.asarray([0.8, 0.6, 0.4])
+        w = jnp.ones((3,))
+        cap = jnp.asarray([0, 5, 5], jnp.int32)
+        key = jax.random.PRNGKey(0)
+        for name in ("goodspeed", "greedy", "fixed", "random"):
+            S = np.asarray(make_scheduler(name)(alpha, w, 6, key=key,
+                                                s_max=cap))
+            assert S[0] == 0, (name, S)
+            assert S.sum() <= 6 and np.all(S <= np.asarray(cap)), (name, S)
+        with pytest.raises(ValueError):
+            make_scheduler("nope")

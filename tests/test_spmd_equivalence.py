@@ -78,6 +78,7 @@ print("train-equivalence OK", d)
 """
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["spmd"])
 def test_spmd_numeric_equivalence(name, tmp_path):
     script = tmp_path / "spmd_check.py"
