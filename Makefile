@@ -1,0 +1,13 @@
+# Convenience targets; the documented tier-1 command is
+#   PYTHONPATH=src python -m pytest -x -q
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+docs-check:
+	PYTHONPATH=src python -m scripts.check_docs
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run
+
+.PHONY: test docs-check bench

@@ -6,6 +6,11 @@ horizon, exponential-ish inter-arrival gaps, round-robin server affinity,
 heterogeneous per-request token budgets.  Reports request throughput
 (completions and tokens per round) and mean completion latency (arrival ->
 finish, in rounds) for the goodspeed policy vs the fixed-S baseline.
+
+Also measures single-request ADMISSION cost vs batch size (B in {4, 16,
+64}): the static path re-prefills the full batch and row-merges, so its
+cost grows with B; the paged path prefills only the admitted row into the
+shared block pool, so its cost is ~flat in B.
 """
 from __future__ import annotations
 
@@ -21,6 +26,8 @@ from repro.serving.engine import GoodSpeedEngine
 from repro.serving.request import Request
 
 N, K, ROUNDS, VOCAB = 4, 16, 80, 256
+ADMIT_BATCHES = (4, 16, 64)
+ADMIT_PROMPT_LEN = 96
 
 
 def _workload(seed: int = 0):
@@ -37,6 +44,40 @@ def _workload(seed: int = 0):
     return items
 
 
+def admission_cost(draft, target, dp, tp):
+    """us per single-request admission at growing batch sizes.
+
+    Warmup + median over repeats; each admission seats one fresh request
+    into row 0 of a B-row engine (the production continuous-batching
+    event).  us column = median admission cost; derived column = the same
+    in ms.  The paged rows should stay ~flat while static rows grow
+    with B."""
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, VOCAB, size=ADMIT_PROMPT_LEN).astype(np.int32)
+    out = []
+    for mode, paged in (("static", False), ("paged", True)):
+        for b in ADMIT_BATCHES:
+            eng = GoodSpeedEngine(draft_model=draft, target_model=target,
+                                  n_servers=b, C=12, s_max=6,
+                                  cache_len=256, paged_kv=paged,
+                                  kv_block_size=16)
+            state = eng.cold_start(jax.random.PRNGKey(0))
+            times = []
+            for it in range(4):
+                t0 = time.perf_counter()
+                state = eng._admit_rows(state, [0], {0: prompt}, dp, tp)
+                # block on the CACHES: pending has no data dependency on
+                # the prefill, so syncing on it would time dispatch only
+                jax.block_until_ready(jax.tree.leaves(
+                    (state.target_cache, state.draft_cache)))
+                if it > 0:       # first call pays tracing/alloc warmup
+                    times.append((time.perf_counter() - t0) * 1e6)
+            out.append((f"admit_one_request_{mode}_B{b}_us",
+                        round(float(np.median(times)), 0),
+                        round(float(np.median(times)) / 1e3, 1)))
+    return out
+
+
 def run():
     draft = Model(get_reduced("olmo-1b", num_layers=2, d_model=64,
                               num_heads=2, num_kv_heads=2, head_dim=32,
@@ -46,7 +87,7 @@ def run():
                                d_ff=256, vocab_size=VOCAB))
     dp = draft.init(jax.random.PRNGKey(0))
     tp = target.init(jax.random.PRNGKey(1))
-    rows = []
+    rows = list(admission_cost(draft, target, dp, tp))
     for pol in ("goodspeed", "fixed"):
         eng = GoodSpeedEngine(draft_model=draft, target_model=target,
                               n_servers=N, C=12, s_max=6, cache_len=256,

@@ -1,0 +1,116 @@
+"""Docs/README consistency check: fail when documentation names modules,
+attributes, or files that no longer exist.
+
+Checked, across README.md and docs/*.md:
+  * backticked dotted references (`repro.serving.engine.GoodSpeedEngine`)
+    must import / resolve attribute-by-attribute;
+  * backticked file paths (`benchmarks/serve_requests.py`) must exist in
+    the repo (directly or uniquely by basename, so tables can shorten
+    `docs/ARCHITECTURE.md` to `ARCHITECTURE.md`);
+  * inside fenced code blocks: ``python -m pkg.mod`` targets must import
+    and path-like tokens ending in .py/.md must exist.
+
+Run: ``python -m scripts.check_docs`` (or ``make docs-check``).  Also
+wired into tier-1 as ``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_DOTTED = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+_TICKED_PATH = re.compile(r"`([A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:py|md))`")
+_FENCE = re.compile(r"```[a-z]*\n(.*?)```", re.S)
+_PY_M = re.compile(r"python -m ([A-Za-z_][A-Za-z0-9_.]*)")
+_BLOCK_PATH = re.compile(r"(?:^|[\s=(])([A-Za-z0-9_][A-Za-z0-9_./-]*"
+                         r"\.(?:py|md))")
+
+
+def _doc_files() -> list[pathlib.Path]:
+    docs = sorted((ROOT / "docs").glob("*.md")) if (ROOT / "docs").is_dir() \
+        else []
+    readme = ROOT / "README.md"
+    return ([readme] if readme.exists() else []) + docs
+
+
+def _importable(dotted: str) -> bool:
+    """True if ``dotted`` resolves to a module, or to an attribute chain
+    hanging off the longest importable module prefix."""
+    parts = dotted.split(".")
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError:
+            continue
+        for attr in parts[i:]:
+            if not hasattr(obj, attr):
+                return False
+            obj = getattr(obj, attr)
+        return True
+    return False
+
+
+# roots searched for basename-only references; deliberately NOT the whole
+# tree, so a stray same-named file in a vendored/experiment directory
+# cannot mask a renamed source file
+_BASENAME_ROOTS = ("src", "docs", "scripts", "benchmarks", "examples",
+                   "tests")
+
+
+def _path_exists(p: str) -> bool:
+    if (ROOT / p).exists():
+        return True
+    # allow basename-only references (e.g. `scheduler.py` in a table row
+    # whose Path column already names src/repro/core/) within the known
+    # source roots
+    if "/" not in p:
+        return any(next((ROOT / r).glob(f"**/{p}"), None) is not None
+                   for r in _BASENAME_ROOTS if (ROOT / r).is_dir())
+    return False
+
+
+def collect_errors() -> list[str]:
+    for path in (str(ROOT / "src"), str(ROOT)):
+        if path not in sys.path:
+            sys.path.insert(0, path)
+    errors: list[str] = []
+    for doc in _doc_files():
+        text = doc.read_text()
+        rel = doc.relative_to(ROOT)
+        for dotted in sorted(set(_DOTTED.findall(text))):
+            if not _importable(dotted):
+                errors.append(f"{rel}: unresolvable reference "
+                              f"`{dotted}`")
+        for p in sorted(set(_TICKED_PATH.findall(text))):
+            if not _path_exists(p):
+                errors.append(f"{rel}: missing file `{p}`")
+        for block in _FENCE.findall(text):
+            for mod in sorted(set(_PY_M.findall(block))):
+                if not _importable(mod):
+                    errors.append(f"{rel}: code block runs "
+                                  f"`python -m {mod}` but it does not "
+                                  f"import")
+            for p in sorted(set(_BLOCK_PATH.findall(block))):
+                if not _path_exists(p):
+                    errors.append(f"{rel}: code block references "
+                                  f"missing file `{p}`")
+    return errors
+
+
+def main() -> int:
+    docs = _doc_files()
+    errors = collect_errors()
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_docs: {len(docs)} docs OK "
+              f"({', '.join(str(d.relative_to(ROOT)) for d in docs)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,6 +14,11 @@ accumulator (flash attention in pure jnp).  This keeps the prefill memory
 footprint at O(S·block) instead of O(S²) — required for the 32k prefill
 shape — and is also the jnp oracle for the Pallas kernels in
 ``repro.kernels``.
+
+Paged caches (block-pool storage; see docs/KV_CACHE.md) attend through
+``paged_dot_attention``: the per-row block table gathers a logical
+[B, L, KV, hd] view of the pool, after which the same masking contract
+(explicit kv positions + validity) applies unchanged.
 """
 from __future__ import annotations
 
@@ -26,6 +31,7 @@ import jax.numpy as jnp
 from repro.configs.base import MLAConfig, ModelConfig
 from repro.models.layers import (_dense_init, apply_head_norm, apply_rope,
                                  init_head_norm)
+from repro.serving.kv_cache import paged_view
 
 Array = jnp.ndarray
 
@@ -111,6 +117,17 @@ def dot_attention(
                                       jnp.arange(n_blocks))
     out = acc / jnp.maximum(l_f, 1e-30)[..., None]
     return out.reshape(b, sq, h, vd).astype(q.dtype)
+
+
+def paged_dot_attention(q: Array, cache, q_pos: Array,
+                        softcap: float = 0.0) -> Array:
+    """Attention over a ``PagedAttnCache``: gather the block-table view of
+    the K/V pools, then run the standard blockwise core.  Paged caches are
+    full-attention only (sliding-window layers keep O(window) ring
+    buffers), so there is no window argument."""
+    k, v = paged_view(cache)
+    return dot_attention(q, k, v, q_pos, cache.pos_arr,
+                         cache.pos_arr >= 0, softcap=softcap)
 
 
 # ---------------------------------------------------------------------------

@@ -92,13 +92,19 @@ class Model:
 
     # ------------------------------------------------------------------
     def init_cache(self, batch: int, cache_len: int, dtype=None,
-                   ring_headroom: int = 0):
+                   ring_headroom: int = 0, paged: bool = False,
+                   block_size: int = 16, num_blocks: int = 0):
         """ring_headroom: extra ring slots for chunked decode — see
         ``init_block_cache``; pass chunk_len - 1 when decoding S-token
-        chunks against sliding-window layers."""
+        chunks against sliding-window layers.
+
+        paged: full-attention layers use block-pool caches (shared pool +
+        per-row block table; docs/KV_CACHE.md) so serving admission can
+        free/reuse blocks per row instead of re-prefilling whole rows."""
         dtype = dtype or jnp.dtype(self.cfg.dtype)
         return init_stack_cache(self.cfg, batch, cache_len, dtype,
-                                ring_headroom)
+                                ring_headroom, paged, block_size,
+                                num_blocks)
 
     # ------------------------------------------------------------------
     def encode(self, params, audio_embeds: Array) -> Array:

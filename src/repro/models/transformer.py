@@ -28,11 +28,14 @@ from repro.models import ssm
 from repro.models.attention import (apply_cross_attention, attention_out,
                                     attention_qkv, dot_attention,
                                     init_attention, init_mla, mla_attend,
-                                    mla_project)
+                                    mla_project, paged_dot_attention)
 from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
 from repro.models.moe import apply_moe, init_moe
-from repro.serving.kv_cache import (AttnCache, MLACache, init_attn_cache,
-                                    init_mla_cache, write_chunk, write_prefill)
+from repro.serving.kv_cache import (AttnCache, MLACache, PagedMLACache,
+                                    PAGED_TYPES, init_attn_cache,
+                                    init_mla_cache, init_paged_attn_cache,
+                                    init_paged_mla_cache, paged_view,
+                                    write_chunk, write_prefill)
 
 Array = jnp.ndarray
 
@@ -80,7 +83,9 @@ def init_block(key, kind: str, cfg: ModelConfig, dtype):
 
 
 def init_block_cache(kind: str, cfg: ModelConfig, batch: int,
-                     cache_len: int, dtype, ring_headroom: int = 0):
+                     cache_len: int, dtype, ring_headroom: int = 0,
+                     paged: bool = False, block_size: int = 16,
+                     num_blocks: int = 0):
     """Zero cache/state for one block.  cache_len applies to attention kinds;
     sliding/local kinds allocate min(cache_len, window) ring buffers.
 
@@ -89,11 +94,24 @@ def init_block_cache(kind: str, cfg: ModelConfig, batch: int,
     sized exactly ``window`` evicts up to S-1 of the oldest keys the
     chunk's first queries still need.  Chunked-decode callers (the
     speculative verify path) must pass ``chunk_len - 1`` headroom; the
-    window mask keeps the extra older keys out of attention."""
+    window mask keeps the extra older keys out of attention.
+
+    paged: full-attention kinds allocate block-pool caches (GQA or MLA)
+    with the given block_size / pool size (num_blocks = 0 auto-sizes; see
+    ``init_paged_attn_cache``).  Ring and recurrent kinds are already
+    O(window)/O(1) per row and keep their static layouts."""
     if kind in ATTN_KINDS:
         ring = _is_ring(kind, cfg)
         length = (min(cache_len, cfg.window) + ring_headroom) if ring \
             else cache_len
+        if paged and not ring:
+            if cfg.mla is not None:
+                return init_paged_mla_cache(
+                    batch, length, cfg.mla.kv_lora_rank,
+                    cfg.mla.qk_rope_head_dim, dtype, block_size, num_blocks)
+            return init_paged_attn_cache(
+                batch, length, cfg.num_kv_heads, cfg.resolved_head_dim,
+                dtype, block_size, num_blocks)
         if cfg.mla is not None:
             return init_mla_cache(batch, length, cfg.mla.kv_lora_rank,
                                   cfg.mla.qk_rope_head_dim, dtype)
@@ -143,8 +161,12 @@ def _attend(params, kind, cfg: ModelConfig, x_norm, positions, cache, mode,
         else:
             cache = write_chunk(cache, (chunk.c_kv, chunk.k_pe), chunk_valid,
                                 ring=ring)
+        if isinstance(cache, PagedMLACache):
+            ckv_all, kpe_all = paged_view(cache)
+        else:
+            ckv_all, kpe_all = cache.ckv, cache.kpe
         valid = cache.pos_arr >= 0
-        out = mla_attend(params["attn"], chunk, cache.ckv, cache.kpe, cfg,
+        out = mla_attend(params["attn"], chunk, ckv_all, kpe_all, cfg,
                          positions, cache.pos_arr, valid)
         return out, cache
 
@@ -163,9 +185,13 @@ def _attend(params, kind, cfg: ModelConfig, x_norm, positions, cache, mode,
         cache = write_prefill(cache, (k, v), lengths, ring=ring)
     else:
         cache = write_chunk(cache, (k, v), chunk_valid, ring=ring)
-    valid = cache.pos_arr >= 0
-    ctx = dot_attention(q, cache.k, cache.v, positions, cache.pos_arr,
-                        valid, window=window, softcap=cfg.logit_softcap)
+    if isinstance(cache, PAGED_TYPES):
+        ctx = paged_dot_attention(q, cache, positions,
+                                  softcap=cfg.logit_softcap)
+    else:
+        valid = cache.pos_arr >= 0
+        ctx = dot_attention(q, cache.k, cache.v, positions, cache.pos_arr,
+                            valid, window=window, softcap=cfg.logit_softcap)
     return attention_out(params["attn"], ctx), cache
 
 
@@ -255,18 +281,23 @@ def init_stack(key, cfg: ModelConfig, dtype):
 
 
 def init_stack_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
-                     ring_headroom: int = 0):
+                     ring_headroom: int = 0, paged: bool = False,
+                     block_size: int = 16, num_blocks: int = 0):
     pattern, groups, rest = stack_layout(cfg)
     cache = {"scan": {}, "rest": {}}
-    for i, kind in enumerate(pattern):
+    # groups == 0 (num_layers < pattern length): apply_stack skips the scan
+    # entirely and returns scan={}, so the init structure must match or
+    # row-merge admission on a cold-start cache hits a treedef mismatch.
+    for i, kind in enumerate(pattern if groups > 0 else ()):
         one = init_block_cache(kind, cfg, batch, cache_len, dtype,
-                               ring_headroom)
+                               ring_headroom, paged, block_size, num_blocks)
         cache["scan"][f"slot{i}"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (groups,) + a.shape), one)
     for j, kind in enumerate(rest):
         cache["rest"][f"layer{j}"] = init_block_cache(kind, cfg, batch,
                                                       cache_len, dtype,
-                                                      ring_headroom)
+                                                      ring_headroom, paged,
+                                                      block_size, num_blocks)
     return cache
 
 

@@ -54,7 +54,11 @@ from repro.core.scheduler import fixed_s, make_scheduler
 from repro.core.speculative import verify
 from repro.core.utility import UtilitySpec
 from repro.models import Model
-from repro.serving.kv_cache import AttnCache, MLACache, rollback
+from repro.serving.kv_cache import (AttnCache, MLACache, PAGED_TYPES,
+                                    PoolExhaustedError, blocks_for,
+                                    paged_merge_rows, paged_over_groups,
+                                    paged_reset_rows, paged_select_rows,
+                                    reset_rows, rollback)
 from repro.serving.request import Request, RequestManager
 
 Array = jnp.ndarray
@@ -67,14 +71,52 @@ def _is_rollbackable(cfg: ModelConfig) -> bool:
     return set(cfg.layer_kinds) <= {"attn"}
 
 
+_ROLLBACK_TYPES = (AttnCache, MLACache) + PAGED_TYPES
+
+
 def _cache_rollback(cache, keep_pos: Array):
-    """Slot-invalidate every attention cache in the stack cache pytree."""
+    """Slot-invalidate every attention cache in the stack cache pytree.
+    Paged caches additionally return speculative-tail blocks to the pool
+    (``kv_cache.paged_rollback``)."""
     def fix(c):
-        if isinstance(c, (AttnCache, MLACache)):
+        if isinstance(c, _ROLLBACK_TYPES):
             return rollback(c, keep_pos)
         return c
     return jax.tree.map(fix, cache,
-                        is_leaf=lambda c: isinstance(c, (AttnCache, MLACache)))
+                        is_leaf=lambda c: isinstance(c, _ROLLBACK_TYPES))
+
+
+def _first_paged_leaf(cache):
+    """First paged cache leaf of a stack cache (None if the stack has no
+    full-attention layers or runs static caches).  All paged leaves share
+    one deterministic allocator trajectory, so one leaf is representative.
+    Scan-group leaves carry a leading layer-group axis; return group 0.
+    Diagnostics/tests only — it slices the full pools; the serving loop
+    uses ``_paged_alloc_state``."""
+    for leaf in jax.tree.leaves(
+            cache, is_leaf=lambda c: isinstance(c, PAGED_TYPES)):
+        if isinstance(leaf, PAGED_TYPES):
+            if leaf.next_pos.ndim == 2:
+                return jax.tree.map(lambda a: a[0], leaf)
+            return leaf
+    return None
+
+
+def _paged_alloc_state(cache):
+    """(block_size, free bool[P], alloc_failed scalar) of the first paged
+    leaf, touching only the small allocator fields (never the pools) —
+    cheap enough for every-round health checks.  None if unpaged."""
+    for leaf in jax.tree.leaves(
+            cache, is_leaf=lambda c: isinstance(c, PAGED_TYPES)):
+        if isinstance(leaf, PAGED_TYPES):
+            stacked = leaf.next_pos.ndim == 2
+            pool = leaf.kpool if hasattr(leaf, "kpool") else leaf.ckv_pool
+            bs = pool.shape[2] if stacked else pool.shape[1]
+            return (bs, leaf.free[0] if stacked else leaf.free,
+                    leaf.alloc_failed[0] if stacked else leaf.alloc_failed)
+    return None
+
+
 
 
 def _merge_cache_rows(old, new, rows: Array):
@@ -127,6 +169,13 @@ class GoodSpeedEngine:
     utility: UtilitySpec = UtilitySpec(alpha=1.0)
     latency: LatencyModel = LatencyModel()
     draft_temps: tuple = ()        # per-server draft temperature (heterogeneity)
+    # paged (block-pool) KV caches: admission allocates per-row blocks and
+    # prefills ONLY the admitted rows (batch = #admitted, not n_servers);
+    # retirement/rollback return blocks to the pool.  False keeps the
+    # static [B, L] caches so both paths can be diffed for equivalence.
+    paged_kv: bool = False
+    kv_block_size: int = 16
+    kv_num_blocks: int = 0         # 0 = n_servers * ceil(cache_len / bs)
 
     def __post_init__(self):
         # resolve the policy once; validates the name at construction time
@@ -135,6 +184,30 @@ class GoodSpeedEngine:
         # in place — the dynamic serve loop stays retrace-free.
         object.__setattr__(self, "_round_fn",
                            jax.jit(self._round_core, donate_argnums=(0,)))
+        # jit-compiled admission prefill per model, with the cache donated
+        # so paged admission updates the shared pools in place instead of
+        # copying them per admission.  Retraces per distinct
+        # (batch, maxlen) admission shape — bounded in steady-state
+        # serving, and what makes admission cost ~independent of the
+        # total batch under paged_kv (benchmarks/serve_requests.py).
+        def _make_prefill(model):
+            def f(params, toks, cache, chunk_valid):
+                return model.forward(params, toks, mode="prefill",
+                                     cache=cache, chunk_valid=chunk_valid)
+            return jax.jit(f, donate_argnums=(2,))
+        object.__setattr__(self, "_prefill_fn_target",
+                           _make_prefill(self.target_model))
+        object.__setattr__(self, "_prefill_fn_draft",
+                           _make_prefill(self.draft_model))
+
+    # ------------------------------------------------------------------
+    def _fresh_cache(self, model: Model, batch: int):
+        """Empty stack cache in the engine's configured layout."""
+        return model.init_cache(batch, self.cache_len,
+                                ring_headroom=self.s_max,
+                                paged=self.paged_kv,
+                                block_size=self.kv_block_size,
+                                num_blocks=self.kv_num_blocks)
 
     # ------------------------------------------------------------------
     def _prefill_rows(self, prompts: list[np.ndarray], draft_params,
@@ -159,23 +232,28 @@ class GoodSpeedEngine:
         feed_valid = valid_j & (jnp.arange(maxlen)[None, :] < pend_idx[:, None])
         # Ring (sliding-window) layers need chunk_len-1 slots of headroom:
         # the verify/recompute chunks are s_max+1 tokens, written before
-        # attention runs (see init_block_cache).
+        # attention runs (see init_block_cache).  NOTE: this is the STATIC
+        # full-batch prefill path; paged engines admit via
+        # ``_admit_rows_paged`` (sub-batch prefill into the shared pool).
         tcache = self.target_model.init_cache(n, self.cache_len,
                                               ring_headroom=self.s_max)
         dcache = self.draft_model.init_cache(n, self.cache_len,
                                              ring_headroom=self.s_max)
-        t_out = self.target_model.forward(target_params, toks_j,
-                                          mode="prefill", cache=tcache,
-                                          chunk_valid=feed_valid)
-        d_out = self.draft_model.forward(draft_params, toks_j,
-                                         mode="prefill", cache=dcache,
-                                         chunk_valid=feed_valid)
+        t_out = self._prefill_fn_target(target_params, toks_j, tcache,
+                                        feed_valid)
+        d_out = self._prefill_fn_draft(draft_params, toks_j, dcache,
+                                       feed_valid)
         pending = jnp.take_along_axis(toks_j, pend_idx[:, None], axis=1)[:, 0]
         return t_out.cache, d_out.cache, pending, pend_idx
 
     def init(self, key: Array, prompts: list[np.ndarray],
              draft_params, target_params) -> EngineState:
         """Prefill both models on the per-server prompts."""
+        if self.paged_kv:
+            state = self.cold_start(key)
+            return self._admit_rows(
+                state, list(range(self.n_servers)),
+                dict(enumerate(prompts)), draft_params, target_params)
         tcache, dcache, pending, length = self._prefill_rows(
             prompts, draft_params, target_params)
         return EngineState(
@@ -191,10 +269,8 @@ class GoodSpeedEngine:
         be wasted compute."""
         n = self.n_servers
         return EngineState(
-            target_cache=self.target_model.init_cache(
-                n, self.cache_len, ring_headroom=self.s_max),
-            draft_cache=self.draft_model.init_cache(
-                n, self.cache_len, ring_headroom=self.s_max),
+            target_cache=self._fresh_cache(self.target_model, n),
+            draft_cache=self._fresh_cache(self.draft_model, n),
             pending=jnp.zeros((n,), jnp.int32),
             length=jnp.zeros((n,), jnp.int32),
             est=self.estimator.init(n),
@@ -213,21 +289,21 @@ class GoodSpeedEngine:
         keeps a full (non-ring) attention cache, admission fails loudly if
         prompt + budget + 1 (bonus token) cannot fit in cache_len —
         ``write_chunk`` would otherwise silently clobber the last slot.
-        Ring/recurrent-only stacks are O(window) and carry no such bound."""
+        Ring/recurrent-only stacks are O(window) and carry no such bound.
+
+        With ``paged_kv`` the admission prefill runs at batch = len(rows)
+        and scatters straight into the shared block pools
+        (``_admit_rows_paged``) — cost independent of n_servers."""
         n = self.n_servers
+        self._check_admission_fits(
+            [np.asarray(prompts[i], np.int32) for i in rows], rows, budgets)
+        if self.paged_kv:
+            return self._admit_rows_paged(state, rows, prompts,
+                                          draft_params, target_params)
         mask = np.zeros((n,), bool)
         mask[list(rows)] = True
         row_prompts = [np.asarray(prompts[i], np.int32) if mask[i]
                        else np.zeros(1, np.int32) for i in range(n)]
-        bounded = any(k == "attn" for m in (self.draft_model,
-                                            self.target_model)
-                      for k in m.cfg.layer_kinds)
-        for i in rows:
-            need = len(row_prompts[i]) + (budgets or {}).get(i, 0) + 1
-            assert not bounded or need <= self.cache_len, \
-                (f"request needs {need} cache slots (prompt "
-                 f"{len(row_prompts[i])} + budget {(budgets or {}).get(i, 0)}"
-                 f" + bonus) but cache_len is {self.cache_len}")
         tcache, dcache, pending, length = self._prefill_rows(
             row_prompts, draft_params, target_params)
         mask_j = jnp.asarray(mask)
@@ -237,10 +313,182 @@ class GoodSpeedEngine:
             pending=jnp.where(mask_j, pending, state.pending),
             length=jnp.where(mask_j, length, state.length))
 
+    def _check_admission_fits(self, row_prompts, rows, budgets):
+        """Per-row logical-capacity guard shared by both admission paths."""
+        bounded = any(k == "attn" for m in (self.draft_model,
+                                            self.target_model)
+                      for k in m.cfg.layer_kinds)
+        for i, p in zip(rows, row_prompts):
+            need = len(p) + (budgets or {}).get(i, 0) + 1
+            assert not bounded or need <= self.cache_len, \
+                (f"request needs {need} cache slots (prompt "
+                 f"{len(p)} + budget {(budgets or {}).get(i, 0)}"
+                 f" + bonus) but cache_len is {self.cache_len}")
+
     # ------------------------------------------------------------------
-    def _draft(self, params, state: EngineState, key: Array):
+    def _admit_slice(self, model: Model, cache, idx: Array, k: int):
+        """Admission view of the live stack cache at batch = k: paged
+        leaves are row-sliced (shared pool) with the rows' old blocks
+        freed; every other leaf (ring buffers, recurrent states) starts
+        from a fresh zero state for those rows."""
+        # num_blocks=1 keeps the throwaway paged leaves tiny: only the
+        # ring/recurrent leaves of this fresh cache are used, the paged
+        # ones are replaced by live-pool slices below
+        fresh = model.init_cache(k, self.cache_len,
+                                 ring_headroom=self.s_max,
+                                 paged=self.paged_kv,
+                                 block_size=self.kv_block_size,
+                                 num_blocks=1)
+        all_rows = jnp.ones((k,), bool)
+
+        def f(fr, live):
+            if isinstance(live, PAGED_TYPES):
+                return paged_over_groups(
+                    lambda c: paged_reset_rows(paged_select_rows(c, idx),
+                                               all_rows), live)
+            return fr
+        return jax.tree.map(f, fresh, cache,
+                            is_leaf=lambda c: isinstance(c, PAGED_TYPES))
+
+    def _merge_admit(self, cache, sub, idx: Array):
+        """Merge an admission sub-cache back into the live stack cache.
+        Paged leaves take the slice's pool/free-list wholesale (the
+        scatter writes only touched the admitted rows' blocks) and
+        row-scatter the table; static leaves row-scatter on their batch
+        axis (1 under the scan-group stacking, 0 otherwise)."""
+        def sel(axis):
+            def f(old, new):
+                if isinstance(old, PAGED_TYPES):
+                    return paged_over_groups(
+                        lambda o, n_: paged_merge_rows(o, n_, idx),
+                        old, new)
+                if axis == 1:
+                    return old.at[:, idx].set(new)
+                return old.at[idx].set(new)
+            return f
+        leaf = lambda c: isinstance(c, PAGED_TYPES)
+        return {"scan": jax.tree.map(sel(1), cache["scan"], sub["scan"],
+                                     is_leaf=leaf),
+                "rest": jax.tree.map(sel(0), cache["rest"], sub["rest"],
+                                     is_leaf=leaf)}
+
+    def _check_pool_health(self, state: EngineState) -> None:
+        """Raise if a decode/verify write was silently dropped because the
+        pool ran dry mid-round (sticky ``alloc_failed``) — the cache is
+        missing K/V and generation is no longer trustworthy.  Only
+        meaningful for oversubscribed pools; the default sizing can never
+        trip it."""
+        for name, cache in (("target", state.target_cache),
+                            ("draft", state.draft_cache)):
+            alloc = _paged_alloc_state(cache)
+            if alloc is not None and bool(alloc[2]):
+                raise PoolExhaustedError(
+                    f"{name} KV pool exhausted during a serving round: a "
+                    f"decode/verify write needed a block with none free — "
+                    f"grow kv_num_blocks or admit less concurrent work")
+
+    def _release_rows(self, state: EngineState, rows: list[int]
+                      ) -> EngineState:
+        """Free the KV blocks of idle rows (request retired, no successor
+        queued) so admissions on OTHER servers can claim them — without
+        this, an undersized pool could refuse an admission while an idle
+        row sits on freed-able blocks.  Paged leaves only; static caches
+        need no release (masking already hides stale rows)."""
+        mask = np.zeros((self.n_servers,), bool)
+        mask[list(rows)] = True
+        mask_j = jnp.asarray(mask)
+
+        def fix(c):
+            if isinstance(c, PAGED_TYPES):
+                return reset_rows(c, mask_j)
+            return c
+        leaf = lambda c: isinstance(c, PAGED_TYPES)
+        return state._replace(
+            target_cache=jax.tree.map(fix, state.target_cache, is_leaf=leaf),
+            draft_cache=jax.tree.map(fix, state.draft_cache, is_leaf=leaf))
+
+    def _admit_rows_paged(self, state: EngineState, rows: list[int],
+                          prompts: dict, draft_params,
+                          target_params) -> EngineState:
+        """Paged admission: free the retiring rows' blocks, allocate blocks
+        for the new prompts, and prefill a batch of ONLY the admitted rows
+        into the shared pools.  Raises ``PoolExhaustedError`` when the free
+        list cannot hold the new prompts (clean admission error instead of
+        silently dropped writes)."""
+        rows = sorted(rows)
+        k = len(rows)
+        row_prompts = [np.asarray(prompts[i], np.int32) for i in rows]
+        maxlen = max(len(p) for p in row_prompts)
+        toks = np.zeros((k, maxlen), np.int32)
+        valid = np.zeros((k, maxlen), bool)
+        for j, p in enumerate(row_prompts):
+            toks[j, :len(p)] = p
+            valid[j, :len(p)] = True
+        toks_j = jnp.asarray(toks)
+        lengths = jnp.asarray([len(p) for p in row_prompts], jnp.int32)
+        pend_idx = jnp.maximum(lengths - 1, 0)
+        feed_valid = jnp.asarray(valid) \
+            & (jnp.arange(maxlen)[None, :] < pend_idx[:, None])
+        idx = jnp.asarray(rows, jnp.int32)
+        feed_lens = [max(0, len(p) - 1) for p in row_prompts]
+
+        # Validate BOTH pools before any prefill runs: the prefill donates
+        # the sub-cache, whose pool buffers alias the live state, so a
+        # raise after the first prefill would leave the caller's state
+        # with deleted buffers instead of a clean admission error.
+        subs = {}
+        for name, model, cache in (
+                ("target", self.target_model, state.target_cache),
+                ("draft", self.draft_model, state.draft_cache)):
+            sub = self._admit_slice(model, cache, idx, k)
+            alloc = _paged_alloc_state(sub)
+            if alloc is not None:
+                bs, free, failed = alloc
+                if bool(failed):
+                    raise PoolExhaustedError(
+                        f"{name} KV pool: a write was dropped in an "
+                        f"earlier round (sticky alloc_failed); the cache "
+                        f"is not trustworthy — grow kv_num_blocks")
+                need = sum(blocks_for(fl, bs) for fl in feed_lens)
+                have = int(free.sum())
+                if need > have:
+                    raise PoolExhaustedError(
+                        f"{name} KV pool exhausted: admission of rows "
+                        f"{rows} needs {need} blocks, {have} free "
+                        f"(block_size={bs}, pool={free.shape[0]})")
+            subs[name] = sub
+
+        new_caches = {}
+        for name, cache, params, prefill_fn in (
+                ("target", state.target_cache, target_params,
+                 self._prefill_fn_target),
+                ("draft", state.draft_cache, draft_params,
+                 self._prefill_fn_draft)):
+            out = prefill_fn(params, toks_j, subs[name], feed_valid)
+            alloc = _paged_alloc_state(out.cache)
+            # defensive only: the pre-checks above make this unreachable
+            # (prefill allocates exactly the pre-counted prompt blocks)
+            assert alloc is None or not bool(alloc[2]), \
+                f"{name} pool allocation failed despite free-count check"
+            new_caches[name] = self._merge_admit(cache, out.cache, idx)
+
+        pending = jnp.take_along_axis(toks_j, pend_idx[:, None],
+                                      axis=1)[:, 0]
+        return state._replace(
+            target_cache=new_caches["target"],
+            draft_cache=new_caches["draft"],
+            pending=state.pending.at[idx].set(pending),
+            length=state.length.at[idx].set(pend_idx))
+
+    # ------------------------------------------------------------------
+    def _draft(self, params, state: EngineState, key: Array, active: Array):
         """Step (1): each server decodes s_max tokens (rows with S_i < s_max
-        mask the tail).  Returns draft tokens, their q logits, updated cache."""
+        mask the tail).  Returns draft tokens, their q logits, updated cache.
+
+        Idle rows (active[b] = False) are masked out of the cache writes:
+        their draft tokens are discarded anyway, and under ``paged_kv`` an
+        unmasked idle-row write would allocate pool blocks a live row may
+        need."""
         n, s_cap = self.n_servers, self.s_max
         temps = jnp.asarray(self.draft_temps or (1.0,) * n, jnp.float32)
 
@@ -249,7 +497,7 @@ class GoodSpeedEngine:
             key, k_s = jax.random.split(key)
             out = self.draft_model.forward(
                 params, tok[:, None], mode="decode", cache=cache,
-                positions=pos[:, None])
+                positions=pos[:, None], chunk_valid=active[:, None])
             logits = out.logits[:, 0, :]  # [N, Vp]
             logits = self._mask_vocab(logits, self.draft_model.cfg)
             # q := the ACTUAL sampling distribution (incl. temperature) —
@@ -317,7 +565,7 @@ class GoodSpeedEngine:
         S = jnp.where(active, S, 0)
 
         draft_toks, q_logits, draft_cache = self._draft(
-            draft_params, state, k_draft)
+            draft_params, state, k_draft, active)
         p_logits, target_cache, in_draft = self._verify_chunk(
             target_params, state, draft_toks, S, active)
 
@@ -458,6 +706,7 @@ class GoodSpeedEngine:
         prev_done = len(mgr.completed)     # completions from earlier calls
         history: list[RoundStats] = []
         next_arrival = 0
+        released: set[int] = set()         # idle rows whose blocks are freed
         for r in range(rounds):
             while next_arrival < len(sched) and sched[next_arrival][0] <= r:
                 _, srv, req = sched[next_arrival]
@@ -465,11 +714,26 @@ class GoodSpeedEngine:
                 next_arrival += 1
             fresh = sorted(set(mgr.admit()) | set(carried))
             carried = []
+            if self.paged_kv:
+                # a retired row with no successor holds blocks another
+                # server's admission may need — release BEFORE admitting
+                newly_idle = [i for i in range(n)
+                              if mgr.active[i] is None and i not in released]
+                if newly_idle:
+                    state = self._release_rows(state, newly_idle)
+                    released.update(newly_idle)
+                released.difference_update(fresh)
             if fresh:
                 state = self._admit_rows(
                     state, fresh, {i: ctx(mgr.active[i]) for i in fresh},
                     draft_params, target_params,
                     budgets={i: mgr.active[i].remaining for i in fresh})
+                if self.paged_kv:
+                    # per-request block accounting: blocks the admission
+                    # prefill allocated (context minus the pending token)
+                    for i in fresh:
+                        mgr.active[i].kv_blocks = blocks_for(
+                            len(ctx(mgr.active[i])) - 1, self.kv_block_size)
             if mgr.idle() and next_arrival >= len(sched):
                 break                      # workload drained
             caps = mgr.remaining_caps()
@@ -478,6 +742,8 @@ class GoodSpeedEngine:
                 continue                   # burning a full model round
             state, stats = self.run_round(state, draft_params, target_params,
                                           caps=caps)
+            if self.paged_kv:
+                self._check_pool_health(state)
             mgr.record_emitted(stats.emitted)
             history.append(stats)
         mgr.retire_done()                  # last-round completions (retire
@@ -496,6 +762,7 @@ class GoodSpeedEngine:
                                    if req.admit_round is not None else None),
             "tokens": len(req.generated),
             "generated": list(req.generated),
+            "kv_blocks": req.kv_blocks,
         } for req in mgr.completed[prev_done:]]
         rounds_run = len(history)
         toks_done = sum(r["tokens"] for r in requests)

@@ -1,15 +1,27 @@
-"""KV caches: full (static-length), sliding-window (ring buffer), MLA latent.
+"""KV caches: full (static-length), sliding-window (ring buffer), MLA
+latent, and paged (block-structured pool) variants.
 
-Layout [B, L, KV, hd] with the cache-length axis L second so it can be
-sharded over the ``model`` mesh axis for decode (sequence-sharded
-flash-decode; see DESIGN §5).  Every cache carries an explicit per-slot
-absolute-position array (``pos_arr``, -1 = empty) so attention masks are
-layout-independent — the same masking code covers left-aligned full caches
-and wrapped ring buffers.
+Static layout is [B, L, KV, hd] with the cache-length axis L second so it
+can be sharded over the ``model`` mesh axis for decode (sequence-sharded
+flash-decode).  Every cache carries an explicit per-slot absolute-position
+array (``pos_arr``, -1 = empty) so attention masks are layout-independent —
+the same masking code covers left-aligned full caches, wrapped ring
+buffers, and block-table views.  See docs/KV_CACHE.md for the layout and
+masking contract.
 
-Chunk writes use masked broadcast selects rather than scatters: elementwise
-on the sharded L axis, so GSPMD never needs to reshuffle the cache to write
-one token.
+Static chunk writes use masked broadcast selects rather than scatters:
+elementwise on the sharded L axis, so GSPMD never needs to reshuffle the
+cache to write one token.
+
+Paged caches (``PagedAttnCache`` / ``PagedMLACache``) replace the per-row
+[L, ...] storage with a shared block pool ``[P, block_size, ...]`` plus a
+per-row block table ``i32[B, M]`` and a free mask ``bool[P]``: retiring a
+request frees its blocks; admitting a new one allocates only the blocks
+its prompt needs, so admission cost is independent of the batch size.
+Writes allocate blocks from the free list in-graph (deterministic
+first-free order) and scatter into the pool; attention gathers a logical
+[B, M*block_size, ...] view through the table.  The free-list invariants
+are documented (and property-tested) in docs/KV_CACHE.md.
 """
 from __future__ import annotations
 
@@ -35,6 +47,45 @@ class MLACache(NamedTuple):
     next_pos: Array
 
 
+class PagedAttnCache(NamedTuple):
+    """Block-structured GQA cache: shared pool + per-row block table.
+
+    Logical slot l of row b lives at physical pool slot
+    ``table[b, l // bs] * bs + l % bs`` (bs = block_size = kpool.shape[1]).
+    ``table`` entries are -1 until a block is allocated; ``free[p]`` marks
+    pool block p as unallocated.  ``alloc_failed`` is a sticky scalar set
+    when a write needed a block and the pool was exhausted (the write is
+    dropped); hosts check it after admission/prefill.
+    """
+    kpool: Array         # [P, bs, KV, hd]
+    vpool: Array         # [P, bs, KV, hd]
+    table: Array         # i32[B, M]  physical block per logical block, -1
+    free: Array          # bool[P]    block unallocated
+    pos_arr: Array       # i32[B, M*bs] absolute position per slot, -1 empty
+    next_pos: Array      # i32[B]
+    alloc_failed: Array  # bool[]     sticky pool-exhaustion flag
+
+
+class PagedMLACache(NamedTuple):
+    """Block-structured MLA latent cache (same table contract as
+    ``PagedAttnCache``; the pool holds latents + decoupled rope keys)."""
+    ckv_pool: Array      # [P, bs, r]
+    kpe_pool: Array      # [P, bs, rope]
+    table: Array
+    free: Array
+    pos_arr: Array
+    next_pos: Array
+    alloc_failed: Array
+
+
+PAGED_TYPES = (PagedAttnCache, PagedMLACache)
+
+
+class PoolExhaustedError(RuntimeError):
+    """Raised by admission when the block pool cannot hold a new request's
+    prompt — a clean host-level error instead of silent dropped writes."""
+
+
 def init_attn_cache(batch: int, length: int, kv_heads: int, head_dim: int,
                     dtype) -> AttnCache:
     return AttnCache(
@@ -53,6 +104,258 @@ def init_mla_cache(batch: int, length: int, rank: int, rope_dim: int,
         pos_arr=jnp.full((batch, length), -1, jnp.int32),
         next_pos=jnp.zeros((batch,), jnp.int32),
     )
+
+
+def init_paged_attn_cache(batch: int, length: int, kv_heads: int,
+                          head_dim: int, dtype, block_size: int = 16,
+                          num_blocks: int = 0) -> PagedAttnCache:
+    """Paged GQA cache with logical per-row capacity >= ``length``.
+
+    num_blocks = 0 sizes the pool so every row can reach full logical
+    capacity (batch * ceil(length / block_size)) — the "never worse than
+    static" default; pass a smaller pool to actually oversubscribe."""
+    m = -(-length // block_size)
+    p = num_blocks or batch * m
+    return PagedAttnCache(
+        kpool=jnp.zeros((p, block_size, kv_heads, head_dim), dtype),
+        vpool=jnp.zeros((p, block_size, kv_heads, head_dim), dtype),
+        table=jnp.full((batch, m), -1, jnp.int32),
+        free=jnp.ones((p,), bool),
+        pos_arr=jnp.full((batch, m * block_size), -1, jnp.int32),
+        next_pos=jnp.zeros((batch,), jnp.int32),
+        alloc_failed=jnp.zeros((), bool),
+    )
+
+
+def init_paged_mla_cache(batch: int, length: int, rank: int, rope_dim: int,
+                         dtype, block_size: int = 16,
+                         num_blocks: int = 0) -> PagedMLACache:
+    m = -(-length // block_size)
+    p = num_blocks or batch * m
+    return PagedMLACache(
+        ckv_pool=jnp.zeros((p, block_size, rank), dtype),
+        kpe_pool=jnp.zeros((p, block_size, rope_dim), dtype),
+        table=jnp.full((batch, m), -1, jnp.int32),
+        free=jnp.ones((p,), bool),
+        pos_arr=jnp.full((batch, m * block_size), -1, jnp.int32),
+        next_pos=jnp.zeros((batch,), jnp.int32),
+        alloc_failed=jnp.zeros((), bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged primitives
+# ---------------------------------------------------------------------------
+
+def _paged_pools(cache):
+    if isinstance(cache, PagedMLACache):
+        return [cache.ckv_pool, cache.kpe_pool]
+    return [cache.kpool, cache.vpool]
+
+
+def _paged_replace(cache, pools, **kw):
+    if isinstance(cache, PagedMLACache):
+        return cache._replace(ckv_pool=pools[0], kpe_pool=pools[1], **kw)
+    return cache._replace(kpool=pools[0], vpool=pools[1], **kw)
+
+
+def paged_block_size(cache) -> int:
+    return _paged_pools(cache)[0].shape[1]
+
+
+def paged_over_groups(fn, *caches):
+    """Apply a per-layer paged op to cache leaves that may carry a leading
+    scan-group axis (init_stack_cache stacks identical layers [G, ...]),
+    vmapping over the group axis when present.  Per-call operands that
+    are batch-indexed (keep_pos, row masks, row indices) must be closed
+    over in ``fn`` — they are shared across groups, not mapped."""
+    if caches[0].next_pos.ndim == 2:
+        return jax.vmap(fn)(*caches)
+    return fn(*caches)
+
+
+def _nth_free(free: Array, rank: Array) -> Array:
+    """Physical id of the rank-th (0-based) free block; P if exhausted.
+    Deterministic first-free order keeps every layer's table identical."""
+    cs = jnp.cumsum(free.astype(jnp.int32))
+    return jnp.searchsorted(cs, rank + 1).astype(jnp.int32)
+
+
+def _scatter_tokens(pools, new_values, flat_idx):
+    """Scatter per-token slices into flattened pools.  flat_idx: i32[B, S]
+    physical flat slot per token (out-of-range drops the write)."""
+    out = []
+    for pool, new in zip(pools, new_values):
+        p, bs = pool.shape[:2]
+        flat = pool.reshape((p * bs,) + pool.shape[2:])
+        flat = flat.at[flat_idx].set(new.astype(pool.dtype), mode="drop")
+        out.append(flat.reshape(pool.shape))
+    return out
+
+
+def paged_write_chunk(cache, new_values: tuple, chunk_valid: Array | None):
+    """Append an S-token chunk, allocating pool blocks as rows cross block
+    boundaries.  Same semantics as the static ``write_chunk`` (invalid
+    steps don't advance); a row that needs a block when the pool is empty
+    drops the write and sets ``alloc_failed``."""
+    pools = _paged_pools(cache)
+    bs = pools[0].shape[1]
+    p = pools[0].shape[0]
+    b, m = cache.table.shape
+    l = cache.pos_arr.shape[1]
+    s = new_values[0].shape[1]
+
+    def body(t, carry):
+        pools, table, free, pos_arr, next_pos, failed = carry
+        ok = chunk_valid[:, t] if chunk_valid is not None \
+            else jnp.ones((b,), bool)
+        slot = jnp.minimum(next_pos, l - 1)
+        blk, off = slot // bs, slot % bs
+        cur = jnp.take_along_axis(table, blk[:, None], axis=1)[:, 0]
+        needs = ok & (cur < 0)
+        rank = jnp.cumsum(needs.astype(jnp.int32)) - 1
+        cand = _nth_free(free, rank)
+        got = needs & (cand < p)
+        failed = failed | jnp.any(needs & (cand >= p))
+        free = free.at[jnp.where(got, cand, p)].set(False, mode="drop")
+        table = table.at[jnp.arange(b), blk].set(
+            jnp.where(got, cand, cur))
+        phys_blk = jnp.where(got, cand, cur)
+        can = ok & (phys_blk >= 0)
+        flat = jnp.where(can, phys_blk * bs + off, p * bs)
+        pools = _scatter_tokens(pools, [nv[:, t][:, None] for nv in
+                                        new_values], flat[:, None])
+        pos_arr = pos_arr.at[jnp.arange(b),
+                             jnp.where(can, slot, l)].set(
+            next_pos, mode="drop")
+        next_pos = jnp.where(can, next_pos + 1, next_pos)
+        return pools, table, free, pos_arr, next_pos, failed
+
+    pools, table, free, pos_arr, next_pos, failed = jax.lax.fori_loop(
+        0, s, body, (pools, cache.table, cache.free, cache.pos_arr,
+                     cache.next_pos, cache.alloc_failed))
+    return _paged_replace(cache, pools, table=table, free=free,
+                          pos_arr=pos_arr, next_pos=next_pos,
+                          alloc_failed=failed)
+
+
+def paged_write_prefill(cache, new_values: tuple, lengths: Array):
+    """Bulk-fill the rows of this cache view from a left-aligned prefill
+    chunk, allocating exactly ceil(lengths / block_size) blocks per row.
+    Any blocks the rows previously held are freed first (re-prefilling a
+    live row cannot leak)."""
+    cache = paged_reset_rows(cache, jnp.ones(cache.table.shape[:1], bool))
+    pools = _paged_pools(cache)
+    bs = pools[0].shape[1]
+    p = pools[0].shape[0]
+    b, m = cache.table.shape
+    l = cache.pos_arr.shape[1]
+    s = new_values[0].shape[1]
+    # block j of row b is needed iff it holds any position < lengths[b]
+    needs = (jnp.arange(m)[None, :] * bs) < lengths[:, None]     # [B, M]
+    rank = (jnp.cumsum(needs.reshape(-1).astype(jnp.int32)) - 1).reshape(b, m)
+    cand = _nth_free(cache.free, rank)
+    got = needs & (cand < p)
+    failed = cache.alloc_failed | jnp.any(needs & (cand >= p))
+    free = cache.free.at[jnp.where(got, cand, p).reshape(-1)].set(
+        False, mode="drop")
+    table = jnp.where(got, cand, -1)
+    # scatter the S chunk tokens (logical slot == absolute position)
+    tok_slot = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    phys_blk = jnp.take_along_axis(table, tok_slot // bs, axis=1)
+    can = (tok_slot < lengths[:, None]) & (phys_blk >= 0)
+    flat = jnp.where(can, phys_blk * bs + tok_slot % bs, p * bs)
+    pools = _scatter_tokens(pools, list(new_values), flat)
+    idx = jnp.arange(l)[None, :]
+    # a slot is valid only when its block allocation succeeded: an
+    # unbacked-but-valid slot would gather block 0 (another request's
+    # K/V) through paged_view's safe indexing
+    backed = jnp.take_along_axis(table, idx // bs, axis=1) >= 0
+    pos_arr = jnp.where((idx < lengths[:, None]) & backed, idx, -1)
+    return _paged_replace(cache, pools, table=table, free=free,
+                          pos_arr=pos_arr,
+                          next_pos=lengths.astype(jnp.int32),
+                          alloc_failed=failed)
+
+
+def paged_rollback(cache, keep_pos: Array):
+    """Invalidate slots holding positions >= keep_pos AND return the
+    speculative-tail blocks (logical blocks past ceil(keep_pos / bs)) to
+    the pool — the next chunk re-allocates as it grows."""
+    bs = paged_block_size(cache)
+    m = cache.table.shape[1]
+    keep_blocks = -(-keep_pos // bs)                              # ceil
+    drop = (jnp.arange(m)[None, :] >= keep_blocks[:, None]) \
+        & (cache.table >= 0)
+    p = cache.free.shape[0]
+    free = cache.free.at[jnp.where(drop, cache.table, p).reshape(-1)].set(
+        True, mode="drop")
+    return cache._replace(
+        table=jnp.where(drop, -1, cache.table), free=free,
+        pos_arr=jnp.where(cache.pos_arr >= keep_pos[:, None], -1,
+                          cache.pos_arr),
+        next_pos=jnp.minimum(cache.next_pos, keep_pos))
+
+
+def paged_reset_rows(cache, rows: Array):
+    """Free ALL blocks of the selected rows (bool[B]) — request retirement.
+    Unlike the static ``reset_rows``, the freed memory is immediately
+    reusable by any other row."""
+    p = cache.free.shape[0]
+    sel = rows[:, None] & (cache.table >= 0)
+    free = cache.free.at[jnp.where(sel, cache.table, p).reshape(-1)].set(
+        True, mode="drop")
+    return cache._replace(
+        table=jnp.where(rows[:, None], -1, cache.table), free=free,
+        pos_arr=jnp.where(rows[:, None], -1, cache.pos_arr),
+        next_pos=jnp.where(rows, 0, cache.next_pos))
+
+
+def paged_view(cache):
+    """Gather the logical [B, L, ...] view of each pool through the block
+    table (L = M * block_size).  Unallocated blocks read block 0; their
+    slots are masked by ``pos_arr == -1`` so attention never sees them."""
+    bs = paged_block_size(cache)
+    b, m = cache.table.shape
+    safe = jnp.maximum(cache.table, 0)
+    out = []
+    for pool in _paged_pools(cache):
+        v = pool[safe]                                  # [B, M, bs, ...]
+        out.append(v.reshape((b, m * bs) + pool.shape[2:]))
+    return out
+
+
+def paged_select_rows(cache, idx: Array):
+    """Row-slice of the per-row state (table/pos_arr/next_pos); the pool
+    and free list stay shared, so writes through the slice land in the
+    same physical memory.  Inverse: ``paged_merge_rows``."""
+    return cache._replace(table=cache.table[idx],
+                          pos_arr=cache.pos_arr[idx],
+                          next_pos=cache.next_pos[idx])
+
+
+def paged_merge_rows(full, sub, idx: Array):
+    """Merge a row-slice back: per-row state scatters into ``idx``; pool,
+    free list and alloc flag come from the slice (they are the shared,
+    already-updated allocator state)."""
+    pools = _paged_pools(sub)
+    return _paged_replace(
+        full, pools,
+        table=full.table.at[idx].set(sub.table),
+        free=sub.free,
+        pos_arr=full.pos_arr.at[idx].set(sub.pos_arr),
+        next_pos=full.next_pos.at[idx].set(sub.next_pos),
+        alloc_failed=sub.alloc_failed)
+
+
+def paged_free_count(cache) -> Array:
+    """Number of unallocated pool blocks (device scalar)."""
+    return jnp.sum(cache.free.astype(jnp.int32))
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Host helper: blocks needed to hold n_tokens cache slots."""
+    return -(-max(0, int(n_tokens)) // block_size)
 
 
 def _write_one(values, pos_arr, next_pos, new_slices, ring):
@@ -80,6 +383,8 @@ def write_chunk(cache, new_values: tuple, chunk_valid: Array | None = None,
     Implemented as a fori over S masked writes — S is small on the
     decode/verify path (1..C tokens).  Prefill uses ``write_prefill``.
     """
+    if isinstance(cache, PAGED_TYPES):
+        return paged_write_chunk(cache, new_values, chunk_valid)
     is_mla = isinstance(cache, MLACache)
     vals = [cache.ckv, cache.kpe] if is_mla else [cache.k, cache.v]
     s = new_values[0].shape[1]
@@ -114,6 +419,8 @@ def write_prefill(cache, new_values: tuple, lengths: Array,
     prefix length per row.  For ring caches S may exceed the window — only
     the last ``window`` positions land (computed with a shifted write).
     """
+    if isinstance(cache, PAGED_TYPES):
+        return paged_write_prefill(cache, new_values, lengths)
     is_mla = isinstance(cache, MLACache)
     vals = [cache.ckv, cache.kpe] if is_mla else [cache.k, cache.v]
     b, l = cache.pos_arr.shape
@@ -151,7 +458,11 @@ def write_prefill(cache, new_values: tuple, lengths: Array,
 
 def rollback(cache, keep_pos: Array):
     """Speculative-decoding rollback: invalidate every slot holding an
-    absolute position >= keep_pos[b] (rejected draft tokens)."""
+    absolute position >= keep_pos[b] (rejected draft tokens).  Paged
+    caches additionally return the freed tail blocks to the pool."""
+    if isinstance(cache, PAGED_TYPES):
+        return paged_over_groups(lambda c: paged_rollback(c, keep_pos),
+                                 cache)
     drop = cache.pos_arr >= keep_pos[:, None]
     return cache._replace(pos_arr=jnp.where(drop, -1, cache.pos_arr),
                           next_pos=jnp.minimum(cache.next_pos, keep_pos))
@@ -160,7 +471,11 @@ def rollback(cache, keep_pos: Array):
 def reset_rows(cache, rows: Array):
     """Invalidate ALL slots of the selected rows (bool[B]) — used when a
     fresh request is admitted into a draft-server slot.  Stale K/V values
-    stay in memory but are unreachable (pos_arr == -1 masks them)."""
+    stay in memory but are unreachable (pos_arr == -1 masks them); paged
+    caches instead free the rows' blocks for immediate reuse."""
+    if isinstance(cache, PAGED_TYPES):
+        return paged_over_groups(lambda c: paged_reset_rows(c, rows),
+                                 cache)
     return cache._replace(
         pos_arr=jnp.where(rows[:, None], -1, cache.pos_arr),
         next_pos=jnp.where(rows, 0, cache.next_pos))

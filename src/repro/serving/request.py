@@ -34,6 +34,9 @@ class Request:
     arrival_round: int = 0
     admit_round: Optional[int] = None
     finish_round: Optional[int] = None
+    # paged-KV accounting: blocks the admission prefill allocated for this
+    # request (0 under static caches); set by the engine at admission
+    kv_blocks: int = 0
 
     @property
     def remaining(self) -> int:
@@ -137,4 +140,9 @@ class RequestManager:
             "mean_latency_rounds": float(np.mean(lat)) if lat else 0.0,
             "mean_queue_delay_rounds": float(np.mean(qd)) if qd else 0.0,
             "tokens_generated": sum(len(r.generated) for r in self.completed),
+            # paged-KV view: blocks held by in-flight requests (prompt
+            # allocation; decode growth allocates beyond this) — 0 under
+            # static caches
+            "kv_blocks_active": sum(r.kv_blocks for r in self.active
+                                    if r is not None and not r.done),
         }

@@ -1,0 +1,16 @@
+"""Tier-1 wiring for the docs consistency check: README/docs code
+references must name modules, attributes and files that actually exist
+(``python -m scripts.check_docs`` is the standalone entry point)."""
+from scripts.check_docs import _doc_files, collect_errors
+
+
+def test_docs_exist():
+    names = {p.name for p in _doc_files()}
+    assert "README.md" in names
+    assert "ARCHITECTURE.md" in names
+    assert "KV_CACHE.md" in names
+
+
+def test_docs_references_resolve():
+    errors = collect_errors()
+    assert not errors, "stale documentation references:\n" + "\n".join(errors)

@@ -1,0 +1,282 @@
+"""Paged (block-pool) KV cache: allocator edge cases and paged-vs-static
+equivalence.  See docs/KV_CACHE.md for the invariants under test."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import Model
+from repro.serving import kv_cache as kc
+from repro.serving.engine import GoodSpeedEngine
+from repro.serving.request import Request
+
+
+def _assert_allocator_invariants(cache):
+    """Free-list invariants: every pool block is either free or referenced
+    by exactly one table cell (no double allocation, no leaks)."""
+    tbl = np.asarray(cache.table)
+    free = np.asarray(cache.free)
+    alloc = tbl[tbl >= 0]
+    assert len(set(alloc.tolist())) == len(alloc), "block double-allocated"
+    assert not free[alloc].any(), "allocated block still marked free"
+    assert free.sum() + len(alloc) == free.shape[0], "leaked blocks"
+
+
+def _views_match(paged, static):
+    """Paged logical view == static cache on every valid slot."""
+    views = kc.paged_view(paged)
+    stat_vals = [static.ckv, static.kpe] if isinstance(static, kc.MLACache) \
+        else [static.k, static.v]
+    l = static.pos_arr.shape[1]
+    valid = np.asarray(static.pos_arr >= 0)
+    np.testing.assert_array_equal(np.asarray(paged.pos_arr)[:, :l],
+                                  np.asarray(static.pos_arr))
+    assert np.all(np.asarray(paged.pos_arr)[:, l:] == -1)
+    for pv, sv in zip(views, stat_vals):
+        pv, sv = np.asarray(pv), np.asarray(sv)
+        mask = valid.reshape(valid.shape + (1,) * (sv.ndim - 2))
+        np.testing.assert_array_equal(np.where(mask, pv[:, :l], 0),
+                                      np.where(mask, sv, 0))
+
+
+class TestPagedPrimitives:
+    B, L, KV, HD, BS = 3, 32, 2, 4, 8
+
+    def _pair(self):
+        static = kc.init_attn_cache(self.B, self.L, self.KV, self.HD,
+                                    jnp.float32)
+        paged = kc.init_paged_attn_cache(self.B, self.L, self.KV, self.HD,
+                                         jnp.float32, self.BS)
+        return static, paged
+
+    def _kv(self, rng, s):
+        return (jnp.asarray(rng.normal(size=(self.B, s, self.KV, self.HD)),
+                            jnp.float32),
+                jnp.asarray(rng.normal(size=(self.B, s, self.KV, self.HD)),
+                            jnp.float32))
+
+    def test_prefill_chunk_rollback_match_static(self):
+        """A full write/rollback trace keeps the paged view identical to
+        the static cache and the allocator consistent."""
+        rng = np.random.default_rng(0)
+        static, paged = self._pair()
+        lengths = jnp.asarray([5, 12, 1], jnp.int32)
+        kv1 = self._kv(rng, 12)
+        static = kc.write_prefill(static, kv1, lengths)
+        paged = kc.write_prefill(paged, kv1, lengths)
+        _views_match(paged, static)
+        for step in range(3):
+            kv2 = self._kv(rng, 4)
+            valid = jnp.asarray(rng.random((self.B, 4)) < 0.8)
+            static = kc.write_chunk(static, kv2, valid)
+            paged = kc.write_chunk(paged, kv2, valid)
+            _views_match(paged, static)
+            _assert_allocator_invariants(paged)
+            keep = jnp.maximum(static.next_pos - (step % 2), 0)
+            static = kc.rollback(static, keep)
+            paged = kc.rollback(paged, keep)
+            _views_match(paged, static)
+            _assert_allocator_invariants(paged)
+        assert not bool(paged.alloc_failed)
+
+    def test_rollback_frees_exactly_tail_blocks(self):
+        """Rolling back m rejected tokens returns exactly the blocks that
+        held ONLY speculative positions — no more, no fewer."""
+        rng = np.random.default_rng(1)
+        _, paged = self._pair()
+        lengths = jnp.asarray([6, 6, 6], jnp.int32)   # 6 < BS=8: 1 block
+        paged = kc.write_prefill(paged, self._kv(rng, 6), lengths)
+        assert int(kc.paged_free_count(paged)) == paged.free.shape[0] - 3
+        # a 5-token chunk crosses the block boundary at slot 8 -> 2 blocks
+        paged = kc.write_chunk(paged, self._kv(rng, 5), None)
+        used_before = paged.free.shape[0] - int(kc.paged_free_count(paged))
+        assert used_before == 6
+        # keep 7 tokens: slot 8..10 dropped -> the second block of every
+        # row is exactly the speculative tail
+        paged = kc.rollback(paged, jnp.asarray([7, 7, 7], jnp.int32))
+        assert int(kc.paged_free_count(paged)) == paged.free.shape[0] - 3
+        _assert_allocator_invariants(paged)
+        # keep everything: rollback at next_pos frees nothing
+        before = int(kc.paged_free_count(paged))
+        paged = kc.rollback(paged, paged.next_pos)
+        assert int(kc.paged_free_count(paged)) == before
+
+    def test_reset_rows_frees_for_reuse(self):
+        """Retiring a row returns all its blocks; a later prefill of a
+        different row can claim them (admission reuse)."""
+        rng = np.random.default_rng(2)
+        paged = kc.init_paged_attn_cache(self.B, self.L, self.KV, self.HD,
+                                         jnp.float32, self.BS,
+                                         num_blocks=4)  # 4 blocks total
+        lengths = jnp.asarray([16, 8, 0], jnp.int32)    # 2 + 1 + 0 blocks
+        paged = kc.write_prefill(paged, self._kv(rng, 16), lengths)
+        assert int(kc.paged_free_count(paged)) == 1
+        paged = kc.reset_rows(paged, jnp.asarray([True, False, False]))
+        assert int(kc.paged_free_count(paged)) == 3
+        # row 2 now claims 3 blocks that mostly belonged to row 0
+        k2, v2 = self._kv(rng, 20)
+        sub = kc.paged_select_rows(paged, jnp.asarray([2]))
+        sub = kc.write_prefill(sub, (k2[:1], v2[:1]),
+                               jnp.asarray([20], jnp.int32))
+        paged = kc.paged_merge_rows(paged, sub, jnp.asarray([2]))
+        assert int(kc.paged_free_count(paged)) == 0
+        assert not bool(paged.alloc_failed)
+        _assert_allocator_invariants(paged)
+
+    def test_pool_exhaustion_sets_sticky_flag(self):
+        """Writes past the pool capacity are dropped and flagged, never
+        silently corrupting other rows' blocks; slots whose block
+        allocation failed stay invalid (pos_arr == -1), so attention can
+        never gather another request's K/V through them."""
+        rng = np.random.default_rng(3)
+        tiny = kc.init_paged_attn_cache(self.B, self.L, self.KV, self.HD,
+                                        jnp.float32, self.BS, num_blocks=2)
+        tiny = kc.write_prefill(tiny, self._kv(rng, 12),
+                                jnp.asarray([12, 12, 12], jnp.int32))
+        assert bool(tiny.alloc_failed)
+        _assert_allocator_invariants(tiny)
+        tbl, pos = np.asarray(tiny.table), np.asarray(tiny.pos_arr)
+        backed = np.take_along_axis(
+            tbl, np.arange(pos.shape[1])[None, :] // self.BS, axis=1) >= 0
+        assert not (pos[~backed] >= 0).any(), "valid slot without a block"
+
+    def test_reprefill_does_not_leak_blocks(self):
+        """write_prefill on rows that already hold blocks frees them first
+        — repeated prefills never shrink the pool."""
+        rng = np.random.default_rng(5)
+        paged = kc.init_paged_attn_cache(self.B, self.L, self.KV, self.HD,
+                                         jnp.float32, self.BS)
+        for _ in range(3):
+            paged = kc.write_prefill(paged, self._kv(rng, 12),
+                                     jnp.asarray([12, 9, 5], jnp.int32))
+            _assert_allocator_invariants(paged)
+        # ceil(12/8) + ceil(9/8) + ceil(5/8) = 2 + 2 + 1 blocks held
+        assert int(kc.paged_free_count(paged)) == paged.free.shape[0] - 5
+        assert not bool(paged.alloc_failed)
+
+    def test_paged_mla_cache_roundtrip(self):
+        rng = np.random.default_rng(4)
+        r, rope = 6, 4
+        static = kc.init_mla_cache(self.B, self.L, r, rope, jnp.float32)
+        paged = kc.init_paged_mla_cache(self.B, self.L, r, rope,
+                                        jnp.float32, self.BS)
+        vals = (jnp.asarray(rng.normal(size=(self.B, 10, r)), jnp.float32),
+                jnp.asarray(rng.normal(size=(self.B, 10, rope)),
+                            jnp.float32))
+        lengths = jnp.asarray([10, 3, 7], jnp.int32)
+        static = kc.write_prefill(static, vals, lengths)
+        paged = kc.write_prefill(paged, vals, lengths)
+        _views_match(paged, static)
+        _assert_allocator_invariants(paged)
+
+
+class TestPagedEngine:
+    VOCAB = 64
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        dm = Model(get_reduced("olmo-1b", num_layers=2, d_model=64,
+                               num_heads=2, num_kv_heads=2, head_dim=32,
+                               d_ff=128, vocab_size=self.VOCAB))
+        tm = Model(get_reduced("qwen3-8b", num_layers=2, d_model=128,
+                               num_heads=4, num_kv_heads=2, head_dim=32,
+                               d_ff=256, vocab_size=self.VOCAB))
+        return dm, tm, dm.init(jax.random.PRNGKey(0)), \
+            tm.init(jax.random.PRNGKey(1))
+
+    def _requests(self, k, seed=11, max_new=5):
+        rng = np.random.default_rng(seed)
+        return [Request(prompt=rng.integers(1, self.VOCAB, size=8)
+                        .astype(np.int32), max_new_tokens=max_new,
+                        eos_token=(4 if i % 2 else -1)) for i in range(k)]
+
+    def _engine(self, dm, tm, paged, **kw):
+        args = dict(draft_model=dm, target_model=tm, n_servers=2, C=8,
+                    s_max=4, cache_len=128, paged_kv=paged,
+                    kv_block_size=16)
+        args.update(kw)
+        return GoodSpeedEngine(**args)
+
+    def test_paged_static_equivalence_mixed_trace(self, pair):
+        """ACCEPTANCE: paged and static engines emit identical accepted-
+        token sequences over a mixed admit/retire/EOS workload (same seed),
+        and the paged run accounts per-request blocks."""
+        dm, tm, dp, tp = pair
+        reps = {}
+        for paged in (False, True):
+            eng = self._engine(dm, tm, paged)
+            reps[paged] = eng.serve_requests(
+                jax.random.PRNGKey(0), self._requests(7), dp, tp, rounds=60)
+        for rep in reps.values():
+            assert rep["summary"]["completed"] == 7
+        seq = {p: [r["generated"] for r in
+                   sorted(reps[p]["requests"],
+                          key=lambda r: r["request_id"])]
+               for p in reps}
+        assert seq[True] == seq[False]
+        assert all(r["kv_blocks"] == 1 for r in reps[True]["requests"])
+        assert all(r["kv_blocks"] == 0 for r in reps[False]["requests"])
+
+    def test_pool_exhaustion_clean_admission_error(self, pair):
+        """An under-provisioned pool rejects admission with
+        PoolExhaustedError instead of corrupting the cache."""
+        dm, tm, dp, tp = pair
+        # 2 blocks of 16 slots: a 40-token prompt needs 3 blocks
+        eng = self._engine(dm, tm, True, kv_num_blocks=2, cache_len=64)
+        long_prompt = np.arange(1, 41, dtype=np.int32) % self.VOCAB
+        state = eng.cold_start(jax.random.PRNGKey(0))
+        with pytest.raises(kc.PoolExhaustedError):
+            eng._admit_rows(state, [0], {0: long_prompt}, dp, tp)
+
+    def test_admission_reuses_freed_blocks(self, pair):
+        """A pool too small for all requests at once still drains the
+        workload because retirement frees blocks for the next admission."""
+        dm, tm, dp, tp = pair
+        # each request: 8-token prompt + 4 new + bonus -> 1 block of 16 is
+        # plenty; 2 servers x 1 block live at a time, pool of 3
+        eng = self._engine(dm, tm, True, kv_num_blocks=3, cache_len=16,
+                           C=4, s_max=2)
+        reqs = self._requests(5, max_new=4)
+        for r in reqs:
+            r.eos_token = -1
+        rep = eng.serve_requests(jax.random.PRNGKey(2), reqs, dp, tp,
+                                 rounds=80)
+        assert rep["summary"]["completed"] == 5
+        from repro.serving.engine import _first_paged_leaf
+        _assert_allocator_invariants(_first_paged_leaf(
+            rep["state"].target_cache))
+
+    def test_idle_row_blocks_released_for_other_servers(self, pair):
+        """A pool that only fits one live request at a time: once server
+        0's request retires, its blocks must be releasable to a LATER
+        admission on server 1 even though server 0 never re-admits."""
+        dm, tm, dp, tp = pair
+        eng = self._engine(dm, tm, True, n_servers=2, kv_block_size=8,
+                           kv_num_blocks=3, cache_len=24, C=4, s_max=2)
+        rng = np.random.default_rng(21)
+        mk = lambda: Request(prompt=rng.integers(1, self.VOCAB, size=16)
+                             .astype(np.int32), max_new_tokens=3)
+        # 16-token prompt = 2 blocks at admission, 3 during decode; the
+        # second request (server 1, round 10) only fits if server 0's
+        # blocks were freed when its request finished
+        rep = eng.serve_requests(jax.random.PRNGKey(5),
+                                 [(0, 0, mk()), (10, 1, mk())], dp, tp,
+                                 rounds=40)
+        assert rep["summary"]["completed"] == 2
+
+    def test_serve_matches_static_fixed_rounds(self, pair):
+        """Fixed-round simulator path: same emitted tokens paged vs
+        static (init-time prefill equivalence)."""
+        dm, tm, dp, tp = pair
+        rng = np.random.default_rng(7)
+        prompts = [rng.integers(1, self.VOCAB, size=9).astype(np.int32)
+                   for _ in range(2)]
+        hists = {}
+        for paged in (False, True):
+            eng = self._engine(dm, tm, paged, C=6, s_max=3)
+            hists[paged] = eng.serve(jax.random.PRNGKey(3), prompts, dp, tp,
+                                     rounds=4)
+        for h0, h1 in zip(hists[False], hists[True]):
+            np.testing.assert_array_equal(h0.emitted, h1.emitted)
+            np.testing.assert_array_equal(h0.S, h1.S)
