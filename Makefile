@@ -7,7 +7,12 @@ test:
 docs-check:
 	PYTHONPATH=src python -m scripts.check_docs
 
+# kernel packages standalone (interpret mode on CPU): Pallas kernels and
+# fused refs vs their jnp oracles, plus the attn_backend e2e equivalence
+kernels-check:
+	PYTHONPATH=src python -m pytest -x -q tests/test_kernels.py tests/test_paged_kernel.py
+
 bench:
 	PYTHONPATH=src python -m benchmarks.run
 
-.PHONY: test docs-check bench
+.PHONY: test docs-check kernels-check bench

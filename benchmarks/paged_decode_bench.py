@@ -1,0 +1,85 @@
+"""Paged decode attention microbench: block-table-native vs gather path.
+
+Fixes the pool OCCUPANCY (tokens actually held per row) and grows the
+logical CAPACITY (table width M, pool sized to match).  The gather path
+(``attention.paged_dot_attention``) materializes the full [B, M*bs, ...]
+logical view through the block table before attending, so its per-token
+decode cost grows with capacity even when the extra blocks are
+unallocated.  The block-table-native path (``kernels.paged_decode``)
+walks only the allocated block prefix — cost tracks occupancy and stays
+~flat in capacity.  This is the acceptance microbench for the
+``attn_backend="kernel"`` serving hot path; the numbers land in
+``BENCH_serve.json`` via ``benchmarks.serve_requests``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_decode import paged_flash_decode
+from repro.models.attention import paged_dot_attention
+from repro.serving import kv_cache as kc
+
+B, KV, G, HD, BS = 4, 2, 2, 64, 16
+H = KV * G
+OCCUPANCY = 96                       # tokens held per row (fixed)
+CAPACITIES = (128, 512, 2048)        # logical slots per row (grows)
+REPEATS = 30
+
+_CACHE: dict | None = None
+
+
+def _time(fn, *args) -> float:
+    """Median wall us of a jit'd call (warmup excluded)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def collect() -> dict:
+    """{capacity: {"gather_us": .., "block_native_us": ..}} at fixed
+    occupancy (cached: serve_requests embeds the same numbers in
+    BENCH_serve.json)."""
+    global _CACHE
+    if _CACHE is not None:
+        return _CACHE
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, 1, H, HD)), jnp.float32)
+    vals = (jnp.asarray(rng.normal(size=(B, OCCUPANCY, KV, HD)),
+                        jnp.float32),
+            jnp.asarray(rng.normal(size=(B, OCCUPANCY, KV, HD)),
+                        jnp.float32))
+    lengths = jnp.full((B,), OCCUPANCY, jnp.int32)
+    gather = jax.jit(lambda q_, c, p: paged_dot_attention(q_, c, p))
+    native = jax.jit(lambda q_, c, p: paged_flash_decode(q_, c, p,
+                                                         impl="auto"))
+    out = {}
+    for cap in CAPACITIES:
+        cache = kc.init_paged_attn_cache(B, cap, KV, HD, jnp.float32, BS)
+        cache = kc.write_prefill(cache, vals, lengths)
+        q_pos = cache.next_pos[:, None]
+        out[cap] = {
+            "gather_us": round(_time(gather, q, cache, q_pos), 1),
+            "block_native_us": round(_time(native, q, cache, q_pos), 1),
+        }
+    _CACHE = out
+    return out
+
+
+def run():
+    rows = []
+    for cap, r in collect().items():
+        ratio = round(r["gather_us"] / max(r["block_native_us"], 1e-9), 2)
+        rows.append((f"paged_decode_gather_cap{cap}_us", r["gather_us"],
+                     f"occ={OCCUPANCY}"))
+        rows.append((f"paged_decode_block_native_cap{cap}_us",
+                     r["block_native_us"], f"speedup={ratio}x"))
+    return rows

@@ -6,7 +6,11 @@
   tblI  scheduler_bench      — GOODSPEED-SCHED solver timings + C* budgets
   e2e   engine_e2e           — real-model Algorithm-1 rounds
   serve serve_requests       — request throughput + completion latency
-                               under Poisson-ish arrivals (continuous batching)
+                               under Poisson-ish arrivals (continuous
+                               batching), swept over attn_backend; writes
+                               the BENCH_serve.json perf baseline
+  perf  paged_decode_bench   — paged decode attention: block-table-native
+                               kernel path vs the paged_view gather path
   ablations                  — utility-family / budget / top-k sweeps
   roofline                   — terms from the dry-run artifacts (§Roofline)
 
@@ -20,11 +24,15 @@ import traceback
 
 def main() -> None:
     from benchmarks import (ablations, engine_e2e, goodput_estimation,
-                            roofline, scheduler_bench, serve_requests,
-                            time_distribution, utility_convergence)
+                            paged_decode_bench, roofline, scheduler_bench,
+                            serve_requests, time_distribution,
+                            utility_convergence)
+    # paged_decode_bench runs BEFORE any engine module: its µs-scale
+    # numbers (cached and embedded into BENCH_serve.json by
+    # serve_requests) are noise-sensitive to leftover compiled state
     modules = [goodput_estimation, time_distribution, utility_convergence,
-               scheduler_bench, engine_e2e, serve_requests, ablations,
-               roofline]
+               scheduler_bench, paged_decode_bench, engine_e2e,
+               serve_requests, ablations, roofline]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

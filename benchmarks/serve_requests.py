@@ -11,9 +11,18 @@ Also measures single-request ADMISSION cost vs batch size (B in {4, 16,
 64}): the static path re-prefills the full batch and row-merges, so its
 cost grows with B; the paged path prefills only the admitted row into the
 shared block pool, so its cost is ~flat in B.
+
+The serve sweep carries an ``attn_backend`` dimension (jnp vs kernel, and
+kernel x paged), and the whole run — per-round wall latency, realized
+goodput (tokens/round), admission cost, and the paged-decode
+gather-vs-block-native microbench (``benchmarks.paged_decode_bench``) —
+is written to ``BENCH_serve.json`` at the repo root so future PRs have a
+perf baseline to regress against.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -28,6 +37,16 @@ from repro.serving.request import Request
 N, K, ROUNDS, VOCAB = 4, 16, 80, 256
 ADMIT_BATCHES = (4, 16, 64)
 ADMIT_PROMPT_LEN = 96
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_serve.json"
+# (policy, attn_backend, paged_kv) serve configurations; the first two
+# keep the historical row names (jnp backend) for baseline continuity
+SERVE_CONFIGS = (
+    ("goodspeed", "jnp", False),
+    ("fixed", "jnp", False),
+    ("goodspeed", "kernel", False),
+    ("goodspeed", "kernel", True),
+)
 
 
 def _workload(seed: int = 0):
@@ -79,6 +98,11 @@ def admission_cost(draft, target, dp, tp):
 
 
 def run():
+    from benchmarks.paged_decode_bench import collect as paged_decode_numbers
+
+    # microbench FIRST: its µs-scale numbers are noise-sensitive and the
+    # engine serves below leave a lot of compiled/allocated state behind
+    microbench = paged_decode_numbers()
     draft = Model(get_reduced("olmo-1b", num_layers=2, d_model=64,
                               num_heads=2, num_kv_heads=2, head_dim=32,
                               d_ff=128, vocab_size=VOCAB))
@@ -87,22 +111,43 @@ def run():
                                d_ff=256, vocab_size=VOCAB))
     dp = draft.init(jax.random.PRNGKey(0))
     tp = target.init(jax.random.PRNGKey(1))
-    rows = list(admission_cost(draft, target, dp, tp))
-    for pol in ("goodspeed", "fixed"):
+    admit_rows = list(admission_cost(draft, target, dp, tp))
+    rows = list(admit_rows)
+    serve_json = {}
+    for pol, backend, paged in SERVE_CONFIGS:
+        tag = pol if backend == "jnp" else \
+            f"{pol}_{backend}" + ("_paged" if paged else "")
         eng = GoodSpeedEngine(draft_model=draft, target_model=target,
                               n_servers=N, C=12, s_max=6, cache_len=256,
-                              policy=pol, draft_temps=(1.0, 1.3, 2.0, 2.8))
+                              policy=pol, draft_temps=(1.0, 1.3, 2.0, 2.8),
+                              attn_backend=backend, paged_kv=paged,
+                              kv_block_size=16)
         t0 = time.perf_counter()
         rep = eng.serve_requests(jax.random.PRNGKey(2), _workload(), dp, tp,
                                  rounds=ROUNDS)
         s = rep["summary"]
         us_round = (time.perf_counter() - t0) * 1e6 / max(1, s["rounds_run"])
-        rows.append((f"serve_requests_{pol}_completed_of_{K}", 0.0,
+        rows.append((f"serve_requests_{tag}_completed_of_{K}", 0.0,
                      s["completed"]))
-        rows.append((f"serve_requests_{pol}_tokens_per_round",
+        rows.append((f"serve_requests_{tag}_tokens_per_round",
                      round(us_round, 0), round(s["tokens_per_round"], 2)))
-        rows.append((f"serve_requests_{pol}_mean_latency_rounds", 0.0,
+        rows.append((f"serve_requests_{tag}_mean_latency_rounds", 0.0,
                      round(s["mean_latency_rounds"], 2)))
-        rows.append((f"serve_requests_{pol}_requests_per_round", 0.0,
+        rows.append((f"serve_requests_{tag}_requests_per_round", 0.0,
                      round(s["requests_per_round"], 3)))
+        serve_json[tag] = {
+            "policy": pol, "attn_backend": backend, "paged_kv": paged,
+            "rounds_run": s["rounds_run"],
+            "round_latency_us": round(us_round, 1),
+            "tokens_per_round": round(s["tokens_per_round"], 3),
+            "mean_latency_rounds": round(s["mean_latency_rounds"], 3),
+            "completed": s["completed"],
+        }
+    BENCH_JSON.write_text(json.dumps({
+        "admission_cost_us": {name: us for name, us, _ in admit_rows},
+        "serve": serve_json,
+        "paged_decode_microbench": {
+            f"capacity_{cap}": r for cap, r in microbench.items()
+        },
+    }, indent=2) + "\n")
     return rows

@@ -29,6 +29,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=25)
     ap.add_argument("--C", type=int, default=12)
+    ap.add_argument("--attn-backend", choices=("jnp", "kernel"),
+                    default="jnp", help="serving attention backend: jnp "
+                    "core or the Pallas kernel packages (auto-fallback "
+                    "to fused jnp refs off-TPU)")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="block-pool KV caches (admission block reuse)")
     args = ap.parse_args()
 
     vocab = 256
@@ -49,7 +55,9 @@ def main():
     for policy in ("goodspeed", "fixed", "random"):
         eng = GoodSpeedEngine(draft_model=draft, target_model=target,
                               n_servers=N, C=args.C, s_max=6, cache_len=512,
-                              policy=policy, draft_temps=temps)
+                              policy=policy, draft_temps=temps,
+                              attn_backend=args.attn_backend,
+                              paged_kv=args.paged_kv)
         hist = eng.serve(jax.random.PRNGKey(2), prompts, dp, tp,
                          rounds=args.rounds)
         tok = np.mean([h.realized.sum() for h in hist])
@@ -67,7 +75,9 @@ def main():
             for j in range(3 * N)]
     eng = GoodSpeedEngine(draft_model=draft, target_model=target,
                           n_servers=N, C=args.C, s_max=6, cache_len=512,
-                          draft_temps=temps)
+                          draft_temps=temps,
+                          attn_backend=args.attn_backend,
+                          paged_kv=args.paged_kv)
     rep = eng.serve_requests(jax.random.PRNGKey(3), reqs, dp, tp,
                              rounds=8 * args.rounds)
     s = rep["summary"]

@@ -72,6 +72,15 @@ class ModelConfig:
     pos_embedding: str = "rope"     # rope | learned | none
     mla: Optional[MLAConfig] = None
 
+    # serving attention backend: "jnp" runs the blockwise jnp core
+    # (attention.dot_attention and the paged_view gather path); "kernel"
+    # dispatches prefill/decode-mode attention to the Pallas kernel
+    # packages in repro.kernels (flash_prefill / flash_decode /
+    # paged_flash_decode), with the jnp path as the automatic fallback
+    # wherever a kernel doesn't apply (MLA, ring prefill, softcapped
+    # prefill).  Train mode always uses the jnp core.
+    attn_backend: str = "jnp"       # jnp | kernel
+
     # norms / block wiring
     norm_type: str = "rmsnorm"      # rmsnorm | layernorm | nonparam_ln
     parallel_block: bool = False    # attn and MLP share the input (StableLM-2)

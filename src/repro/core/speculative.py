@@ -54,21 +54,36 @@ def verify(
     q_logits: Array,       # f32[N, S_max, V]     draft distributions
     p_logits: Array,       # f32[N, S_max+1, V]   target distributions
     lengths: Array,        # i32[N]               S_i <= S_max
+    backend: str = "jnp",  # jnp | kernel (fused spec_verify gather)
 ) -> VerifyResult:
-    """Batched ragged rejection-sampling verification (pure jnp oracle)."""
+    """Batched ragged rejection-sampling verification.
+
+    ``backend="kernel"`` computes the per-token log p_j(s_j) / log q_j(s_j)
+    through the fused ``repro.kernels.spec_verify`` gather-logprobs kernel
+    (online logsumexp over vocab tiles; no [N, S, V] softmax
+    materialization); the residual/bonus distributions then normalize
+    only the single gathered row m per server.  ``"jnp"`` is the
+    full-materialization oracle path."""
     n, s_max = draft_tokens.shape
     v = q_logits.shape[-1]
-    logq = _log_softmax(q_logits)                      # [N, S, V]
-    logp_all = _log_softmax(p_logits)                  # [N, S+1, V]
-    logp = logp_all[:, :s_max, :]                      # rows for draft positions
 
     pos = jnp.arange(s_max)[None, :]                   # [1, S]
     in_draft = pos < lengths[:, None]                  # [N, S]
 
     tok = jnp.clip(draft_tokens, 0, v - 1)
-    gather = lambda lg: jnp.take_along_axis(lg, tok[..., None], axis=-1)[..., 0]
-    logp_tok = gather(logp)                            # [N, S]
-    logq_tok = gather(logq)
+    if backend == "kernel":
+        from repro.kernels.spec_verify import gather_logprobs
+        logp_tok, _ = gather_logprobs(p_logits[:, :s_max, :], tok,
+                                      impl="auto")
+        logq_tok, _ = gather_logprobs(q_logits, tok, impl="auto")
+    else:
+        logq = _log_softmax(q_logits)                  # [N, S, V]
+        logp_all = _log_softmax(p_logits)              # [N, S+1, V]
+        logp = logp_all[:, :s_max, :]                  # rows for draft positions
+        gather = lambda lg: jnp.take_along_axis(
+            lg, tok[..., None], axis=-1)[..., 0]
+        logp_tok = gather(logp)                        # [N, S]
+        logq_tok = gather(logq)
     ratio = jnp.exp(jnp.minimum(logp_tok - logq_tok, 0.0))  # min(1, p/q)
 
     key_u, key_x = jax.random.split(key)
@@ -82,10 +97,20 @@ def verify(
     m = jnp.where(any_rej, first_rej, s_max).astype(jnp.int32)  # == S_i if all pass
 
     # --- extra token: residual (m < S_i) or bonus (m == S_i) --------------
-    rows = jnp.take_along_axis(
-        logp_all, m[:, None, None], axis=1)[:, 0, :]   # [N, V] target at row m
-    q_rows = jnp.take_along_axis(
-        logq, jnp.minimum(m, s_max - 1)[:, None, None], axis=1)[:, 0, :]
+    if backend == "kernel":
+        # gather the TWO raw logit rows (target at m, draft at min(m, S-1))
+        # and log-softmax them row-locally — identical to indexing a full
+        # log-softmax, without ever building one
+        rows = _log_softmax(jnp.take_along_axis(
+            p_logits, m[:, None, None], axis=1)[:, 0, :])
+        q_rows = _log_softmax(jnp.take_along_axis(
+            q_logits, jnp.minimum(m, s_max - 1)[:, None, None],
+            axis=1)[:, 0, :])
+    else:
+        rows = jnp.take_along_axis(
+            logp_all, m[:, None, None], axis=1)[:, 0, :]  # [N, V] target at m
+        q_rows = jnp.take_along_axis(
+            logq, jnp.minimum(m, s_max - 1)[:, None, None], axis=1)[:, 0, :]
     p_row = jnp.exp(rows)
     q_row = jnp.exp(q_rows)
     residual = jnp.maximum(p_row - q_row, 0.0)

@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels backing the serving hot path (kernel.py + ops.py +
+# ref.py per package; ops dispatches compiled-on-TPU / fallback-elsewhere).
+# ModelConfig.attn_backend="kernel" routes the engine's prefill, decode
+# and verify steps here; see docs/ARCHITECTURE.md "Kernel -> engine map".

@@ -1,11 +1,21 @@
-"""Pallas TPU kernel: GQA flash-decode — one query token vs a KV cache,
+"""Pallas TPU kernel: GQA flash-decode — a short query chunk vs a KV cache,
 streamed HBM->VMEM in L-tiles with an online-softmax accumulator.
 
 Grid: (B, KV_heads, num_L_tiles).  Per step the kernel loads one
-(LT, hd) K tile and V tile for one kv head, computes the G group-query
-scores on the VPU/MXU, applies the position/window mask from the cache's
-pos_arr, and folds into running (m, l, acc) VMEM scratch.  The final tile
-normalizes and writes the (G, hd) output block.
+(LT, hd) K tile and V tile for one kv head, computes the scores for the
+chunk's ``Sq*G`` query rows (the chunk and group-query axes fold into one
+MXU row axis) on the VPU/MXU, applies the position/window mask from the
+cache's pos_arr, and folds into running (m, l, acc) VMEM scratch.  The
+final tile normalizes and writes the (Sq*G, hd) output block.
+
+Masking is purely position-based — ``kv_pos >= 0`` (slot holds a token),
+``kv_pos <= q_pos`` (causal), ``q_pos - kv_pos < window`` — exactly the
+``dot_attention`` contract, so static left-aligned caches and wrapped
+sliding-window ring buffers go through the same kernel.  Chunked decode
+(the speculative verify path, Sq = s_max+1) works because the whole chunk
+is written to the cache before attention runs: intra-chunk causality
+falls out of the per-query positions.  Fully-masked query rows (idle
+serving slots, pos_arr all -1) produce exact zeros, never a mean-of-v.
 
 Tile choice: LT=512 rows x hd(<=256) lanes of K + V in bf16 = 512KiB —
 comfortably inside v5e VMEM with double-buffering; hd is lane-aligned
@@ -25,8 +35,8 @@ NEG = -1e30
 DEFAULT_LT = 512
 
 
-def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
-            m_s, l_s, acc_s, *, n_tiles, scale, window):
+def _kernel(qp_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_s, l_s, acc_s, *, n_tiles, scale, window, softcap):
     t = pl.program_id(2)
 
     @pl.when(t == 0)
@@ -35,25 +45,30 @@ def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
         l_s[...] = jnp.zeros_like(l_s[...])
         acc_s[...] = jnp.zeros_like(acc_s[...])
 
-    q = q_ref[0, 0].astype(jnp.float32) * scale      # [G, hd]
+    q = q_ref[0, 0].astype(jnp.float32) * scale      # [Sq*G, hd]
     k = k_ref[0, :, 0].astype(jnp.float32)           # [LT, hd]
     v = v_ref[0, :, 0].astype(jnp.float32)           # [LT, hd]
     kv_pos = pos_ref[0]                              # [LT] i32
-    q_pos = qpos_ref[0]
+    q_pos = qp_ref[0]                                # [Sq*G] i32
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, LT]
-    valid = (kv_pos >= 0) & (kv_pos <= q_pos)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [Sq*G, LT]
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kv_pos[None, :] >= 0) & (kv_pos[None, :] <= q_pos[:, None])
     if window > 0:
-        valid &= (q_pos - kv_pos) < window
-    s = jnp.where(valid[None, :], s, NEG)
+        valid &= (q_pos[:, None] - kv_pos[None, :]) < window
+    s = jnp.where(valid, s, NEG)
 
-    m_prev = m_s[...]                                # [G, 1]
+    m_prev = m_s[...]                                # [Sq*G, 1]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)                           # [G, LT]
-    corr = jnp.exp(m_prev - m_new)                   # [G, 1]
+    p = jnp.exp(s - m_new)                           # [Sq*G, LT]
+    # explicit zero for masked slots: a fully-masked query row has
+    # s == m_new == NEG, where exp(0) = 1 would poison l (mean-of-v bug)
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)                   # [Sq*G, 1]
     l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
     acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())))              # [G, hd]
+        p, v, (((1,), (0,)), ((), ())))              # [Sq*G, hd]
     m_s[...] = m_new
 
     @pl.when(t == n_tiles - 1)
@@ -63,14 +78,20 @@ def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("window", "tile", "interpret"))
+                   static_argnames=("window", "softcap", "tile", "interpret"))
 def flash_decode_kernel(q, k, v, kv_pos, q_pos, *, window: int = 0,
-                        tile: int = DEFAULT_LT, interpret: bool = True):
-    """q: [B, H, hd]; k/v: [B, L, KV, hd]; kv_pos: i32[B, L] (-1 = empty);
-    q_pos: i32[B].  Returns [B, H, hd] f32."""
-    b, h, hd = q.shape
+                        softcap: float = 0.0, tile: int = DEFAULT_LT,
+                        interpret: bool = True):
+    """q: [B, Sq, H, hd] (or [B, H, hd]); k/v: [B, L, KV, hd];
+    kv_pos: i32[B, L] (-1 = empty); q_pos: i32[B, Sq] (or i32[B]).
+    Returns f32 of q's shape."""
+    single = q.ndim == 3
+    if single:
+        q, q_pos = q[:, None], q_pos[:, None]
+    b, sq, h, hd = q.shape
     _, l, kv, _ = k.shape
     g = h // kv
+    sqg = sq * g
     tile = min(tile, l)
     if l % tile != 0:
         pad = tile - l % tile
@@ -80,27 +101,33 @@ def flash_decode_kernel(q, k, v, kv_pos, q_pos, *, window: int = 0,
         l += pad
     n_tiles = l // tile
 
-    qg = q.reshape(b, kv, g, hd)
+    # fold (Sq, G) into one MXU row axis; q_pos repeats g-fold to match
+    qg = q.reshape(b, sq, kv, g, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, kv, sqg, hd)
+    qp = jnp.repeat(q_pos.astype(jnp.int32), g, axis=1)        # [B, Sq*G]
     kernel = functools.partial(_kernel, n_tiles=n_tiles,
-                               scale=1.0 / math.sqrt(hd), window=window)
+                               scale=1.0 / math.sqrt(hd), window=window,
+                               softcap=softcap)
     out = pl.pallas_call(
         kernel,
         grid=(b, kv, n_tiles),
         in_specs=[
-            pl.BlockSpec((1,), lambda i, j, t: (i,),
+            pl.BlockSpec((1, sqg), lambda i, j, t: (i, 0),
                          memory_space=pltpu.SMEM),             # q_pos
-            pl.BlockSpec((1, 1, g, hd), lambda i, j, t: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, sqg, hd), lambda i, j, t: (i, j, 0, 0)),
             pl.BlockSpec((1, tile, 1, hd), lambda i, j, t: (i, t, j, 0)),
             pl.BlockSpec((1, tile, 1, hd), lambda i, j, t: (i, t, j, 0)),
             pl.BlockSpec((1, tile), lambda i, j, t: (i, t)),   # kv_pos
         ],
-        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, t: (i, j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, kv, g, hd), jnp.float32),
+        out_specs=pl.BlockSpec((1, 1, sqg, hd), lambda i, j, t: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, sqg, hd), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((sqg, 1), jnp.float32),
+            pltpu.VMEM((sqg, 1), jnp.float32),
+            pltpu.VMEM((sqg, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(q_pos, qg, k, v, kv_pos)
-    return out.reshape(b, h, hd)
+    )(qp, qg, k, v, kv_pos)
+    out = out.reshape(b, kv, sq, g, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, sq, h, hd)
+    return out[:, 0] if single else out

@@ -1,9 +1,29 @@
-"""jit'd wrapper for the flash-decode kernel, cache-aware."""
+"""Cache-aware jit'd wrapper for the GQA flash-decode kernel.
+
+Accepts any ``AttnCache`` — static left-aligned caches AND sliding-window
+ring buffers: masking is computed from the cache's absolute ``pos_arr``
+exactly like ``dot_attention`` (validity ``pos >= 0``, causality, window),
+so a wrapped ring layout needs no special casing.  Queries may be a
+single token ([B, H, hd]) or a decode chunk ([B, Sq, H, hd], the
+speculative verify path).  MLA caches are rejected — MLA decode runs the
+absorbed latent-space path in ``models.attention``.
+
+``impl`` selects the execution path:
+* ``"kernel"`` (default) — the Pallas kernel, interpreted off-TPU;
+* ``"ref"`` — the chunked jnp fallback that mirrors ``dot_attention``'s
+  decode math exactly (CPU serving path);
+* ``"auto"`` — kernel on TPU, ref otherwise (what the model-level
+  ``attn_backend="kernel"`` dispatch uses).
+"""
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention.kernel import flash_decode_kernel
+from repro.kernels.decode_attention.ref import flash_decode_chunk_ref
 from repro.serving.kv_cache import AttnCache
 
 Array = jnp.ndarray
@@ -11,14 +31,34 @@ Array = jnp.ndarray
 
 def flash_decode(q: Array, cache_or_k, v: Array | None = None,
                  kv_pos: Array | None = None, q_pos: Array | None = None,
-                 *, window: int = 0, tile: int = 512,
-                 interpret: bool = True) -> Array:
+                 *, window: int = 0, softcap: float = 0.0, tile: int = 512,
+                 impl: str = "kernel",
+                 interpret: Optional[bool] = None) -> Array:
     """Either flash_decode(q, cache, q_pos=...) or explicit (q, k, v,
     kv_pos, q_pos)."""
     if isinstance(cache_or_k, AttnCache):
         cache = cache_or_k
-        return flash_decode_kernel(q, cache.k, cache.v, cache.pos_arr,
-                                   q_pos, window=window, tile=tile,
-                                   interpret=interpret)
-    return flash_decode_kernel(q, cache_or_k, v, kv_pos, q_pos,
-                               window=window, tile=tile, interpret=interpret)
+        k, v, kv_pos = cache.k, cache.v, cache.pos_arr
+    elif hasattr(cache_or_k, "pos_arr"):
+        raise TypeError(
+            f"flash_decode handles AttnCache (static or ring), got "
+            f"{type(cache_or_k).__name__}; MLA/paged caches have their own "
+            f"paths (mla_attend / paged_flash_decode)")
+    else:
+        k = cache_or_k
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        single = q.ndim == 3
+        qc = q[:, None] if single else q
+        qp = q_pos[:, None] if single else q_pos
+        out = flash_decode_chunk_ref(qc, k, v, kv_pos, kv_pos >= 0, qp,
+                                     window=window, softcap=softcap)
+        return out[:, 0] if single else out
+    if impl != "kernel":
+        raise ValueError(f"impl must be auto|kernel|ref, got {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_decode_kernel(q, k, v, kv_pos, q_pos, window=window,
+                               softcap=softcap, tile=tile,
+                               interpret=interpret)

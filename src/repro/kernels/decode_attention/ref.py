@@ -1,4 +1,13 @@
-"""Pure-jnp oracle for the GQA flash-decode kernel."""
+"""Pure-jnp oracles for the GQA flash-decode kernel.
+
+``flash_decode_ref`` is the historical single-token softmax oracle the
+kernel sweeps diff against.  ``flash_decode_chunk_ref`` is the chunked
+CPU fallback used by ``ops.flash_decode(impl="ref")``: it mirrors
+``models.attention.dot_attention``'s decode path (single KV block,
+f32-accumulated einsums, explicit masked-zero probabilities, identical
+operation order) so a serving engine switched between ``attn_backend``
+values on CPU sees bit-identical logits.
+"""
 from __future__ import annotations
 
 import math
@@ -8,10 +17,12 @@ import jax.numpy as jnp
 
 Array = jnp.ndarray
 
+NEG = -1e30
+
 
 def flash_decode_ref(q: Array, k: Array, v: Array, kv_pos: Array,
                      kv_valid: Array, q_pos: Array,
-                     window: int = 0) -> Array:
+                     window: int = 0, softcap: float = 0.0) -> Array:
     """Single-token GQA attention over a cache.
 
     q: [B, H, hd]; k/v: [B, L, KV, hd]; kv_pos: i32[B, L]; kv_valid: bool[B, L];
@@ -22,10 +33,48 @@ def flash_decode_ref(q: Array, k: Array, v: Array, kv_pos: Array,
     g = h // kv
     qf = q.astype(jnp.float32).reshape(b, kv, g, hd) / math.sqrt(hd)
     s = jnp.einsum("bkgh,blkh->bkgl", qf, k.astype(jnp.float32))
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
     mask = kv_valid & (kv_pos <= q_pos[:, None])
     if window > 0:
         mask &= (q_pos[:, None] - kv_pos) < window
-    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    s = jnp.where(mask[:, None, None, :], s, NEG)
     p = jax.nn.softmax(s, axis=-1)
+    p = p * mask[:, None, None, :]           # fully-masked rows -> zeros
     out = jnp.einsum("bkgl,blkh->bkgh", p, v.astype(jnp.float32))
     return out.reshape(b, h, hd)
+
+
+def flash_decode_chunk_ref(q: Array, k: Array, v: Array, kv_pos: Array,
+                           kv_valid: Array, q_pos: Array,
+                           window: int = 0, softcap: float = 0.0) -> Array:
+    """Chunked decode fallback, operation-for-operation identical to
+    ``dot_attention``'s single-block decode path.
+
+    q: [B, Sq, H, hd]; k/v: [B, L, KV, hd]; q_pos: i32[B, Sq].
+    Returns [B, Sq, H, hd] in q.dtype.
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    vd = v.shape[-1]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q * scale).reshape(b, sq, kv, g, hd)
+    s = jnp.einsum("bqkgh,blkh->bqkgl", qf, k,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    mask = kv_valid[:, None, :] & (kv_pos[:, None, :] <= q_pos[:, :, None])
+    if window > 0:
+        mask &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    maskb = mask[:, :, None, None, :]
+    s = jnp.where(maskb, s, NEG)
+    m = jnp.maximum(jnp.full(s.shape[:-1], NEG, jnp.float32),
+                    jnp.max(s, axis=-1))
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(maskb, p, 0.0)             # fully-masked rows -> zeros
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bqkgl,blkh->bqkgh", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    out = pv / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, vd).astype(q.dtype)

@@ -1,18 +1,38 @@
-"""jit'd wrapper for the flash-prefill kernel."""
+"""jit'd wrapper for the flash-prefill kernel.
+
+``impl`` mirrors the decode packages: ``"kernel"`` (default) runs the
+Pallas kernel (interpreted off-TPU), ``"ref"`` the jnp oracle, ``"auto"``
+picks kernel on TPU and ref otherwise — the model-level
+``attn_backend="kernel"`` prefill dispatch uses "auto" so CPU admission
+prefills stay vectorized jnp instead of interpreted Pallas.
+"""
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_prefill.kernel import flash_prefill_kernel
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
 
 Array = jnp.ndarray
 
 
 def flash_prefill(q: Array, k: Array, v: Array, *, window: int = 0,
                   q_tile: int = 256, kv_tile: int = 256,
-                  interpret: bool = True) -> Array:
+                  impl: str = "kernel",
+                  interpret: Optional[bool] = None) -> Array:
     """Causal (optionally sliding-window) chunk self-attention.
 
     q: [B, S, H, hd]; k/v: [B, S, KV, hd] (GQA: KV divides H)."""
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return flash_prefill_ref(q, k, v, window=window)
+    if impl != "kernel":
+        raise ValueError(f"impl must be auto|kernel|ref, got {impl!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     return flash_prefill_kernel(q, k, v, window=window, q_tile=q_tile,
                                 kv_tile=kv_tile, interpret=interpret)

@@ -1,0 +1,4 @@
+from repro.kernels.paged_decode.ops import paged_flash_decode
+from repro.kernels.paged_decode.ref import paged_flash_decode_ref
+
+__all__ = ["paged_flash_decode", "paged_flash_decode_ref"]

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: block-table-native paged GQA decode attention.
+
+The kernel consumes the ``PagedAttnCache`` storage DIRECTLY — shared block
+pools ``[P, bs, KV, hd]``, per-row block table ``i32[B, M]`` and per-slot
+positions — instead of first gathering the contiguous ``[B, M*bs, ...]``
+logical view (``kv_cache.paged_view``).  Per decode step that removes the
+O(B * M*bs * KV * hd) gather traffic per layer; the pool blocks stream
+HBM->VMEM exactly once each.
+
+Grid: (B, KV_heads, M logical blocks), block axis innermost.  The block
+table is a SCALAR-PREFETCH operand (``pltpu.PrefetchScalarGridSpec``): the
+K/V BlockSpec index maps read ``table[b, m]`` to DMA the row's m-th
+logical block straight out of the pool.  Unallocated table entries (-1)
+clamp to pool block 0; their slots carry ``pos_arr == -1`` (the write-path
+invariant "no valid slot without a backing block", docs/KV_CACHE.md) so
+the mask discards them, and an ``@pl.when`` guard skips the FLOPs of
+fully-dead blocks (the DMA itself still runs under the automatic
+pipeliner — acceptable because dead blocks are the table *suffix*).
+
+Queries may be a chunk (speculative verify: [B, Sq, H, hd]): the Sq and
+group axes fold into one ``Sq*G`` row axis so scores stay a single 2-D
+MXU matmul per block; per-row query positions handle intra-chunk
+causality (the whole chunk is written to the cache before attention
+runs, exactly like the jnp path).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(tbl_ref, qp_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_s, l_s, acc_s, *, n_blocks, scale, softcap):
+    b = pl.program_id(0)
+    mi = pl.program_id(2)
+
+    @pl.when(mi == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s[...], NEG)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+
+    phys = tbl_ref[b, mi]                            # i32: -1 = unallocated
+    kv_pos = pos_ref[0]                              # [bs] i32, -1 = empty
+    q_pos = qp_ref[0]                                # [Sq*G] i32
+    slot_ok = (phys >= 0) & (kv_pos >= 0)
+
+    @pl.when(jnp.any(slot_ok))                       # skip dead blocks
+    def _accumulate():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [Sq*G, hd]
+        k = k_ref[0, :, 0].astype(jnp.float32)       # [bs, hd]
+        v = v_ref[0, :, 0].astype(jnp.float32)       # [bs, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [Sq*G, bs]
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = slot_ok[None, :] & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_s[...]                            # [Sq*G, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        # explicit zero: a fully-masked query row has s == m_new == NEG
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_s[...] = m_new
+
+    @pl.when(mi == n_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_s[...]
+                       / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def paged_flash_decode_kernel(q, kpool, vpool, table, pos_arr, q_pos, *,
+                              softcap: float = 0.0, interpret: bool = True):
+    """q: [B, Sq, H, hd] (or [B, H, hd]); kpool/vpool: [P, bs, KV, hd];
+    table: i32[B, M] (-1 = unallocated); pos_arr: i32[B, M*bs] (-1 = empty);
+    q_pos: i32[B, Sq] (or i32[B]).  Returns f32 of q's shape."""
+    single = q.ndim == 3
+    if single:
+        q, q_pos = q[:, None], q_pos[:, None]
+    b, sq, h, hd = q.shape
+    bs, kv = kpool.shape[1], kpool.shape[2]
+    m_blocks = table.shape[1]
+    g = h // kv
+    sqg = sq * g
+
+    # fold (Sq, G) into one row axis; q_pos repeats g-fold to match
+    qr = q.reshape(b, sq, kv, g, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, kv, sqg, hd)
+    qp = jnp.repeat(q_pos.astype(jnp.int32), g, axis=1)        # [B, Sq*G]
+
+    kernel = functools.partial(_kernel, n_blocks=m_blocks,
+                               scale=1.0 / math.sqrt(hd), softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                                 # table
+        grid=(b, kv, m_blocks),
+        in_specs=[
+            pl.BlockSpec((1, sqg), lambda i, j, t, tbl: (i, 0),
+                         memory_space=pltpu.SMEM),             # q_pos
+            pl.BlockSpec((1, 1, sqg, hd), lambda i, j, t, tbl: (i, j, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda i, j, t, tbl: (jnp.maximum(tbl[i, t], 0),
+                                               0, j, 0)),      # k block
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda i, j, t, tbl: (jnp.maximum(tbl[i, t], 0),
+                                               0, j, 0)),      # v block
+            pl.BlockSpec((1, bs), lambda i, j, t, tbl: (i, t)),  # pos_arr
+        ],
+        out_specs=pl.BlockSpec((1, 1, sqg, hd),
+                               lambda i, j, t, tbl: (i, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((sqg, 1), jnp.float32),
+            pltpu.VMEM((sqg, 1), jnp.float32),
+            pltpu.VMEM((sqg, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, sqg, hd), jnp.float32),
+        interpret=interpret,
+    )(table, qp, qr, kpool, vpool, pos_arr)
+    out = out.reshape(b, kv, sq, g, hd).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, sq, h, hd)
+    return out[:, 0] if single else out

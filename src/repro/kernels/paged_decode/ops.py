@@ -1,0 +1,54 @@
+"""Cache-aware dispatcher for block-table-native paged decode attention.
+
+``paged_flash_decode(q, cache, q_pos)`` attends over a ``PagedAttnCache``
+without ever materializing the gathered logical view:
+
+* ``impl="kernel"`` — the Pallas kernel (scalar-prefetched block table;
+  compiled on TPU, ``interpret=True`` elsewhere);
+* ``impl="ref"`` — the fused jnp fallback (dynamic loop over allocated
+  blocks) so CPU runs see the same no-gather win;
+* ``impl="auto"`` (default) — kernel on TPU, ref otherwise.
+
+``PagedMLACache`` is rejected: MLA decode runs the absorbed latent-space
+path (``attention.mla_attend``), which never materializes per-head K/V in
+the first place — the model-level ``attn_backend`` dispatch keeps MLA on
+the jnp path instead of calling this op.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_decode.kernel import paged_flash_decode_kernel
+from repro.kernels.paged_decode.ref import paged_flash_decode_ref
+from repro.serving.kv_cache import PagedAttnCache
+
+Array = jnp.ndarray
+
+
+def paged_flash_decode(q: Array, cache: PagedAttnCache, q_pos: Array, *,
+                       softcap: float = 0.0, impl: str = "auto",
+                       interpret: Optional[bool] = None) -> Array:
+    """q: [B, Sq, H, hd] or [B, H, hd]; q_pos: i32[B, Sq] or i32[B].
+    Returns attention output of q's shape (q.dtype under "ref", f32 under
+    "kernel", matching the package's existing kernels)."""
+    if not isinstance(cache, PagedAttnCache):
+        raise TypeError(
+            f"paged_flash_decode needs a PagedAttnCache, got "
+            f"{type(cache).__name__} (MLA caches stay on the absorbed "
+            f"jnp path)")
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "kernel":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return paged_flash_decode_kernel(
+            q, cache.kpool, cache.vpool, cache.table, cache.pos_arr, q_pos,
+            softcap=softcap, interpret=interpret)
+    if impl == "ref":
+        return paged_flash_decode_ref(
+            q, cache.kpool, cache.vpool, cache.table, cache.pos_arr, q_pos,
+            softcap=softcap)
+    raise ValueError(f"impl must be auto|kernel|ref, got {impl!r}")

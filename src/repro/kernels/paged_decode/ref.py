@@ -1,0 +1,82 @@
+"""Fused jnp fallback for the block-table-native paged decode kernel.
+
+Unlike ``attention.paged_dot_attention`` — which first gathers the full
+``[B, M*bs, ...]`` logical view through the block table and then runs the
+dense core — this reference indexes the pool one logical block per loop
+step and folds it into an online-softmax accumulator.  Two consequences:
+
+* no materialized contiguous copy of the cache (the per-step gather is
+  one ``[B, bs, KV, hd]`` block, freed before the next step);
+* the loop bound is the highest ALLOCATED block count, not the table
+  width: allocated logical blocks form a per-row prefix (free-list
+  invariant 3, docs/KV_CACHE.md), so per-token decode cost tracks pool
+  *occupancy* while the gather path pays for full logical *capacity*.
+
+This is the CPU/interpret backend behind ``ops.paged_flash_decode`` —
+the microbench (``benchmarks/paged_decode_bench.py``) measures exactly
+this occupancy-vs-capacity gap.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+NEG = -1e30
+
+
+def paged_flash_decode_ref(q: Array, kpool: Array, vpool: Array,
+                           table: Array, pos_arr: Array, q_pos: Array, *,
+                           softcap: float = 0.0) -> Array:
+    """q: [B, Sq, H, hd] (or [B, H, hd]); kpool/vpool: [P, bs, KV, hd];
+    table: i32[B, M]; pos_arr: i32[B, M*bs]; q_pos: i32[B, Sq] (or i32[B]).
+    Returns q.dtype of q's shape."""
+    single = q.ndim == 3
+    if single:
+        q, q_pos = q[:, None], q_pos[:, None]
+    b, sq, h, hd = q.shape
+    bs, kv = kpool.shape[1], kpool.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q * scale).reshape(b, sq, kv, g, hd)
+
+    # allocated logical blocks are a per-row prefix -> the max allocated
+    # count bounds a dynamic-trip-count loop (lowered to while_loop):
+    # decode cost follows occupancy, not table width
+    n_live = jnp.max(jnp.sum((table >= 0).astype(jnp.int32), axis=1))
+
+    def body(mi, carry):
+        m_run, l_run, acc = carry
+        phys = jax.lax.dynamic_index_in_dim(table, mi, axis=1,
+                                            keepdims=False)      # [B]
+        ks = kpool[jnp.maximum(phys, 0)]          # [B, bs, KV, hd]
+        vs = vpool[jnp.maximum(phys, 0)]
+        kvp = jax.lax.dynamic_slice_in_dim(pos_arr, mi * bs, bs,
+                                           axis=1)               # [B, bs]
+        s = jnp.einsum("bqkgh,blkh->bqkgl", qf, ks,
+                       preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = (kvp >= 0)[:, None, :] & (phys >= 0)[:, None, None] \
+            & (kvp[:, None, :] <= q_pos[:, :, None])             # [B, Sq, bs]
+        maskb = mask[:, :, None, None, :]
+        s = jnp.where(maskb, s, NEG)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(maskb, p, 0.0)              # fully-masked rows -> 0
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgl,blkh->bqkgh", p.astype(vs.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        return m_new, l_new, acc * corr[..., None] + pv
+
+    m0 = jnp.full((b, sq, kv, g), NEG, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kv, g, hd), jnp.float32)
+    _, l_f, acc = jax.lax.fori_loop(0, n_live, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    out = out.reshape(b, sq, h, hd).astype(q.dtype)
+    return out[:, 0] if single else out

@@ -1,11 +1,23 @@
 """jit'd public wrapper: batched ragged gather-logprobs for verification.
 
 ``gather_logprobs(logits [.., V], tokens [..])`` flattens leading dims to
-rows, runs the Pallas kernel (interpret=True on CPU; compiled on TPU), and
-reshapes back.  Used by the verification server to compute log p_j(s_j) and
-log q_j(s_j) without materializing [N, S, V] softmaxes.
+rows, dispatches on ``impl``, and reshapes back.  Used by the
+verification server (``core.speculative.verify(backend="kernel")``) to
+compute log p_j(s_j) and log q_j(s_j) without materializing [N, S, V]
+softmaxes on TPU.
+
+* ``impl="kernel"`` (default) — the Pallas kernel (compiled on TPU,
+  ``interpret=True`` elsewhere);
+* ``impl="ref"`` — log-softmax + gather with EXACTLY the operation order
+  of ``core.speculative._log_softmax``, so a CPU engine switched between
+  verify backends sees bit-identical accept decisions;
+* ``impl="auto"`` — kernel on TPU, ref otherwise (what the engine's
+  ``attn_backend="kernel"`` flag uses: interpreted Pallas never lands in
+  the jit'd serving round off-TPU).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,12 +28,28 @@ Array = jnp.ndarray
 
 
 def gather_logprobs(logits: Array, tokens: Array, *, tile: int = 2048,
-                    interpret: bool = True) -> tuple[Array, Array]:
+                    impl: str = "kernel",
+                    interpret: Optional[bool] = None) -> tuple[Array, Array]:
     """logits [..., V], tokens i32[...] -> (logprob [...], logz [...])."""
     lead = logits.shape[:-1]
     v = logits.shape[-1]
     flat_logits = logits.reshape(-1, v)
     flat_tokens = tokens.reshape(-1).astype(jnp.int32)
-    lp, lz = gather_logprobs_kernel(flat_logits, flat_tokens, tile=tile,
-                                    interpret=interpret)
+    if impl == "auto":
+        impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        # mirror _log_softmax's op order (shift by max, then normalize)
+        # bitwise — NOT the ref oracle's tok - logsumexp association
+        lp_full = jax.nn.log_softmax(flat_logits.astype(jnp.float32),
+                                     axis=-1)
+        lp = jnp.take_along_axis(lp_full, flat_tokens[:, None],
+                                 axis=-1)[:, 0]
+        lz = jax.nn.logsumexp(flat_logits.astype(jnp.float32), axis=-1)
+    else:
+        if impl != "kernel":
+            raise ValueError(f"impl must be auto|kernel|ref, got {impl!r}")
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        lp, lz = gather_logprobs_kernel(flat_logits, flat_tokens, tile=tile,
+                                        interpret=interpret)
     return lp.reshape(lead), lz.reshape(lead)

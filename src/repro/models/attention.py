@@ -19,6 +19,13 @@ Paged caches (block-pool storage; see docs/KV_CACHE.md) attend through
 ``paged_dot_attention``: the per-row block table gathers a logical
 [B, L, KV, hd] view of the pool, after which the same masking contract
 (explicit kv positions + validity) applies unchanged.
+
+``decode_cache_attention`` is the serving decode entry point: it
+dispatches on cache type AND on ``ModelConfig.attn_backend`` — under
+``"kernel"`` paged GQA caches go to the block-table-native
+``repro.kernels.paged_decode`` kernel (no gathered view at all) and
+static/ring GQA caches to ``repro.kernels.decode_attention``; anything
+a kernel doesn't cover (MLA latents) degrades to the jnp core.
 """
 from __future__ import annotations
 
@@ -29,9 +36,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MLAConfig, ModelConfig
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.paged_decode import paged_flash_decode
 from repro.models.layers import (_dense_init, apply_head_norm, apply_rope,
                                  init_head_norm)
-from repro.serving.kv_cache import paged_view
+from repro.serving.kv_cache import (AttnCache, PAGED_TYPES, PagedAttnCache,
+                                    paged_view)
 
 Array = jnp.ndarray
 
@@ -128,6 +138,37 @@ def paged_dot_attention(q: Array, cache, q_pos: Array,
     k, v = paged_view(cache)
     return dot_attention(q, k, v, q_pos, cache.pos_arr,
                          cache.pos_arr >= 0, softcap=softcap)
+
+
+def decode_cache_attention(q: Array, cache, q_pos: Array, *,
+                           window: int = 0, softcap: float = 0.0,
+                           backend: str = "jnp") -> Array:
+    """Decode-mode GQA attention over an already-updated cache, dispatched
+    on cache type and ``backend`` (= ``ModelConfig.attn_backend``):
+
+    * ``"kernel"`` + ``PagedAttnCache`` -> block-table-native
+      ``paged_flash_decode`` (never materializes the ``paged_view``);
+    * ``"kernel"`` + ``AttnCache`` (static or ring) -> ``flash_decode``,
+      same position-based masking as ``dot_attention``;
+    * ``"jnp"`` -> the blockwise jnp core (gathered view for paged).
+
+    MLA decode never reaches this function — it stays on the absorbed
+    latent path (``mla_attend``) regardless of backend.  ``impl="auto"``
+    inside the kernel ops compiles the Pallas kernel on TPU and runs the
+    fused jnp fallbacks elsewhere, so the dispatch is safe on any
+    platform."""
+    if backend == "kernel":
+        if isinstance(cache, PagedAttnCache):
+            return paged_flash_decode(q, cache, q_pos, softcap=softcap,
+                                      impl="auto").astype(q.dtype)
+        if isinstance(cache, AttnCache):
+            return flash_decode(q, cache, q_pos=q_pos, window=window,
+                                softcap=softcap,
+                                impl="auto").astype(q.dtype)
+    if isinstance(cache, PAGED_TYPES):
+        return paged_dot_attention(q, cache, q_pos, softcap=softcap)
+    return dot_attention(q, cache.k, cache.v, q_pos, cache.pos_arr,
+                         cache.pos_arr >= 0, window=window, softcap=softcap)
 
 
 # ---------------------------------------------------------------------------

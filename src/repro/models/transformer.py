@@ -25,14 +25,14 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import constrain
 from repro.models import ssm
+from repro.kernels.flash_prefill import flash_prefill
 from repro.models.attention import (apply_cross_attention, attention_out,
-                                    attention_qkv, dot_attention,
-                                    init_attention, init_mla, mla_attend,
-                                    mla_project, paged_dot_attention)
+                                    attention_qkv, decode_cache_attention,
+                                    dot_attention, init_attention, init_mla,
+                                    mla_attend, mla_project)
 from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
 from repro.models.moe import apply_moe, init_moe
-from repro.serving.kv_cache import (AttnCache, MLACache, PagedMLACache,
-                                    PAGED_TYPES, init_attn_cache,
+from repro.serving.kv_cache import (PagedMLACache, init_attn_cache,
                                     init_mla_cache, init_paged_attn_cache,
                                     init_paged_mla_cache, paged_view,
                                     write_chunk, write_prefill)
@@ -183,15 +183,24 @@ def _attend(params, kind, cfg: ModelConfig, x_norm, positions, cache, mode,
         lengths = chunk_valid.sum(-1).astype(jnp.int32) if chunk_valid \
             is not None else jnp.full((b,), s, jnp.int32)
         cache = write_prefill(cache, (k, v), lengths, ring=ring)
+        if cfg.attn_backend == "kernel" and not ring \
+                and cfg.logit_softcap == 0.0:
+            # kernel prefill: chunk-causal self-attention over (q, k, v)
+            # directly.  Valid rows are left-aligned prefixes, so every
+            # key a valid query may attend (kv_pos <= q_pos) is inside
+            # the chunk — identical to attending over the just-written
+            # cache.  Ring layers keep the cache path (their prefill may
+            # evict early keys, a semantic the chunk kernel lacks).
+            ctx = flash_prefill(q, k, v, impl="auto").astype(q.dtype)
+            return attention_out(params["attn"], ctx), cache
+        ctx = decode_cache_attention(q, cache, positions, window=window,
+                                     softcap=cfg.logit_softcap,
+                                     backend="jnp")
     else:
         cache = write_chunk(cache, (k, v), chunk_valid, ring=ring)
-    if isinstance(cache, PAGED_TYPES):
-        ctx = paged_dot_attention(q, cache, positions,
-                                  softcap=cfg.logit_softcap)
-    else:
-        valid = cache.pos_arr >= 0
-        ctx = dot_attention(q, cache.k, cache.v, positions, cache.pos_arr,
-                            valid, window=window, softcap=cfg.logit_softcap)
+        ctx = decode_cache_attention(q, cache, positions, window=window,
+                                     softcap=cfg.logit_softcap,
+                                     backend=cfg.attn_backend)
     return attention_out(params["attn"], ctx), cache
 
 

@@ -17,6 +17,13 @@ Round structure (paper Fig. 1):
 
 The whole round is ONE jit-compiled function with the engine state donated,
 so the dynamic serving loop pays no per-round retrace or cache-copy cost.
+``attn_backend="kernel"`` additionally routes every attention in the
+round — draft decode, the verify chunk, and the jit'd admission prefill —
+through the Pallas kernel packages (``repro.kernels``: flash_prefill /
+flash_decode / paged_flash_decode, with spec_verify's fused
+gather-logprobs behind ``core.speculative.verify``); ``"jnp"`` keeps the
+blockwise jnp core.  Both backends emit identical accepted-token
+sequences (tests/test_paged_kernel.py).
 
 Request lifecycle (``serve_requests``): the verification server owns a
 ``RequestManager`` (serving.request) with one FIFO queue per draft server.
@@ -176,10 +183,29 @@ class GoodSpeedEngine:
     paged_kv: bool = False
     kv_block_size: int = 16
     kv_num_blocks: int = 0         # 0 = n_servers * ceil(cache_len / bs)
+    # attention/verify backend, ONE flag for the whole hot path: "kernel"
+    # rebuilds both models with cfg.attn_backend="kernel" (draft decode,
+    # verify chunk and the jit'd admission prefill dispatch to the Pallas
+    # kernel packages — paged_flash_decode / flash_decode / flash_prefill
+    # — with jnp fallbacks wherever a kernel doesn't apply) and routes
+    # rejection sampling through the fused spec_verify gather-logprobs
+    # kernel.  None inherits the target model's cfg.attn_backend.
+    attn_backend: Optional[str] = None
 
     def __post_init__(self):
         # resolve the policy once; validates the name at construction time
         object.__setattr__(self, "_sched", make_scheduler(self.policy))
+        backend = self.attn_backend
+        if backend is None:
+            backend = self.target_model.cfg.attn_backend
+            object.__setattr__(self, "attn_backend", backend)
+        assert backend in ("jnp", "kernel"), \
+            f"attn_backend must be jnp|kernel, got {backend!r}"
+        for name in ("draft_model", "target_model"):
+            model = getattr(self, name)
+            if model.cfg.attn_backend != backend:
+                object.__setattr__(self, name, Model(dataclasses.replace(
+                    model.cfg, attn_backend=backend)))
         # ONE compiled round: engine state is donated so caches update
         # in place — the dynamic serve loop stays retrace-free.
         object.__setattr__(self, "_round_fn",
@@ -481,14 +507,18 @@ class GoodSpeedEngine:
             length=state.length.at[idx].set(pend_idx))
 
     # ------------------------------------------------------------------
-    def _draft(self, params, state: EngineState, key: Array, active: Array):
+    def _draft(self, params, state: EngineState, key: Array, active: Array,
+               vmask: Optional[Array]):
         """Step (1): each server decodes s_max tokens (rows with S_i < s_max
         mask the tail).  Returns draft tokens, their q logits, updated cache.
 
         Idle rows (active[b] = False) are masked out of the cache writes:
         their draft tokens are discarded anyway, and under ``paged_kv`` an
         unmasked idle-row write would allocate pool blocks a live row may
-        need."""
+        need.
+
+        vmask: the pad-vocab mask from ``_vocab_mask``, built ONCE per
+        round and closed over here — not rebuilt in every scan step."""
         n, s_cap = self.n_servers, self.s_max
         temps = jnp.asarray(self.draft_temps or (1.0,) * n, jnp.float32)
 
@@ -499,7 +529,8 @@ class GoodSpeedEngine:
                 params, tok[:, None], mode="decode", cache=cache,
                 positions=pos[:, None], chunk_valid=active[:, None])
             logits = out.logits[:, 0, :]  # [N, Vp]
-            logits = self._mask_vocab(logits, self.draft_model.cfg)
+            if vmask is not None:
+                logits = logits + vmask
             # q := the ACTUAL sampling distribution (incl. temperature) —
             # rejection sampling is only lossless w.r.t. the true q.
             logits = logits / temps[:, None]
@@ -514,17 +545,19 @@ class GoodSpeedEngine:
         return toks.swapaxes(0, 1), qlogits.swapaxes(0, 1), cache
 
     @staticmethod
-    def _mask_vocab(logits: Array, cfg: ModelConfig) -> Array:
-        if cfg.padded_vocab > cfg.vocab_size:
-            pad = logits.shape[-1] - cfg.vocab_size
-            mask = jnp.concatenate([jnp.zeros((cfg.vocab_size,)),
-                                    jnp.full((pad,), -1e30)])
-            logits = logits + mask
-        return logits
+    def _vocab_mask(cfg: ModelConfig) -> Optional[Array]:
+        """Additive mask hiding the padded vocab tail (None when the vocab
+        is unpadded).  Hoisted out of the per-token draft scan body: the
+        mask is built once per round and closed over."""
+        if cfg.padded_vocab <= cfg.vocab_size:
+            return None
+        pad = cfg.padded_vocab - cfg.vocab_size
+        return jnp.concatenate([jnp.zeros((cfg.vocab_size,)),
+                                jnp.full((pad,), -1e30)])
 
     # ------------------------------------------------------------------
     def _verify_chunk(self, params, state: EngineState, draft_toks: Array,
-                      S: Array, active: Array):
+                      S: Array, active: Array, vmask: Optional[Array]):
         """Step (4a): target scores [pending, d_1..d_{S-1}, d_S] in one
         decode-chunk; output j is the distribution of chunk position j+1.
         Inactive (idle-server) rows are masked out of the chunk entirely —
@@ -539,7 +572,7 @@ class GoodSpeedEngine:
         out = self.target_model.forward(
             params, chunk, mode="decode", cache=state.target_cache,
             positions=positions, chunk_valid=chunk_valid)
-        p_logits = self._mask_vocab(out.logits, self.target_model.cfg)
+        p_logits = out.logits if vmask is None else out.logits + vmask
         return p_logits, out.cache, in_draft
 
     # ------------------------------------------------------------------
@@ -564,12 +597,17 @@ class GoodSpeedEngine:
                         key=k_sched, s_max=s_cap)
         S = jnp.where(active, S, 0)
 
+        # pad-vocab masks built once per round (closed over by the draft
+        # scan body instead of rebuilt per token)
+        vmask_d = self._vocab_mask(self.draft_model.cfg)
+        vmask_t = self._vocab_mask(self.target_model.cfg)
         draft_toks, q_logits, draft_cache = self._draft(
-            draft_params, state, k_draft, active)
+            draft_params, state, k_draft, active, vmask_d)
         p_logits, target_cache, in_draft = self._verify_chunk(
-            target_params, state, draft_toks, S, active)
+            target_params, state, draft_toks, S, active, vmask_t)
 
-        res = verify(k_verify, draft_toks, q_logits, p_logits, S)
+        res = verify(k_verify, draft_toks, q_logits, p_logits, S,
+                     backend=self.attn_backend)
         m = jnp.where(active, res.accepted, 0)
         num_emitted = jnp.where(active, res.num_emitted, 0)
         realized = num_emitted.astype(jnp.float32)

@@ -1,0 +1,259 @@
+"""Block-table-native paged decode kernel vs the gather-path oracle, and
+end-to-end ``attn_backend`` equivalence.
+
+The oracle is ``attention.paged_dot_attention`` (paged_view gather + dense
+core).  Cache states under test are produced by driving the REAL paged
+primitives — prefill, masked chunk writes, rollback, row retirement — so
+the block tables carry holes, freed-and-reclaimed blocks, wrapped
+allocation order, and fully-idle rows (``pos_arr == -1``), exactly the
+states the serving engine produces.  See docs/KV_CACHE.md for the kernel
+contract (safe-index rule for unbacked slots).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.paged_decode import paged_flash_decode
+from repro.models import Model
+from repro.models.attention import dot_attention, paged_dot_attention
+from repro.serving import kv_cache as kc
+from repro.serving.engine import GoodSpeedEngine
+from repro.serving.request import Request
+from tests.proptest import sweep
+
+
+def _random_paged_cache(rng, b, length, kv, hd, bs, num_blocks=0):
+    """Drive real primitives to a state with holes, reuse, and idle rows."""
+    cache = kc.init_paged_attn_cache(b, length, kv, hd, jnp.float32, bs,
+                                     num_blocks=num_blocks)
+    mk = lambda s: (jnp.asarray(rng.normal(size=(b, s, kv, hd)),
+                                jnp.float32),
+                    jnp.asarray(rng.normal(size=(b, s, kv, hd)),
+                                jnp.float32))
+    lengths = jnp.asarray(rng.integers(1, length // 2, size=(b,)), jnp.int32)
+    cache = kc.write_prefill(cache, mk(int(lengths.max())), lengths)
+    for _ in range(rng.integers(0, 3)):
+        s = int(rng.integers(1, 6))
+        valid = jnp.asarray(rng.random((b, s)) < 0.8)
+        cache = kc.write_chunk(cache, mk(s), valid)
+        if rng.random() < 0.5:   # speculative rollback: tail blocks freed
+            keep = jnp.maximum(cache.next_pos
+                               - jnp.asarray(rng.integers(0, 4, size=(b,)),
+                                             jnp.int32), 0)
+            cache = kc.rollback(cache, keep)
+    if rng.random() < 0.5:       # retire a row -> fully-idle slots
+        rows = jnp.asarray(rng.random((b,)) < 0.5)
+        cache = kc.reset_rows(cache, rows)
+    return cache
+
+
+class TestPagedFlashDecode:
+    @sweep(cases=20, seed=30)
+    def test_matches_gather_oracle(self, draw):
+        """Kernel and fused ref match paged_dot_attention on random
+        admit/rollback/retire cache states, chunk and single-token."""
+        rng = np.random.default_rng(draw.integers(0, 99999))
+        b = draw.integers(1, 4)
+        kv = draw.choice([1, 2])
+        g = draw.choice([1, 2, 4])
+        h = kv * g
+        hd = draw.choice([16, 32])
+        bs = draw.choice([4, 8])
+        length = draw.choice([32, 48, 64])
+        sq = draw.choice([1, 3, 5])
+        cache = _random_paged_cache(rng, b, length, kv, hd, bs)
+        q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), jnp.float32)
+        q_pos = cache.next_pos[:, None] + jnp.arange(sq)[None, :]
+        ref = paged_dot_attention(q, cache, q_pos)
+        for impl in ("ref", "kernel"):
+            out = paged_flash_decode(q, cache, q_pos, impl=impl)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=2e-5, rtol=2e-5)
+
+    def test_idle_rows_exact_zero(self):
+        """A fully-idle row (all slots pos_arr = -1) yields exact zeros —
+        never a mean-of-v — matching the jnp core's masked-zero rule."""
+        rng = np.random.default_rng(1)
+        b, kv, hd, bs, length = 2, 2, 16, 8, 32
+        cache = kc.init_paged_attn_cache(b, length, kv, hd, jnp.float32, bs)
+        vals = (jnp.asarray(rng.normal(size=(b, 6, kv, hd)), jnp.float32),
+                jnp.asarray(rng.normal(size=(b, 6, kv, hd)), jnp.float32))
+        cache = kc.write_prefill(cache, vals,
+                                 jnp.asarray([6, 0], jnp.int32))
+        q = jnp.asarray(rng.normal(size=(b, 2, 4, hd)), jnp.float32)
+        q_pos = jnp.asarray([[6, 7], [0, 1]], jnp.int32)
+        for impl in ("ref", "kernel"):
+            out = np.asarray(paged_flash_decode(q, cache, q_pos, impl=impl))
+            assert np.all(out[1] == 0.0), impl
+            assert np.any(out[0] != 0.0), impl
+
+    def test_unbacked_slots_never_leak_block_zero(self):
+        """Safe-index rule: a -1 table entry clamps to pool block 0, whose
+        (other request's) K/V must be masked out, not attended."""
+        rng = np.random.default_rng(2)
+        kv, hd, bs, length = 1, 16, 4, 16
+        cache = kc.init_paged_attn_cache(2, length, kv, hd, jnp.float32, bs)
+        vals = (jnp.asarray(rng.normal(size=(2, 4, kv, hd)), jnp.float32),
+                jnp.asarray(rng.normal(size=(2, 4, kv, hd)), jnp.float32))
+        # row 0 owns block 0 entirely; row 1 holds ONE token in block 1
+        cache = kc.write_prefill(cache, vals, jnp.asarray([4, 1], jnp.int32))
+        q = jnp.asarray(rng.normal(size=(2, 1, kv, hd)), jnp.float32)
+        q_pos = jnp.asarray([[4], [1]], jnp.int32)
+        # row 1's single valid slot -> output must be exactly its value
+        expect = np.asarray(cache.vpool[int(cache.table[1, 0]), 0, 0])
+        for impl in ("ref", "kernel"):
+            out = np.asarray(paged_flash_decode(q, cache, q_pos, impl=impl))
+            np.testing.assert_allclose(out[1, 0, 0], expect, atol=1e-5)
+
+    def test_mla_cache_rejected(self):
+        cache = kc.init_paged_mla_cache(1, 16, 4, 2, jnp.float32, 8)
+        q = jnp.zeros((1, 1, 2, 4))
+        with pytest.raises(TypeError):
+            paged_flash_decode(q, cache, jnp.zeros((1, 1), jnp.int32))
+
+
+class TestChunkedFlashDecode:
+    """The extended decode_attention ops: chunk queries, ring caches."""
+
+    @sweep(cases=15, seed=31)
+    def test_chunk_matches_dot_attention(self, draw):
+        rng = np.random.default_rng(draw.integers(0, 99999))
+        b = draw.integers(1, 3)
+        kv = draw.choice([1, 2])
+        g = draw.choice([1, 2])
+        h = kv * g
+        hd = draw.choice([16, 32])
+        l = draw.choice([24, 40])
+        sq = draw.choice([1, 4, 6])
+        window = draw.choice([0, 0, 8])
+        fill = rng.integers(1, l + 1, size=(b,))
+        kv_pos = np.full((b, l), -1, np.int32)
+        for i in range(b):
+            kv_pos[i, :fill[i]] = np.arange(fill[i])
+        kv_pos = jnp.asarray(kv_pos)
+        q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, l, kv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, l, kv, hd)), jnp.float32)
+        q_pos = jnp.asarray(fill - 1, jnp.int32)[:, None] \
+            + jnp.arange(sq)[None, :]
+        ref = dot_attention(q, k, v, q_pos, kv_pos, kv_pos >= 0,
+                            window=window)
+        for impl, tol in (("kernel", 3e-5), ("ref", 0.0)):
+            out = flash_decode(q, k, v, kv_pos, q_pos, window=window,
+                               impl=impl, tile=8)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=tol, rtol=tol)
+
+    def test_ring_cache_dispatch(self):
+        """Cache-form dispatch accepts a ring AttnCache (wrapped pos_arr)
+        and matches the jnp core's window masking."""
+        rng = np.random.default_rng(5)
+        b, kv, hd, l, window = 1, 2, 16, 8, 6
+        cache = kc.init_attn_cache(b, l, kv, hd, jnp.float32)
+        vals = (jnp.asarray(rng.normal(size=(b, 12, kv, hd)), jnp.float32),
+                jnp.asarray(rng.normal(size=(b, 12, kv, hd)), jnp.float32))
+        cache = kc.write_prefill(cache, vals,
+                                 jnp.asarray([12], jnp.int32), ring=True)
+        assert int(cache.pos_arr.min()) >= 0  # wrapped, fully occupied
+        q = jnp.asarray(rng.normal(size=(b, 2, 4, hd)), jnp.float32)
+        q_pos = jnp.asarray([[11, 12]], jnp.int32)
+        ref = dot_attention(q, cache.k, cache.v, q_pos, cache.pos_arr,
+                            cache.pos_arr >= 0, window=window)
+        for impl in ("kernel", "ref"):
+            out = flash_decode(q, cache, q_pos=q_pos, window=window,
+                               impl=impl, tile=4)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       atol=3e-5, rtol=3e-5)
+
+    def test_mla_cache_rejected(self):
+        cache = kc.init_mla_cache(1, 8, 4, 2, jnp.float32)
+        with pytest.raises(TypeError):
+            flash_decode(jnp.zeros((1, 2, 4)), cache,
+                         q_pos=jnp.zeros((1,), jnp.int32))
+
+
+class TestBackendEquivalence:
+    """ACCEPTANCE: attn_backend="kernel" and "jnp" emit identical
+    accepted-token sequences on a mixed admit/retire/EOS serve_requests
+    trace, for both paged and static caches (mirrors
+    tests/test_paged_cache.py's paged-vs-static equivalence rule)."""
+    VOCAB = 64
+
+    @pytest.fixture(scope="class")
+    def pair(self):
+        dm = Model(get_reduced("olmo-1b", num_layers=2, d_model=64,
+                               num_heads=2, num_kv_heads=2, head_dim=32,
+                               d_ff=128, vocab_size=self.VOCAB))
+        tm = Model(get_reduced("qwen3-8b", num_layers=2, d_model=128,
+                               num_heads=4, num_kv_heads=2, head_dim=32,
+                               d_ff=256, vocab_size=self.VOCAB))
+        return dm, tm, dm.init(jax.random.PRNGKey(0)), \
+            tm.init(jax.random.PRNGKey(1))
+
+    def _requests(self, k, seed=11, max_new=5):
+        rng = np.random.default_rng(seed)
+        return [Request(prompt=rng.integers(1, self.VOCAB, size=8)
+                        .astype(np.int32), max_new_tokens=max_new,
+                        eos_token=(4 if i % 2 else -1)) for i in range(k)]
+
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_identical_accepted_tokens(self, pair, paged):
+        dm, tm, dp, tp = pair
+        seqs = {}
+        for backend in ("jnp", "kernel"):
+            eng = GoodSpeedEngine(draft_model=dm, target_model=tm,
+                                  n_servers=2, C=8, s_max=4, cache_len=128,
+                                  paged_kv=paged, kv_block_size=16,
+                                  attn_backend=backend)
+            rep = eng.serve_requests(jax.random.PRNGKey(0),
+                                     self._requests(7), dp, tp, rounds=60)
+            assert rep["summary"]["completed"] == 7
+            seqs[backend] = [r["generated"] for r in
+                             sorted(rep["requests"],
+                                    key=lambda r: r["request_id"])]
+        assert seqs["kernel"] == seqs["jnp"]
+
+    def test_ring_and_mla_stacks_degrade_cleanly(self):
+        """Sliding-window (ring) draft + MLA target under the kernel
+        backend: ring decode dispatches to flash_decode, MLA stays on the
+        absorbed jnp path — no crash, identical emissions."""
+        dm = Model(get_reduced("h2o-danube-3-4b", num_layers=2, d_model=64,
+                               num_heads=2, num_kv_heads=2, head_dim=32,
+                               d_ff=128, vocab_size=self.VOCAB))
+        tm = Model(get_reduced("deepseek-v2-lite-16b", num_layers=2,
+                               d_model=64, num_heads=2, num_kv_heads=2,
+                               d_ff=128, vocab_size=self.VOCAB))
+        assert set(dm.cfg.layer_kinds) == {"sliding_attn"}
+        assert tm.cfg.mla is not None
+        dp, tp = dm.init(jax.random.PRNGKey(0)), tm.init(jax.random.PRNGKey(1))
+        rng = np.random.default_rng(3)
+        prompts = [rng.integers(1, self.VOCAB, size=9).astype(np.int32)
+                   for _ in range(2)]
+        hists = {}
+        for backend in ("jnp", "kernel"):
+            eng = GoodSpeedEngine(draft_model=dm, target_model=tm,
+                                  n_servers=2, C=6, s_max=3, cache_len=64,
+                                  attn_backend=backend)
+            hists[backend] = eng.serve(jax.random.PRNGKey(4), prompts,
+                                       dp, tp, rounds=4)
+        for h0, h1 in zip(hists["jnp"], hists["kernel"]):
+            np.testing.assert_array_equal(h0.emitted, h1.emitted)
+
+    def test_backend_threads_through_engine(self, pair):
+        """The engine flag rebuilds both models' configs; None inherits."""
+        dm, tm, dp, tp = pair
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=2,
+                              C=8, s_max=4, cache_len=64,
+                              attn_backend="kernel")
+        assert eng.draft_model.cfg.attn_backend == "kernel"
+        assert eng.target_model.cfg.attn_backend == "kernel"
+        inherit = GoodSpeedEngine(draft_model=eng.draft_model,
+                                  target_model=eng.target_model,
+                                  n_servers=2, C=8, s_max=4, cache_len=64)
+        assert inherit.attn_backend == "kernel"
+        with pytest.raises(AssertionError):
+            GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=2,
+                            C=8, s_max=4, attn_backend="cuda")
