@@ -12,7 +12,13 @@ docs-check:
 kernels-check:
 	PYTHONPATH=src python -m pytest -x -q tests/test_kernels.py tests/test_paged_kernel.py
 
+# global-admission layer standalone: placement property suite (random
+# arrival traces x policies), the static-vs-legacy equivalence traces,
+# the fairness regression, and the request-manager lifecycle tests
+placement-check:
+	PYTHONPATH=src python -m pytest -x -q tests/test_placement.py tests/test_sampling_requests.py
+
 bench:
 	PYTHONPATH=src python -m benchmarks.run
 
-.PHONY: test docs-check kernels-check bench
+.PHONY: test docs-check kernels-check placement-check bench

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_call
+from benchmarks.common import jain, time_call
 from repro.core.coordinator import Coordinator
 from repro.core.estimator import GoodputEstimator, StepSchedule
 from repro.core.latency import LatencyModel
@@ -22,10 +22,6 @@ from repro.core.utility import UtilitySpec
 from repro.data.pipeline import make_workload
 
 N, ROUNDS = 8, 500
-
-
-def _jain(x: np.ndarray) -> float:
-    return float(x.sum() ** 2 / (len(x) * (x ** 2).sum()))
 
 
 def run():
@@ -45,7 +41,7 @@ def run():
         rows.append((f"ablate_utility_alpha{ua:g}_total_goodput",
                      us / ROUNDS, round(float(avg.sum()), 3)))
         rows.append((f"ablate_utility_alpha{ua:g}_jain_fairness",
-                     us / ROUNDS, round(_jain(avg), 4)))
+                     us / ROUNDS, round(jain(avg), 4)))
 
     # 2. budget sweep
     for c in (8, 16, 32, 64):

@@ -22,6 +22,13 @@ def time_call(fn, *args, iters: int = 5, warmup: int = 2, **kwargs):
     return float(np.median(times)), out
 
 
+def jain(x: np.ndarray) -> float:
+    """Jain's fairness index over per-server allocations: 1 = perfectly
+    even, 1/N = one server takes everything."""
+    x = np.asarray(x, np.float64)
+    return float(x.sum() ** 2 / (len(x) * (x ** 2).sum() + 1e-12))
+
+
 def moving_average(x: np.ndarray, w: int = 10) -> np.ndarray:
     if len(x) < w:
         return x

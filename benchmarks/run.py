@@ -7,8 +7,11 @@
   e2e   engine_e2e           — real-model Algorithm-1 rounds
   serve serve_requests       — request throughput + completion latency
                                under Poisson-ish arrivals (continuous
-                               batching), swept over attn_backend; writes
-                               the BENCH_serve.json perf baseline
+                               batching), swept over attn_backend, plus
+                               the skewed-arrival placement-policy sweep
+                               (static/jsq/goodput: goodput, queue-wait
+                               percentiles, Jain fairness); writes the
+                               BENCH_serve.json perf baseline
   perf  paged_decode_bench   — paged decode attention: block-table-native
                                kernel path vs the paged_view gather path
   ablations                  — utility-family / budget / top-k sweeps

@@ -18,16 +18,32 @@ goodput (tokens/round), admission cost, and the paged-decode
 gather-vs-block-native microbench (``benchmarks.paged_decode_bench``) —
 is written to ``BENCH_serve.json`` at the repo root so future PRs have a
 perf baseline to regress against.
+
+The SKEWED scenario (``--scenario skewed``, also part of the full run)
+stresses the global admission layer: Zipf-weighted server arrivals (most
+requests hint the same server) against heterogeneous per-server draft
+alignment (draft temperatures), swept over the placement policies
+(static / jsq / goodput).  Per policy it records total accepted tokens,
+completions, p50/p95 queue wait (from the manager's per-request
+queue-wait ticks), and Jain's fairness index over per-server served
+tokens, into the ``placement_skewed`` section of ``BENCH_serve.json``.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import pathlib
+import sys
 import time
+
+if __package__ in (None, ""):    # plain-file invocation (PYTHONPATH=src
+    # python benchmarks/serve_requests.py): make `benchmarks.*` importable
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
 import jax
 import numpy as np
 
+from benchmarks.common import jain
 from repro.configs import get_reduced
 from repro.data.pipeline import PAPER_DATASETS, SyntheticDomain
 from repro.models import Model
@@ -35,6 +51,11 @@ from repro.serving.engine import GoodSpeedEngine
 from repro.serving.request import Request
 
 N, K, ROUNDS, VOCAB = 4, 16, 80, 256
+# skewed-arrival scenario: heavier load, tighter horizon (a hot server
+# cannot drain its backlog in time under static affinity)
+SKEW_K, SKEW_ROUNDS, SKEW_ZIPF = 32, 48, 1.5
+SKEW_TEMPS = (1.0, 1.3, 2.0, 2.8)     # heterogeneous per-server alpha
+PLACEMENTS = ("static", "jsq", "goodput")
 ADMIT_BATCHES = (4, 16, 64)
 ADMIT_PROMPT_LEN = 96
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
@@ -61,6 +82,83 @@ def _workload(seed: int = 0):
                       max_new_tokens=int(rng.integers(6, 14)))
         items.append((int(t), j % N, req))
     return items
+
+
+def _skewed_workload(seed: int = 3):
+    """Zipf-weighted server arrivals: P(server j) ~ 1/(j+1)^SKEW_ZIPF, so
+    the fastest server is also the hottest — exactly the hot-spot the
+    placement policies exist to dissolve.  All arrivals land in the first
+    half of the horizon."""
+    rng = np.random.default_rng(seed)
+    w = 1.0 / (np.arange(N) + 1.0) ** SKEW_ZIPF
+    w /= w.sum()
+    items, t = [], 0.0
+    for j in range(SKEW_K):
+        t += rng.exponential(SKEW_ROUNDS / (2.0 * SKEW_K))
+        dom = SyntheticDomain(PAPER_DATASETS[j % len(PAPER_DATASETS)],
+                              VOCAB, 50 + j)
+        req = Request(prompt=dom.sample_prompt(rng)[:16],
+                      max_new_tokens=int(rng.integers(8, 16)))
+        items.append((int(t), int(rng.choice(N, p=w)), req))
+    return items
+
+
+def skewed_scenario(draft, target, dp, tp):
+    """(csv_rows, json_section): the placement-policy sweep under skewed
+    arrivals and heterogeneous alpha."""
+    rows, section = [], {}
+    for placement in PLACEMENTS:
+        eng = GoodSpeedEngine(draft_model=draft, target_model=target,
+                              n_servers=N, C=12, s_max=6, cache_len=256,
+                              draft_temps=SKEW_TEMPS, paged_kv=True,
+                              kv_block_size=16, placement=placement)
+        t0 = time.perf_counter()
+        rep = eng.serve_requests(jax.random.PRNGKey(6), _skewed_workload(),
+                                 dp, tp, rounds=SKEW_ROUNDS)
+        wall = time.perf_counter() - t0
+        mgr, s = rep["manager"], rep["summary"]
+        # total accepted tokens, INCLUDING partial progress of requests
+        # still in flight when the horizon ends (that is the goodput a
+        # fixed serving window actually delivered)
+        reqs = mgr.completed + [r for r in mgr.active if r is not None]
+        total_tokens = sum(len(r.generated) for r in reqs)
+        per_server = np.zeros(N)
+        for r in reqs:
+            srv = r.placed_server if r.placed_server is not None \
+                else r.server_hint
+            per_server[srv] += len(r.generated)
+        waits = np.asarray(sorted(s["queue_wait_ticks"].values()), np.float64)
+        p50, p95 = (float(np.percentile(waits, 50)),
+                    float(np.percentile(waits, 95))) if len(waits) else (0, 0)
+        rows.append((f"skewed_{placement}_total_accepted_tokens",
+                     round(wall * 1e6 / max(1, s["rounds_run"]), 0),
+                     total_tokens))
+        rows.append((f"skewed_{placement}_jain_fairness", 0.0,
+                     round(jain(per_server), 4)))
+        rows.append((f"skewed_{placement}_p95_queue_wait_rounds", 0.0,
+                     round(p95, 1)))
+        section[placement] = {
+            "total_accepted_tokens": total_tokens,
+            "completed": s["completed"],
+            "of_requests": SKEW_K,
+            "jain_fairness": round(jain(per_server), 4),
+            "p50_queue_wait_rounds": round(p50, 1),
+            "p95_queue_wait_rounds": round(p95, 1),
+            "per_server_tokens": per_server.astype(int).tolist(),
+            "per_server_admitted": s["per_server_admitted"],
+            "rounds_run": s["rounds_run"],
+        }
+    return rows, section
+
+
+def _merge_bench_json(update: dict) -> None:
+    """Read-modify-write BENCH_serve.json so a single scenario run keeps
+    the other sections' baselines."""
+    data = {}
+    if BENCH_JSON.exists():
+        data = json.loads(BENCH_JSON.read_text())
+    data.update(update)
+    BENCH_JSON.write_text(json.dumps(data, indent=2) + "\n")
 
 
 def admission_cost(draft, target, dp, tp):
@@ -97,20 +195,24 @@ def admission_cost(draft, target, dp, tp):
     return out
 
 
-def run():
-    from benchmarks.paged_decode_bench import collect as paged_decode_numbers
-
-    # microbench FIRST: its µs-scale numbers are noise-sensitive and the
-    # engine serves below leave a lot of compiled/allocated state behind
-    microbench = paged_decode_numbers()
+def _models():
     draft = Model(get_reduced("olmo-1b", num_layers=2, d_model=64,
                               num_heads=2, num_kv_heads=2, head_dim=32,
                               d_ff=128, vocab_size=VOCAB))
     target = Model(get_reduced("qwen3-8b", num_layers=2, d_model=128,
                                num_heads=4, num_kv_heads=2, head_dim=32,
                                d_ff=256, vocab_size=VOCAB))
-    dp = draft.init(jax.random.PRNGKey(0))
-    tp = target.init(jax.random.PRNGKey(1))
+    return (draft, target, draft.init(jax.random.PRNGKey(0)),
+            target.init(jax.random.PRNGKey(1)))
+
+
+def run():
+    from benchmarks.paged_decode_bench import collect as paged_decode_numbers
+
+    # microbench FIRST: its µs-scale numbers are noise-sensitive and the
+    # engine serves below leave a lot of compiled/allocated state behind
+    microbench = paged_decode_numbers()
+    draft, target, dp, tp = _models()
     admit_rows = list(admission_cost(draft, target, dp, tp))
     rows = list(admit_rows)
     serve_json = {}
@@ -143,11 +245,34 @@ def run():
             "mean_latency_rounds": round(s["mean_latency_rounds"], 3),
             "completed": s["completed"],
         }
-    BENCH_JSON.write_text(json.dumps({
+    skew_rows, skew_json = skewed_scenario(draft, target, dp, tp)
+    rows.extend(skew_rows)
+    _merge_bench_json({
         "admission_cost_us": {name: us for name, us, _ in admit_rows},
         "serve": serve_json,
+        "placement_skewed": skew_json,
         "paged_decode_microbench": {
             f"capacity_{cap}": r for cap, r in microbench.items()
         },
-    }, indent=2) + "\n")
+    })
     return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", choices=("all", "skewed"), default="all",
+                    help="'skewed' runs only the placement-policy sweep "
+                    "and merges its section into BENCH_serve.json")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    if args.scenario == "skewed":
+        rows, section = skewed_scenario(*_models())
+        _merge_bench_json({"placement_skewed": section})
+    else:
+        rows = run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,8 @@
 import os
 import sys
 
+import pytest
+
 # make `tests.proptest` and `benchmarks.*` importable regardless of how
 # pytest is invoked (the documented command is `PYTHONPATH=src pytest tests/`)
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
@@ -12,3 +14,81 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running compile/integration tests "
                    "(on by default; deselect with -m 'not slow')")
+
+
+# ---------------------------------------------------------------------------
+# Shared serving-trace harness: the ACCEPTANCE mixed admit/retire/EOS
+# workload that every serving-equivalence suite replays (paged vs static
+# caches, jnp vs kernel backends, placement policies vs the legacy
+# per-server FIFO).  One session-scoped model pair keeps params and jit
+# caches shared across the suites.
+# ---------------------------------------------------------------------------
+
+MIXED_TRACE_VOCAB = 64
+
+
+def mixed_trace_requests(k=7, seed=11, max_new=5, vocab=MIXED_TRACE_VOCAB):
+    """The mixed workload: k requests, EOS on every odd index so the trace
+    exercises cap-retirement, EOS-retirement, and queued successors."""
+    import numpy as np
+
+    from repro.serving.request import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(prompt=rng.integers(1, vocab, size=8).astype(np.int32),
+                    max_new_tokens=max_new,
+                    eos_token=(4 if i % 2 else -1)) for i in range(k)]
+
+
+def generated_seqs(rep):
+    """Accepted-token sequences of a serve_requests report, ordered by
+    request id — the byte-comparable equivalence artifact."""
+    return [r["generated"] for r in
+            sorted(rep["requests"], key=lambda r: r["request_id"])]
+
+
+@pytest.fixture(scope="session")
+def serve_pair():
+    """Reduced draft/target models + params for the serving suites."""
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import Model
+
+    dm = Model(get_reduced("olmo-1b", num_layers=2, d_model=64,
+                           num_heads=2, num_kv_heads=2, head_dim=32,
+                           d_ff=128, vocab_size=MIXED_TRACE_VOCAB))
+    tm = Model(get_reduced("qwen3-8b", num_layers=2, d_model=128,
+                           num_heads=4, num_kv_heads=2, head_dim=32,
+                           d_ff=256, vocab_size=MIXED_TRACE_VOCAB))
+    return dm, tm, dm.init(jax.random.PRNGKey(0)), \
+        tm.init(jax.random.PRNGKey(1))
+
+
+@pytest.fixture(scope="session")
+def mixed_trace(serve_pair):
+    """Callable fixture: run the mixed workload through serve_requests for
+    one engine configuration and return the full report.  Engine kwargs
+    override the defaults (2 servers, C=8, s_max=4, cache_len=128)."""
+    import jax
+
+    from repro.serving.engine import GoodSpeedEngine
+
+    dm, tm, dp, tp = serve_pair
+
+    def run(*, requests=7, rounds=60, manager=None, expect_completed=7,
+            workload=None, **engine_kw):
+        kw = dict(draft_model=dm, target_model=tm, n_servers=2, C=8,
+                  s_max=4, cache_len=128, kv_block_size=16)
+        kw.update(engine_kw)
+        eng = GoodSpeedEngine(**kw)
+        rep = eng.serve_requests(
+            jax.random.PRNGKey(0),
+            workload if workload is not None
+            else mixed_trace_requests(requests),
+            dp, tp, rounds=rounds, manager=manager)
+        if expect_completed is not None:
+            assert rep["summary"]["completed"] == expect_completed
+        return rep
+
+    return run

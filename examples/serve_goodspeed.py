@@ -35,6 +35,11 @@ def main():
                     "to fused jnp refs off-TPU)")
     ap.add_argument("--paged-kv", action="store_true",
                     help="block-pool KV caches (admission block reuse)")
+    ap.add_argument("--placement", choices=("static", "jsq", "goodput"),
+                    default="static", help="request placement at admission "
+                    "(serve_requests): submitted per-server affinity, "
+                    "join-shortest-queue, or alpha_hat/KV-aware goodput "
+                    "placement")
     args = ap.parse_args()
 
     vocab = 256
@@ -77,14 +82,17 @@ def main():
                           n_servers=N, C=args.C, s_max=6, cache_len=512,
                           draft_temps=temps,
                           attn_backend=args.attn_backend,
-                          paged_kv=args.paged_kv)
+                          paged_kv=args.paged_kv,
+                          placement=args.placement)
     rep = eng.serve_requests(jax.random.PRNGKey(3), reqs, dp, tp,
                              rounds=8 * args.rounds)
     s = rep["summary"]
-    print(f"\nserve_requests: {s['completed']}/{len(reqs)} requests in "
+    print(f"\nserve_requests[{args.placement}]: "
+          f"{s['completed']}/{len(reqs)} requests in "
           f"{s['rounds_run']} rounds  tokens/round={s['tokens_per_round']:.2f}  "
           f"mean latency={s['mean_latency_rounds']:.1f} rounds  "
-          f"mean queue delay={s['mean_queue_delay_rounds']:.1f} rounds")
+          f"mean queue delay={s['mean_queue_delay_rounds']:.1f} rounds  "
+          f"admitted/server={s['per_server_admitted']}")
 
 
 if __name__ == "__main__":

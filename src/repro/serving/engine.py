@@ -26,10 +26,14 @@ blockwise jnp core.  Both backends emit identical accepted-token
 sequences (tests/test_paged_kernel.py).
 
 Request lifecycle (``serve_requests``): the verification server owns a
-``RequestManager`` (serving.request) with one FIFO queue per draft server.
-Each server carries one ACTIVE request; when it completes (per-request cap
-reached or EOS emitted) the next queued request is admitted immediately —
-continuous batching at server granularity.  Admission re-prefills ONLY the
+``RequestManager`` (serving.request) with ONE global arrival queue; a
+pluggable placement policy (``placement="static" | "jsq" | "goodput"``,
+serving.placement) routes each arrival onto a draft server at admission
+time, deciding against the live estimator state (alpha_hat), per-server
+queue loads, and free paged-KV blocks.  Each server carries one ACTIVE
+request; when it completes (per-request cap reached or EOS emitted) the
+next queued request is admitted immediately — continuous batching at
+server granularity.  Admission re-prefills ONLY the
 fresh rows of both model caches — ``_admit_rows`` runs a full-batch prefill
 and row-merges it into the live stack caches (``_merge_cache_rows``, the
 stack-level analogue of the single-cache ``kv_cache.prefill_rows``) while
@@ -66,6 +70,7 @@ from repro.serving.kv_cache import (AttnCache, MLACache, PAGED_TYPES,
                                     paged_merge_rows, paged_over_groups,
                                     paged_reset_rows, paged_select_rows,
                                     reset_rows, rollback)
+from repro.serving.placement import PlacementView, make_placement
 from repro.serving.request import Request, RequestManager
 
 Array = jnp.ndarray
@@ -183,6 +188,13 @@ class GoodSpeedEngine:
     paged_kv: bool = False
     kv_block_size: int = 16
     kv_num_blocks: int = 0         # 0 = n_servers * ceil(cache_len / bs)
+    # request placement at admission ("static" | "jsq" | "goodput", or a
+    # PlacementPolicy instance): how serve_requests routes arrivals onto
+    # draft servers.  "static" keeps the submitted per-server affinity
+    # (the equivalence baseline); "jsq" joins the shortest queue;
+    # "goodput" places against live alpha_hat estimates and paged-KV
+    # block pressure (repro.serving.placement).
+    placement: str = "static"
     # attention/verify backend, ONE flag for the whole hot path: "kernel"
     # rebuilds both models with cfg.attn_backend="kernel" (draft decode,
     # verify chunk and the jit'd admission prefill dispatch to the Pallas
@@ -195,6 +207,7 @@ class GoodSpeedEngine:
     def __post_init__(self):
         # resolve the policy once; validates the name at construction time
         object.__setattr__(self, "_sched", make_scheduler(self.policy))
+        make_placement(self.placement)   # validate at construction time
         backend = self.attn_backend
         if backend is None:
             backend = self.target_model.cfg.attn_backend
@@ -687,6 +700,43 @@ class GoodSpeedEngine:
         return out.cache
 
     # ------------------------------------------------------------------
+    def _placement_view(self, state: EngineState, mgr: RequestManager
+                        ) -> PlacementView:
+        """Live per-server view the placement policy decides against:
+        queue loads and caps from the manager, alpha_hat from the round
+        estimator, and (paged only) the min free-block count across the
+        two pools — read from the small allocator fields, never the
+        pool buffers."""
+        free_blocks = total_blocks = None
+        if self.paged_kv:
+            frees, totals = [], []
+            for cache in (state.target_cache, state.draft_cache):
+                alloc = _paged_alloc_state(cache)
+                if alloc is not None:
+                    free = np.asarray(alloc[1])
+                    frees.append(int(free.sum()))
+                    totals.append(int(free.shape[0]))
+            if frees:
+                free_blocks, total_blocks = min(frees), min(totals)
+                # reserve the ACTIVE rows' same-round growth: each live
+                # row's verify chunk (<= s_max+1 tokens) may claim up to
+                # blocks_for(s_max+1) fresh blocks this round, and an
+                # admission that takes them would trip the sticky
+                # alloc_failed mid-round — the crash deferral prevents
+                n_active = int((mgr.remaining_caps() > 0).sum())
+                free_blocks = max(0, free_blocks - n_active * blocks_for(
+                    self.s_max + 1, self.kv_block_size))
+        return PlacementView(
+            queue_load=mgr.queue_load(),
+            active_remaining=mgr.remaining_caps(),
+            alpha_hat=np.asarray(state.est.alpha_hat, np.float32),
+            alpha_init=self.estimator.alpha_init,
+            s_max=self.s_max,
+            free_blocks=free_blocks,
+            total_blocks=total_blocks,
+            block_size=self.kv_block_size)
+
+    # ------------------------------------------------------------------
     def serve(self, key: Array, prompts: list[np.ndarray], draft_params,
               target_params, rounds: int) -> list[RoundStats]:
         """Fixed-round simulator: every server decodes forever (no request
@@ -706,9 +756,13 @@ class GoodSpeedEngine:
         batching (the production loop; see module docstring).
 
         workload: an iterable of ``Request`` (all arrive at round 0,
-        assigned round-robin over servers) or of ``(arrival_round, server,
-        Request)`` triples for timed arrivals.  Runs at most ``rounds``
-        rounds, stopping early once every request has completed.
+        round-robin server hints) or of ``(arrival_round, server,
+        Request)`` triples for timed arrivals; ``server`` is binding under
+        ``placement="static"`` and an advisory hint otherwise (None is
+        allowed for non-static policies).  Placement is decided at
+        admission time against the live estimator state and free KV
+        blocks (``_placement_view``).  Runs at most ``rounds`` rounds,
+        stopping early once every request has completed.
 
         Returns ``{"requests": [...], "rounds": [RoundStats...],
         "summary": {...}}`` with per-request latency (arrival -> finish,
@@ -719,14 +773,16 @@ class GoodSpeedEngine:
         re-prefilled from prompt + generated-so-far.
         """
         n = self.n_servers
-        mgr = manager if manager is not None else RequestManager(n)
+        mgr = manager if manager is not None \
+            else RequestManager(n, placement=self.placement)
         sched = []
         for j, item in enumerate(workload):
             if isinstance(item, Request):
                 sched.append((0, j % n, item))
             else:
                 arr, srv, req = item
-                sched.append((int(arr), int(srv) % n, req))
+                sched.append((int(arr), None if srv is None
+                              else int(srv) % n, req))
         sched.sort(key=lambda x: x[0])
 
         def ctx(req: Request) -> np.ndarray:
@@ -750,17 +806,35 @@ class GoodSpeedEngine:
                 _, srv, req = sched[next_arrival]
                 mgr.submit(srv, req)
                 next_arrival += 1
-            fresh = sorted(set(mgr.admit()) | set(carried))
-            carried = []
+            mgr.retire_done()
             if self.paged_kv:
-                # a retired row with no successor holds blocks another
-                # server's admission may need — release BEFORE admitting
+                # a retired row holds blocks another server's admission may
+                # need — release BEFORE the placement view reads the free
+                # list, so admission and the pool pre-check see them
                 newly_idle = [i for i in range(n)
                               if mgr.active[i] is None and i not in released]
                 if newly_idle:
                     state = self._release_rows(state, newly_idle)
                     released.update(newly_idle)
-                released.difference_update(fresh)
+            # build the (device-syncing, under paged_kv) placement view
+            # only when an admission decision is actually pending: a free
+            # slot AND waiting work (global arrivals or bound queues)
+            if (mgr.arrivals or any(mgr.queues)) \
+                    and any(a is None for a in mgr.active):
+                view = self._placement_view(state, mgr)
+                if carried and view.free_blocks is not None:
+                    # resumed drain: carried rows' contexts are not yet in
+                    # the cold pools but this round's _admit_rows will
+                    # re-prefill them — reserve their blocks so the gate
+                    # cannot admit an arrival those rows need
+                    view.free_blocks = max(0, view.free_blocks - sum(
+                        blocks_for(max(0, len(ctx(mgr.active[i])) - 1),
+                                   self.kv_block_size) for i in carried))
+                fresh = sorted(set(mgr.admit(view)) | set(carried))
+            else:
+                fresh = sorted(carried)
+            carried = []
+            released.difference_update(fresh)
             if fresh:
                 state = self._admit_rows(
                     state, fresh, {i: ctx(mgr.active[i]) for i in fresh},
@@ -792,6 +866,8 @@ class GoodSpeedEngine:
         # mgr.stats() keys keep the manager-lifetime view (resume-safe).
         requests = [{
             "request_id": req.request_id,
+            "server": (req.placed_server if req.placed_server is not None
+                       else req.server_hint),
             "arrival_round": req.arrival_round,
             "admit_round": req.admit_round,
             "finish_round": req.finish_round,

@@ -1,0 +1,214 @@
+"""Pluggable request-placement policies for global admission.
+
+The paper's fairness machinery (GOODSPEED-SCHED, §III-C) allocates the
+verification budget fairly across draft servers — but it can only be fair
+over the requests that actually reach those servers.  With static
+per-server affinity a hot server queues while its neighbours idle, which
+is precisely the goodput loss proportional fairness exists to prevent.
+This module decides, at admission time, WHICH draft server a newly
+arrived request joins:
+
+* ``static``  — honour the request's submitted server (pre-placement
+  behaviour, kept as the equivalence baseline: under it the engine must
+  emit byte-identical accepted-token sequences to the per-server-FIFO
+  engine — ``tests/test_placement.py``);
+* ``jsq``     — join-shortest-queue by queued token demand plus the
+  active request's remaining cap;
+* ``goodput`` — score each server by its estimated acceptance rate
+  ``alpha_hat`` (``repro.core.estimator``) and, under paged-KV block
+  pressure, the pool's free blocks: the request joins the server with the
+  fewest expected ROUNDS to completion, i.e. placement maximizes expected
+  accepted tokens per verification round.  When every estimate still sits
+  at ``alpha_init`` (cold start) the scores are uniform in ``alpha`` and
+  the choice degrades exactly to ``jsq``.
+
+Policies are host-side and pure: ``place`` never mutates the manager; the
+``RequestManager`` owns the queues and updates the view's running load as
+a burst of arrivals is placed, so successive placements see each other.
+The shared paged-KV admission gate (``fits_pool``) lives here too: a
+request whose prompt cannot fit the free block list is DEFERRED (stays
+queued, ages its wait clock) instead of surfacing a
+``PoolExhaustedError`` from the admission prefill — every policy gets
+that behaviour, not just ``goodput``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.kv_cache import PoolExhaustedError, blocks_for
+
+# alpha_hat entries within this of alpha_init count as "never observed":
+# the estimator holds unobserved servers exactly at alpha_init, so cold
+# detection is an equality test up to float noise.
+_COLD_TOL = 1e-6
+
+
+@dataclasses.dataclass
+class PlacementView:
+    """Per-server serving state a policy may consult (host-side numpy).
+
+    ``queue_load`` is mutated by the manager as arrivals are placed
+    (``note_placed``) and ``free_blocks`` as admissions claim pool blocks
+    (``note_admitted``), so one view serves a whole admission call.
+    """
+
+    queue_load: np.ndarray          # i64[N] queued token demand per server
+    active_remaining: np.ndarray    # i32[N] active request's remaining cap
+    alpha_hat: Optional[np.ndarray] = None   # f32[N] estimator state
+    alpha_init: float = 0.5
+    s_max: int = 4                  # per-server draft cap (mu horizon)
+    # min free blocks over the paged pools (None = static caches, no gate)
+    free_blocks: Optional[int] = None
+    # min TOTAL pool capacity in blocks: distinguishes "temporarily full"
+    # (defer, blocks free as requests retire) from "can never fit" (raise)
+    total_blocks: Optional[int] = None
+    block_size: int = 16
+
+    def backlog(self) -> np.ndarray:
+        """Token demand ahead of a new arrival on each server."""
+        return self.queue_load + self.active_remaining
+
+    def blocks_need(self, request) -> int:
+        """Pool blocks ``request`` needs through its FIRST serving round:
+        the admission prefill's context (minus the pending token, as in
+        the engine's ``_admit_rows_paged`` pre-check) PLUS the round's
+        verify chunk (pending + up to s_max drafts).  Without the chunk
+        headroom an exactly-fitting admission would pass the gate and
+        then trip the sticky ``alloc_failed`` mid-round — the crash the
+        deferral exists to prevent.  The engine additionally subtracts
+        the ACTIVE rows' same-round growth from the view's
+        ``free_blocks`` (``_placement_view``); growth beyond the current
+        round is the engine's ``_check_pool_health`` backstop."""
+        feed = max(0, len(request.prompt) + len(request.generated) - 1)
+        return blocks_for(feed + self.s_max + 1, self.block_size)
+
+    def note_placed(self, request, server: int) -> None:
+        self.queue_load[server] += request.remaining
+
+    def note_admitted(self, request, server: int) -> None:
+        # the request moves queue -> active slot: shift its demand too, so
+        # backlog() stays consistent for any later reader of this view
+        self.queue_load[server] = max(
+            0, self.queue_load[server] - request.remaining)
+        self.active_remaining[server] += request.remaining
+        if self.free_blocks is not None:
+            self.free_blocks -= self.blocks_need(request)
+
+
+def fits_pool(request, view: Optional[PlacementView]) -> bool:
+    """Paged-KV admission gate: False defers the admission (request stays
+    queued, blocks free as other requests retire) instead of letting the
+    engine's prefill pre-check raise ``PoolExhaustedError``.  Static
+    caches (``free_blocks`` None) always fit.  A request whose prompt
+    exceeds the TOTAL pool capacity can never be seated by waiting —
+    that is a misconfiguration, and deferring it would silently livelock
+    the drain, so it raises."""
+    if view is None or view.free_blocks is None:
+        return True
+    need = view.blocks_need(request)
+    if view.total_blocks is not None and need > view.total_blocks:
+        raise PoolExhaustedError(
+            f"request {request.request_id} needs {need} KV blocks but the "
+            f"pool only has {view.total_blocks} in total — admission could "
+            f"never succeed; grow kv_num_blocks or shorten the prompt")
+    return need <= view.free_blocks
+
+
+class PlacementPolicy:
+    """``place(request, view) -> server`` — pure, host-side.
+
+    ``binds_on_arrival``: True means a request commits to its server the
+    moment it is seen (static affinity: the hint IS the decision, and the
+    per-server FIFO order must be preserved).  False means the request
+    stays in the global arrival queue until a slot can actually seat it,
+    so the decision always runs against LIVE state — an early binding
+    would recreate the hot-server-queues-while-neighbours-idle pathology
+    whenever the bound server turns out to be the slow one."""
+
+    name = "?"
+    binds_on_arrival = False
+
+    def place(self, request, view: PlacementView) -> int:
+        raise NotImplementedError
+
+
+class StaticPlacement(PlacementPolicy):
+    """The request joins the server it was submitted to (per-server FIFO
+    affinity — the pre-placement engine's behaviour)."""
+
+    name = "static"
+    binds_on_arrival = True
+
+    def place(self, request, view: PlacementView) -> int:
+        hint = getattr(request, "server_hint", None)
+        if hint is None:
+            raise ValueError("static placement needs a server hint "
+                             "(submit(server, request))")
+        return int(hint)
+
+
+class JSQPlacement(PlacementPolicy):
+    """Join-shortest-queue: minimal queued-token demand + active remaining
+    cap; ties break to the lowest server index (deterministic)."""
+
+    name = "jsq"
+
+    def place(self, request, view: PlacementView) -> int:
+        return int(np.argmin(view.backlog()))
+
+
+class GoodputPlacement(PlacementPolicy):
+    """Minimize expected rounds-to-completion using the live estimates.
+
+    Expected accepted tokens per round on server i at draft cap ``s_max``
+    is mu(s_max; alpha_i) = (1 - alpha^(s_max+1)) / (1 - alpha) (paper
+    §III-B), so placing the request on server i costs roughly
+
+        (backlog_i + request.remaining) / mu_i      rounds.
+
+    Under paged-KV block pressure (the pool cannot hold this request's
+    prompt right now) the request additionally waits for backlog ahead of
+    it to retire and free blocks, so the existing backlog is counted
+    twice.  With every alpha_hat still at ``alpha_init`` (cold start) the
+    mu_i are all equal and argmin reduces exactly to JSQ's choice.
+    """
+
+    name = "goodput"
+
+    def __init__(self):
+        self._jsq = JSQPlacement()
+
+    @staticmethod
+    def _mu(alpha: np.ndarray, s_max: int) -> np.ndarray:
+        a = np.clip(np.asarray(alpha, np.float64), 1e-6, 1.0 - 1e-6)
+        return (1.0 - a ** (s_max + 1)) / (1.0 - a)
+
+    def place(self, request, view: PlacementView) -> int:
+        a = view.alpha_hat
+        if a is None or np.all(np.abs(np.asarray(a) - view.alpha_init)
+                               < _COLD_TOL):
+            return self._jsq.place(request, view)
+        mu = self._mu(a, view.s_max)
+        backlog = view.backlog().astype(np.float64)
+        score = (backlog + request.remaining) / mu
+        if view.free_blocks is not None \
+                and view.free_blocks < view.blocks_need(request):
+            score = score + backlog / mu    # wait for blocks to free
+        return int(np.argmin(score))
+
+
+_POLICIES = {p.name: p for p in (StaticPlacement, JSQPlacement,
+                                 GoodputPlacement)}
+
+
+def make_placement(policy) -> PlacementPolicy:
+    """Resolve a policy name (or pass an instance through)."""
+    if isinstance(policy, PlacementPolicy):
+        return policy
+    if policy not in _POLICIES:
+        raise ValueError(f"unknown placement policy {policy!r}; "
+                         f"choose from {sorted(_POLICIES)}")
+    return _POLICIES[policy]()

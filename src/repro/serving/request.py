@@ -1,12 +1,19 @@
 """Request lifecycle management for the verification server (paper §III-A).
 
 The verification server "manages a FIFO queue to process requests in the
-order of arrival".  Each draft server carries one ACTIVE request at a time
-(its end-user session); when a request completes (max_new_tokens reached or
-EOS), the next queued request for that server is admitted immediately —
-continuous batching at the server granularity.  The engine reads
-``remaining`` caps from here and feeds them to GOODSPEED-SCHED as s_max
-(completion-aware allocation, EXPERIMENTS §Repro).
+order of arrival".  Arrivals land in ONE global cross-server queue; a
+pluggable :class:`repro.serving.placement.PlacementPolicy` routes each
+request to a draft server — ``static`` binds on arrival and reproduces
+the original per-server FIFO affinity exactly, while ``jsq``/``goodput``
+hold requests in the global queue and decide the server at SEAT time
+against the live view, so a request is never stuck behind a binding that
+turned out to be the hot server (see ``placement.py``).  Each draft server carries one
+ACTIVE request at a time (its end-user session); when a request completes
+(max_new_tokens reached or EOS), the next queued request for that server
+is admitted immediately — continuous batching at the server granularity.
+The engine reads ``remaining`` caps from here and feeds them to
+GOODSPEED-SCHED as s_max (completion-aware allocation, EXPERIMENTS
+§Repro).
 
 Host-side bookkeeping by design (request arrival is I/O, not jit-able);
 everything the jit'd round loop needs is exported as dense arrays.
@@ -20,11 +27,15 @@ from typing import Optional
 
 import numpy as np
 
+from repro.serving.placement import (PlacementView, fits_pool,
+                                     make_placement)
+
 _ids = itertools.count()
 
 
-@dataclasses.dataclass
-class Request:
+@dataclasses.dataclass(eq=False)    # identity equality: requests are
+class Request:                      # queue entries, and the generated
+    # field-wise __eq__ would compare numpy prompts (ambiguous truth)
     prompt: np.ndarray              # i32[prompt_len]
     max_new_tokens: int
     eos_token: int = -1             # -1 = no EOS check
@@ -34,6 +45,14 @@ class Request:
     arrival_round: int = 0
     admit_round: Optional[int] = None
     finish_round: Optional[int] = None
+    # placement: the server the submitter asked for (static affinity) and
+    # the server the policy actually chose
+    server_hint: Optional[int] = None
+    placed_server: Optional[int] = None
+    # rounds spent waiting (arrival -> admission); aged by the manager
+    # every round-clock advance while the request is still queued, so wait
+    # metrics are honest for requests that have not been admitted yet
+    queue_wait: int = 0
     # paged-KV accounting: blocks the admission prefill allocated for this
     # request (0 under static caches); set by the engine at admission
     kv_blocks: int = 0
@@ -50,19 +69,85 @@ class Request:
 
 
 class RequestManager:
-    """Per-draft-server FIFO queues + active-request slots."""
+    """Global arrival queue + placement + active-request slots.
 
-    def __init__(self, n_servers: int):
+    ``placement`` is a policy name (``static`` | ``jsq`` | ``goodput``) or
+    a ``PlacementPolicy`` instance.  Arrivals wait in ``self.arrivals``;
+    ``admit`` seats them against a live :class:`PlacementView` (estimator
+    state, queue loads, free KV blocks) supplied by the engine — or a
+    self-derived view when driven directly.  Binding-on-arrival policies
+    park arrivals on per-server FIFO queues first; lazy policies seat
+    straight from the global queue.
+    """
+
+    def __init__(self, n_servers: int, placement="static"):
         self.n = n_servers
+        self.placement = make_placement(placement)
+        self.arrivals: deque = deque()             # global cross-server
         self.queues: list[deque] = [deque() for _ in range(n_servers)]
         self.active: list[Optional[Request]] = [None] * n_servers
         self.completed: list[Request] = []
         self.round = 0
 
     # -- admission ----------------------------------------------------------
-    def submit(self, server: int, request: Request) -> None:
+    def submit(self, server: Optional[int], request: Request) -> None:
+        """Enqueue an arrival.  ``server`` is the submitter's affinity hint
+        (binding under static placement, advisory otherwise; None is only
+        valid for non-static policies — rejected HERE, at the misuse site,
+        not rounds later inside placement)."""
+        if server is None and self.placement.name == "static":
+            raise ValueError("static placement needs a server hint: "
+                             "submit(server, request)")
         request.arrival_round = self.round
-        self.queues[server].append(request)
+        request.server_hint = None if server is None else int(server)
+        self.arrivals.append(request)
+
+    def queue_load(self) -> np.ndarray:
+        """i64[N] queued token demand (sum of remaining budgets) per
+        server.  Only binding-on-arrival policies (static) park requests
+        on per-server queues; under lazy policies this is all zeros and
+        the balance signal is ``active_remaining``."""
+        return np.asarray([sum(r.remaining for r in q) for q in self.queues],
+                          np.int64)
+
+    def _default_view(self) -> PlacementView:
+        """Self-derived view for direct-driven managers (no engine): queue
+        state only, cold estimates, no pool gate."""
+        return PlacementView(queue_load=self.queue_load(),
+                             active_remaining=self.remaining_caps())
+
+    def _bind_arrivals(self, view: PlacementView) -> None:
+        """Binding-on-arrival policies only (static affinity): drain the
+        global arrival queue onto the per-server FIFO queues, in arrival
+        order.  Lazy policies (jsq/goodput) skip this — their requests
+        stay in the global queue until a slot can seat them, so every
+        decision runs against live state instead of a stale binding."""
+        while self.arrivals:
+            req = self.arrivals.popleft()
+            srv = self.placement.place(req, view) % self.n
+            self.queues[srv].append(req)
+            view.note_placed(req, srv)
+
+    def _oldest_candidate(self, skip: set):
+        """(server_or_None, request): the longest-waiting request that
+        could be seated — the head of a per-server queue whose slot is
+        free, or the oldest global arrival not in ``skip`` (server
+        decided by the policy at seat time).  None when nothing is
+        seatable."""
+        best = None
+        for i in range(self.n):
+            if self.active[i] is None and self.queues[i]:
+                r = self.queues[i][0]
+                key = (r.arrival_round, r.request_id)
+                if best is None or key < best[0]:
+                    best = (key, i, r)
+        for r in self.arrivals:
+            if r.request_id not in skip:
+                key = (r.arrival_round, r.request_id)
+                if best is None or key < best[0]:
+                    best = (key, None, r)
+                break                      # arrivals deque is FIFO
+        return None if best is None else (best[1], best[2])
 
     def retire_done(self) -> list[int]:
         """Move done active requests to ``completed``; returns their
@@ -78,20 +163,69 @@ class RequestManager:
                 retired.append(i)
         return retired
 
-    def admit(self) -> list[int]:
-        """Retire done active requests, then fill empty slots from the FIFO
-        queues; returns servers that got a NEW request this call (their
-        caches need re-prefilling)."""
+    def admit(self, view: Optional[PlacementView] = None) -> list[int]:
+        """Retire done active requests, then seat waiting requests —
+        oldest first — until nothing more fits; returns servers that got
+        a NEW request this call (their caches need re-prefilling).
+
+        Binding-on-arrival policies (static) first drain arrivals onto
+        their per-server queues; lazy policies (jsq/goodput) seat
+        straight from the global queue, the policy choosing the server at
+        SEAT time against the live view — a request whose chosen server
+        is still busy simply keeps waiting (re-decided next round, never
+        bound to a stale choice).
+
+        Under paged KV (``view.free_blocks`` set) a request whose first
+        round cannot fit the free block list is DEFERRED — it stays
+        queued and keeps aging — instead of letting the admission prefill
+        raise ``PoolExhaustedError``.  Seating stops at the first request
+        that cannot proceed, so freed blocks flow to the longest-waiting
+        request instead of being snatched by later small arrivals (no
+        unbounded starvation under pool pressure)."""
+        if view is None:
+            view = self._default_view()
+        if self.placement.binds_on_arrival:
+            self._bind_arrivals(view)
         self.retire_done()
-        fresh = []
-        for i in range(self.n):
-            if self.active[i] is None and self.queues[i]:
-                self.active[i] = self.queues[i].popleft()
-                self.active[i].admit_round = self.round
-                fresh.append(i)
-        return fresh
+        fresh: list = []
+        waiting: set = set()
+        while True:
+            cand = self._oldest_candidate(waiting)
+            if cand is None:
+                break
+            srv, req = cand
+            if srv is None:                 # global head: decide NOW
+                srv = self.placement.place(req, view) % self.n
+                if self.active[srv] is not None:
+                    # the policy prefers waiting for this busy server
+                    # (e.g. goodput betting on a fast draft) — the
+                    # request keeps waiting, but younger candidates may
+                    # still seat on OTHER free slots: they cannot take
+                    # the slot this request is holding out for
+                    waiting.add(req.request_id)
+                    continue
+            if not fits_pool(req, view):
+                break                       # pool pressure: elder first
+            if self.queues[srv] and self.queues[srv][0] is req:
+                self.queues[srv].popleft()
+            else:
+                self.arrivals.remove(req)
+            req.admit_round = self.round
+            req.placed_server = srv
+            self.active[srv] = req
+            view.note_admitted(req, srv)
+            fresh.append(srv)
+        return sorted(fresh)
 
     # -- round bookkeeping ---------------------------------------------------
+    def _age_queued(self) -> None:
+        """One round passed with these requests still waiting."""
+        for req in self.arrivals:
+            req.queue_wait += 1
+        for q in self.queues:
+            for req in q:
+                req.queue_wait += 1
+
     def record_emitted(self, emitted: np.ndarray) -> None:
         """emitted: i32[N, S+1], -1 padded (engine RoundStats.emitted).
 
@@ -108,11 +242,14 @@ class RequestManager:
                 toks = toks[: toks.index(req.eos_token) + 1]
             room = req.remaining
             req.generated.extend(toks[:room])
+        self._age_queued()
         self.round += 1
 
     def tick(self) -> None:
         """Advance the round clock without emissions — an all-idle round
-        spent waiting for future arrivals."""
+        spent waiting for future arrivals.  Queued-but-unplaced requests
+        age here too, so their wait metrics stay honest."""
+        self._age_queued()
         self.round += 1
 
     # -- dense views for the jit'd loop --------------------------------------
@@ -127,22 +264,37 @@ class RequestManager:
     def idle(self) -> bool:
         """True when nothing is in flight anywhere (drain detection)."""
         return all(r is None or r.done for r in self.active) \
-            and not any(self.queues)
+            and not any(self.queues) and not self.arrivals
 
     def stats(self) -> dict:
         lat = [r.finish_round - r.arrival_round for r in self.completed]
         qd = [r.admit_round - r.arrival_round for r in self.completed
               if r.admit_round is not None]
+        queued = list(self.arrivals) + [r for q in self.queues for r in q]
+        live = [r for r in self.active if r is not None]
+        admitted = live + self.completed
+        per_server = np.zeros((self.n,), np.int64)
+        for r in admitted:
+            if r.placed_server is not None:
+                per_server[r.placed_server] += 1
+            elif r.server_hint is not None:    # legacy direct submission
+                per_server[r.server_hint] += 1
         return {
             "completed": len(self.completed),
-            "queued": sum(len(q) for q in self.queues),
-            "active": sum(r is not None and not r.done for r in self.active),
+            "queued": len(queued),
+            "active": sum(not r.done for r in live),
             "mean_latency_rounds": float(np.mean(lat)) if lat else 0.0,
             "mean_queue_delay_rounds": float(np.mean(qd)) if qd else 0.0,
             "tokens_generated": sum(len(r.generated) for r in self.completed),
+            # per-request queue-wait ticks (arrival -> admission), INCLUDING
+            # still-queued requests at their current age — the benchmark's
+            # p50/p95 wait comes from here
+            "queue_wait_ticks": {r.request_id: r.queue_wait
+                                 for r in admitted + queued},
+            # requests each server has admitted (starvation diagnostics)
+            "per_server_admitted": per_server.tolist(),
             # paged-KV view: blocks held by in-flight requests (prompt
             # allocation; decode growth allocates beyond this) — 0 under
             # static caches
-            "kv_blocks_active": sum(r.kv_blocks for r in self.active
-                                    if r is not None and not r.done),
+            "kv_blocks_active": sum(r.kv_blocks for r in live if not r.done),
         }

@@ -5,8 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_reduced
-from repro.models import Model
+import conftest
 from repro.serving import kv_cache as kc
 from repro.serving.engine import GoodSpeedEngine
 from repro.serving.request import Request
@@ -172,24 +171,15 @@ class TestPagedPrimitives:
 
 
 class TestPagedEngine:
-    VOCAB = 64
+    VOCAB = conftest.MIXED_TRACE_VOCAB
 
     @pytest.fixture(scope="class")
-    def pair(self):
-        dm = Model(get_reduced("olmo-1b", num_layers=2, d_model=64,
-                               num_heads=2, num_kv_heads=2, head_dim=32,
-                               d_ff=128, vocab_size=self.VOCAB))
-        tm = Model(get_reduced("qwen3-8b", num_layers=2, d_model=128,
-                               num_heads=4, num_kv_heads=2, head_dim=32,
-                               d_ff=256, vocab_size=self.VOCAB))
-        return dm, tm, dm.init(jax.random.PRNGKey(0)), \
-            tm.init(jax.random.PRNGKey(1))
+    def pair(self, serve_pair):
+        return serve_pair
 
     def _requests(self, k, seed=11, max_new=5):
-        rng = np.random.default_rng(seed)
-        return [Request(prompt=rng.integers(1, self.VOCAB, size=8)
-                        .astype(np.int32), max_new_tokens=max_new,
-                        eos_token=(4 if i % 2 else -1)) for i in range(k)]
+        return conftest.mixed_trace_requests(k, seed=seed, max_new=max_new,
+                                             vocab=self.VOCAB)
 
     def _engine(self, dm, tm, paged, **kw):
         args = dict(draft_model=dm, target_model=tm, n_servers=2, C=8,
@@ -198,22 +188,12 @@ class TestPagedEngine:
         args.update(kw)
         return GoodSpeedEngine(**args)
 
-    def test_paged_static_equivalence_mixed_trace(self, pair):
+    def test_paged_static_equivalence_mixed_trace(self, mixed_trace):
         """ACCEPTANCE: paged and static engines emit identical accepted-
         token sequences over a mixed admit/retire/EOS workload (same seed),
         and the paged run accounts per-request blocks."""
-        dm, tm, dp, tp = pair
-        reps = {}
-        for paged in (False, True):
-            eng = self._engine(dm, tm, paged)
-            reps[paged] = eng.serve_requests(
-                jax.random.PRNGKey(0), self._requests(7), dp, tp, rounds=60)
-        for rep in reps.values():
-            assert rep["summary"]["completed"] == 7
-        seq = {p: [r["generated"] for r in
-                   sorted(reps[p]["requests"],
-                          key=lambda r: r["request_id"])]
-               for p in reps}
+        reps = {p: mixed_trace(paged_kv=p) for p in (False, True)}
+        seq = {p: conftest.generated_seqs(reps[p]) for p in reps}
         assert seq[True] == seq[False]
         assert all(r["kv_blocks"] == 1 for r in reps[True]["requests"])
         assert all(r["kv_blocks"] == 0 for r in reps[False]["requests"])

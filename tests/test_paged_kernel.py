@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import conftest
 from repro.configs import get_reduced
 from repro.kernels.decode_attention import flash_decode
 from repro.kernels.paged_decode import paged_flash_decode
@@ -21,7 +22,6 @@ from repro.models import Model
 from repro.models.attention import dot_attention, paged_dot_attention
 from repro.serving import kv_cache as kc
 from repro.serving.engine import GoodSpeedEngine
-from repro.serving.request import Request
 from tests.proptest import sweep
 
 
@@ -179,41 +179,20 @@ class TestBackendEquivalence:
     """ACCEPTANCE: attn_backend="kernel" and "jnp" emit identical
     accepted-token sequences on a mixed admit/retire/EOS serve_requests
     trace, for both paged and static caches (mirrors
-    tests/test_paged_cache.py's paged-vs-static equivalence rule)."""
-    VOCAB = 64
+    tests/test_paged_cache.py's paged-vs-static equivalence rule).
+    The trace harness lives in conftest.py (``mixed_trace``) and is shared
+    with the placement-policy equivalence suite."""
+    VOCAB = conftest.MIXED_TRACE_VOCAB
 
     @pytest.fixture(scope="class")
-    def pair(self):
-        dm = Model(get_reduced("olmo-1b", num_layers=2, d_model=64,
-                               num_heads=2, num_kv_heads=2, head_dim=32,
-                               d_ff=128, vocab_size=self.VOCAB))
-        tm = Model(get_reduced("qwen3-8b", num_layers=2, d_model=128,
-                               num_heads=4, num_kv_heads=2, head_dim=32,
-                               d_ff=256, vocab_size=self.VOCAB))
-        return dm, tm, dm.init(jax.random.PRNGKey(0)), \
-            tm.init(jax.random.PRNGKey(1))
-
-    def _requests(self, k, seed=11, max_new=5):
-        rng = np.random.default_rng(seed)
-        return [Request(prompt=rng.integers(1, self.VOCAB, size=8)
-                        .astype(np.int32), max_new_tokens=max_new,
-                        eos_token=(4 if i % 2 else -1)) for i in range(k)]
+    def pair(self, serve_pair):
+        return serve_pair
 
     @pytest.mark.parametrize("paged", [False, True])
-    def test_identical_accepted_tokens(self, pair, paged):
-        dm, tm, dp, tp = pair
-        seqs = {}
-        for backend in ("jnp", "kernel"):
-            eng = GoodSpeedEngine(draft_model=dm, target_model=tm,
-                                  n_servers=2, C=8, s_max=4, cache_len=128,
-                                  paged_kv=paged, kv_block_size=16,
-                                  attn_backend=backend)
-            rep = eng.serve_requests(jax.random.PRNGKey(0),
-                                     self._requests(7), dp, tp, rounds=60)
-            assert rep["summary"]["completed"] == 7
-            seqs[backend] = [r["generated"] for r in
-                             sorted(rep["requests"],
-                                    key=lambda r: r["request_id"])]
+    def test_identical_accepted_tokens(self, mixed_trace, paged):
+        seqs = {backend: conftest.generated_seqs(
+                    mixed_trace(paged_kv=paged, attn_backend=backend))
+                for backend in ("jnp", "kernel")}
         assert seqs["kernel"] == seqs["jnp"]
 
     def test_ring_and_mla_stacks_degrade_cleanly(self):

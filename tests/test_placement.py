@@ -1,0 +1,408 @@
+"""Property-based placement tests (ISSUE 4): random arrival traces x
+policies, driven through the REAL ``RequestManager`` host loop (no
+models), plus the engine-level equivalence and fairness pins.
+
+Invariants:
+  * conservation — no request lost or duplicated, under every policy;
+  * ``static`` reproduces the pre-PR per-server FIFO admission order
+    exactly (diffed against an independent reference simulation, and at
+    the engine level against a legacy direct-submit manager on the
+    ACCEPTANCE mixed trace — byte-identical accepted tokens);
+  * ``jsq`` never places on a strictly-worse queue (the chosen server's
+    backlog at decision time is minimal);
+  * ``goodput`` falls back to jsq decisions while every ``alpha_hat``
+    still sits at ``alpha_init`` (cold estimates);
+  * the paged-KV pool pre-check DEFERS admissions instead of raising
+    ``PoolExhaustedError``, for every policy;
+  * queue-wait aging is honest: a still-queued request's ``queue_wait``
+    equals the rounds elapsed since its arrival.
+
+The long random-trace sweeps carry the ``slow`` marker so they can be
+deselected (`-m "not slow"`); a small sweep stays unmarked for quick
+iteration.  ``make placement-check`` runs this module standalone.
+"""
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+import conftest
+from benchmarks.common import jain
+from repro.serving.engine import GoodSpeedEngine
+from repro.serving.placement import (GoodputPlacement, JSQPlacement,
+                                     PlacementPolicy, PlacementView,
+                                     make_placement)
+from repro.serving.request import Request, RequestManager
+from tests.proptest import sweep
+
+EMIT_W = 4      # emitted-row width of the model-free driver
+
+
+class _Spy(PlacementPolicy):
+    """Wraps a policy; records (request idx, backlog-at-decision, choice)
+    without changing behaviour."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.name = f"spy:{inner.name}"
+        self.log: list = []
+
+    def place(self, request, view):
+        srv = self.inner.place(request, view)
+        self.log.append((request.request_id, view.backlog().copy(), srv))
+        return srv
+
+
+# -- model-free driver ------------------------------------------------------
+
+def _trace(draw, n, k, horizon, min_prompt=1):
+    """[(arrival_round, server_hint, prompt_len, max_new, eos_token)],
+    sorted by arrival round (stable, like the engine's workload sort)."""
+    items = [(draw.integers(0, horizon), draw.integers(0, n - 1),
+              draw.integers(min_prompt, 8), draw.integers(1, 6),
+              3 if j % 3 == 0 else -1) for j in range(k)]
+    items.sort(key=lambda t: t[0])
+    return items
+
+
+def _emitted_row(r, i):
+    """Deterministic emission per (round, server): 1-3 tokens in 1..5, so
+    EOS (3) shows up and exercises mid-stream retirement."""
+    cnt = (r * 31 + i * 7) % 3 + 1
+    toks = [((r + i + j) % 5 + 1) for j in range(cnt)]
+    return toks + [-1] * (EMIT_W - cnt)
+
+
+def _drive(mgr, trace, rounds, view_fn=None):
+    """serve_requests' host loop without models: submit arrivals, admit
+    against a (possibly synthetic) view, feed deterministic emissions.
+    Returns (requests, admission events as (round, server, trace_idx))."""
+    n = mgr.n
+    reqs = [Request(prompt=np.zeros(pl, np.int32), max_new_tokens=mn,
+                    eos_token=eos) for (_, _, pl, mn, eos) in trace]
+    idx_of = {r.request_id: j for j, r in enumerate(reqs)}
+    events, idx = [], 0
+    for r in range(rounds):
+        while idx < len(trace) and trace[idx][0] <= r:
+            mgr.submit(trace[idx][1], reqs[idx])
+            idx += 1
+        fresh = mgr.admit(view_fn(mgr) if view_fn else None)
+        for i in fresh:
+            events.append((r, i, idx_of[mgr.active[i].request_id]))
+        caps = mgr.remaining_caps()
+        if caps.any():
+            emitted = np.asarray(
+                [_emitted_row(r, i) if caps[i] > 0 else [-1] * EMIT_W
+                 for i in range(n)], np.int32)
+            mgr.record_emitted(emitted)
+        else:
+            mgr.tick()
+    mgr.retire_done()
+    return reqs, events
+
+
+def _legacy_events(n, trace, rounds):
+    """Independent reference of the PRE-PR manager: per-server FIFO
+    queues filled directly at submit time, retire-then-fill each round,
+    same deterministic emissions.  Returns admission events."""
+    queues = [deque() for _ in range(n)]
+    active = [None] * n            # [remaining, eos_token, done, trace_idx]
+    events, idx = [], 0
+    for r in range(rounds):
+        while idx < len(trace) and trace[idx][0] <= r:
+            _, srv, _, mn, eos = trace[idx]
+            queues[srv].append([mn, eos, False, idx])
+            idx += 1
+        for i in range(n):
+            if active[i] is not None and active[i][2]:
+                active[i] = None
+        for i in range(n):
+            if active[i] is None and queues[i]:
+                active[i] = queues[i].popleft()
+                events.append((r, i, active[i][3]))
+        if any(a is not None and not a[2] for a in active):
+            for i in range(n):
+                a = active[i]
+                if a is None or a[2]:
+                    continue
+                toks = [t for t in _emitted_row(r, i) if t >= 0]
+                if a[1] >= 0 and a[1] in toks:
+                    toks = toks[: toks.index(a[1]) + 1]
+                take = toks[: a[0]]
+                a[0] -= len(take)
+                if a[0] == 0 or (a[1] >= 0 and a[1] in take):
+                    a[2] = True
+    return events
+
+
+def _assert_conserved(mgr, reqs):
+    seen = [r.request_id for r in mgr.completed] \
+        + [r.request_id for r in mgr.active if r is not None] \
+        + [r.request_id for q in mgr.queues for r in q] \
+        + [r.request_id for r in mgr.arrivals]
+    assert sorted(seen) == sorted(r.request_id for r in reqs), \
+        "request lost or duplicated"
+
+
+# -- manager-level properties ----------------------------------------------
+
+class TestPlacementProperties:
+    @sweep(cases=20, seed=50)
+    def test_conservation_every_policy(self, draw):
+        n = draw.integers(2, 4)
+        trace = _trace(draw, n, draw.integers(3, 12), 8)
+        for policy in ("static", "jsq", "goodput"):
+            mgr = RequestManager(n, placement=policy)
+            reqs, _ = _drive(mgr, trace, rounds=30)
+            _assert_conserved(mgr, reqs)
+            st = mgr.stats()
+            assert st["completed"] + st["queued"] \
+                + sum(r is not None for r in mgr.active) == len(reqs)
+
+    @sweep(cases=20, seed=51)
+    def test_static_reproduces_legacy_fifo_order(self, draw):
+        n = draw.integers(2, 5)
+        trace = _trace(draw, n, draw.integers(4, 14), 10)
+        mgr = RequestManager(n, placement="static")
+        _, events = _drive(mgr, trace, rounds=40)
+        assert events == _legacy_events(n, trace, 40)
+
+    @sweep(cases=20, seed=52)
+    def test_jsq_never_strictly_worse(self, draw):
+        n = draw.integers(2, 5)
+        trace = _trace(draw, n, draw.integers(4, 14), 8)
+        spy = _Spy(JSQPlacement())
+        mgr = RequestManager(n, placement=spy)
+        reqs, _ = _drive(mgr, trace, rounds=30)
+        _assert_conserved(mgr, reqs)
+        assert spy.log, "no placement decisions recorded"
+        for _, backlog, choice in spy.log:
+            assert backlog[choice] == backlog.min(), \
+                f"jsq placed on backlog {backlog[choice]} with " \
+                f"{backlog.min()} available ({backlog})"
+
+    @sweep(cases=20, seed=53)
+    def test_goodput_cold_falls_back_to_jsq(self, draw):
+        n = draw.integers(2, 5)
+        trace = _trace(draw, n, draw.integers(4, 14), 8)
+        alpha_init = 0.5
+
+        def cold_view(mgr):
+            return PlacementView(queue_load=mgr.queue_load(),
+                                 active_remaining=mgr.remaining_caps(),
+                                 alpha_hat=np.full((n,), alpha_init,
+                                                   np.float32),
+                                 alpha_init=alpha_init)
+
+        events = {}
+        for policy in ("jsq", "goodput"):
+            mgr = RequestManager(n, placement=policy)
+            _, events[policy] = _drive(mgr, trace, rounds=30,
+                                       view_fn=cold_view)
+        assert events["goodput"] == events["jsq"]
+
+    def test_goodput_warm_prefers_high_alpha(self):
+        """With distinct estimates and equal backlogs, goodput routes to
+        the highest-alpha server (most expected accepted tokens/round)."""
+        view = PlacementView(queue_load=np.zeros(3, np.int64),
+                             active_remaining=np.zeros(3, np.int32),
+                             alpha_hat=np.asarray([0.2, 0.9, 0.6],
+                                                  np.float32),
+                             alpha_init=0.5, s_max=4)
+        req = Request(prompt=np.zeros(4, np.int32), max_new_tokens=5)
+        assert GoodputPlacement().place(req, view) == 1
+
+    @sweep(cases=15, seed=54)
+    def test_pool_precheck_defers_not_raises(self, draw):
+        """free_blocks too small for any prompt: every policy defers every
+        admission (PoolExhaustedError-free), requests age honestly; once
+        the pool recovers the whole trace drains."""
+        n = draw.integers(2, 4)
+        trace = _trace(draw, n, draw.integers(3, 8), 5, min_prompt=5)
+        recover = 12
+
+        def gated_view(free):
+            def f(mgr):
+                return PlacementView(queue_load=mgr.queue_load(),
+                                     active_remaining=mgr.remaining_caps(),
+                                     free_blocks=free(mgr),
+                                     block_size=4)
+            return f
+
+        for policy in ("static", "jsq", "goodput"):
+            mgr = RequestManager(n, placement=policy)
+            reqs, events = _drive(
+                mgr, trace, rounds=40,
+                view_fn=gated_view(lambda m: 0 if m.round < recover
+                                   else 10_000))
+            _assert_conserved(mgr, reqs)
+            assert all(r >= recover for r, _, _ in events), \
+                "admitted through an exhausted pool"
+            assert len(events) == len(reqs)   # drained after recovery
+
+    def test_never_fitting_prompt_raises_not_livelocks(self):
+        """Deferral is only for TEMPORARY pool pressure: a prompt larger
+        than the whole pool can never be seated by waiting, so the gate
+        raises ``PoolExhaustedError`` instead of deferring forever."""
+        from repro.serving.kv_cache import PoolExhaustedError
+        mgr = RequestManager(1)
+        mgr.submit(0, Request(prompt=np.zeros(40, np.int32),
+                              max_new_tokens=2))
+        view = lambda free: PlacementView(
+            queue_load=mgr.queue_load(),
+            active_remaining=mgr.remaining_caps(),
+            free_blocks=free, total_blocks=2, block_size=4)
+        with pytest.raises(PoolExhaustedError):   # needs 10 of 2 blocks
+            mgr.admit(view(2))
+
+    def test_busy_choice_does_not_idle_free_servers(self):
+        """A warm goodput head may hold out for a busy fast server; the
+        free slow server must still seat the NEXT (younger, non-head)
+        arrival that round — and removing that non-head from the global
+        deque must not trip numpy-prompt equality."""
+        mgr = RequestManager(2, placement="goodput")
+        blocker = Request(prompt=np.zeros(4, np.int32), max_new_tokens=20)
+        mgr.submit(None, blocker)
+        view = lambda a: PlacementView(
+            queue_load=mgr.queue_load(),
+            active_remaining=mgr.remaining_caps(),
+            alpha_hat=np.asarray(a, np.float32), alpha_init=0.5, s_max=6)
+        assert mgr.admit(view([0.95, 0.05])) == [0]   # best server busy now
+        elder = Request(prompt=np.zeros(4, np.int32), max_new_tokens=30)
+        younger = Request(prompt=np.zeros(4, np.int32), max_new_tokens=4)
+        mgr.submit(None, elder)
+        mgr.tick()
+        mgr.submit(None, younger)
+        # elder (long budget) bets on the busy fast server and waits;
+        # younger (short budget) prefers the free slow server and seats
+        fresh = mgr.admit(view([0.95, 0.05]))
+        assert fresh == [1]
+        assert mgr.active[1] is younger
+        assert list(mgr.arrivals) == [elder]
+
+    def test_deferred_elder_not_starved_by_younger(self):
+        """Head-of-line fairness under pool pressure: once the oldest
+        waiting head defers for lack of blocks, a younger head on another
+        server must not snatch the freed blocks that round."""
+        mgr = RequestManager(2, placement="static")
+        big = Request(prompt=np.zeros(30, np.int32), max_new_tokens=2)
+        small = Request(prompt=np.zeros(6, np.int32), max_new_tokens=2)
+        mgr.submit(0, big)
+        mgr.tick()
+        mgr.submit(1, small)      # younger, needs fewer blocks
+        view = lambda free: PlacementView(
+            queue_load=mgr.queue_load(),
+            active_remaining=mgr.remaining_caps(),
+            free_blocks=free, total_blocks=64, block_size=4, s_max=2)
+        # big needs blocks_for(29+3)=8; small blocks_for(5+3)=2
+        assert mgr.admit(view(4)) == []     # big defers -> small blocked too
+        assert mgr.admit(view(10)) == [0, 1]   # both fit once blocks free
+
+    def test_queue_wait_aging_honest(self):
+        """A queued-behind request ages every round (emission rounds AND
+        idle ticks), and its final wait equals admit - arrival."""
+        mgr = RequestManager(1)
+        first = Request(prompt=np.zeros(2, np.int32), max_new_tokens=6)
+        second = Request(prompt=np.zeros(2, np.int32), max_new_tokens=2)
+        mgr.submit(0, first)
+        mgr.submit(0, second)
+        mgr.admit()
+        waited = 0
+        while not first.done:
+            mgr.record_emitted(np.asarray([[7, 8, -1]], np.int32))
+            waited += 1
+            assert second.queue_wait == waited
+            assert mgr.stats()["queue_wait_ticks"][second.request_id] \
+                == waited
+        mgr.admit()
+        assert second.queue_wait == second.admit_round - second.arrival_round
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError):
+            make_placement("round-robin")
+        with pytest.raises(ValueError):
+            RequestManager(2, placement="nope")
+
+
+@pytest.mark.slow
+class TestPlacementPropertiesLong:
+    """The long random-trace sweeps (same invariants, bigger space)."""
+
+    @sweep(cases=150, seed=60)
+    def test_long_conservation_and_fifo(self, draw):
+        n = draw.integers(2, 6)
+        trace = _trace(draw, n, draw.integers(5, 25), 15)
+        for policy in ("static", "jsq", "goodput"):
+            mgr = RequestManager(n, placement=policy)
+            reqs, events = _drive(mgr, trace, rounds=60)
+            _assert_conserved(mgr, reqs)
+            if policy == "static":
+                assert events == _legacy_events(n, trace, 60)
+
+
+# -- engine-level pins -------------------------------------------------------
+
+class LegacyDirectManager(RequestManager):
+    """The pre-PR admission path: ``submit`` appends straight to the
+    per-server FIFO queue — no global arrival queue, no placement step.
+    Serving through it reproduces the old engine's admission behaviour
+    bit-for-bit, which is what ``placement="static"`` must match."""
+
+    def submit(self, server, request):
+        request.arrival_round = self.round
+        request.server_hint = int(server)
+        self.queues[server].append(request)
+
+
+@pytest.mark.slow
+class TestStaticEquivalenceTrace:
+    """Satellite: the ACCEPTANCE mixed admit/retire/EOS workload under
+    ``placement="static"`` emits byte-identical accepted-token sequences
+    to the pre-PR engine (legacy direct-submit manager), for paged and
+    static caches and both attn backends."""
+
+    @pytest.mark.parametrize("paged,backend", [
+        (False, "jnp"), (True, "jnp"), (False, "kernel"), (True, "kernel")])
+    def test_static_matches_legacy_fifo(self, mixed_trace, paged, backend):
+        legacy = mixed_trace(paged_kv=paged, attn_backend=backend,
+                             manager=LegacyDirectManager(2))
+        new = mixed_trace(paged_kv=paged, attn_backend=backend,
+                          placement="static")
+        assert conftest.generated_seqs(new) == conftest.generated_seqs(legacy)
+
+
+@pytest.mark.slow
+class TestFairnessRegression:
+    """Satellite: on a 2-fast/2-slow alpha setup with arrivals skewed onto
+    the slow servers, goodput placement must not be less fair than static
+    (Jain's index over per-server served tokens) and no server starves."""
+
+    N = 4
+
+    def _workload(self):
+        rng = np.random.default_rng(17)
+        return [(int(rng.integers(0, 6)), 2 + (j % 2),
+                 Request(prompt=rng.integers(
+                     1, conftest.MIXED_TRACE_VOCAB, size=6).astype(np.int32),
+                     max_new_tokens=4)) for j in range(10)]
+
+    def test_goodput_jain_ge_static(self, serve_pair):
+        dm, tm, dp, tp = serve_pair
+        jains, reps = {}, {}
+        for placement in ("static", "goodput"):
+            eng = GoodSpeedEngine(
+                draft_model=dm, target_model=tm, n_servers=self.N, C=10,
+                s_max=4, cache_len=128, placement=placement,
+                draft_temps=(1.0, 1.0, 3.5, 3.5))   # 2 fast / 2 slow
+            rep = eng.serve_requests(jax.random.PRNGKey(9),
+                                     self._workload(), dp, tp, rounds=50)
+            assert rep["summary"]["completed"] == 10
+            per_server = np.zeros(self.N)
+            for r in rep["requests"]:
+                per_server[r["server"]] += r["tokens"]
+            jains[placement], reps[placement] = jain(per_server), rep
+        assert jains["goodput"] >= jains["static"], jains
+        admitted = reps["goodput"]["summary"]["per_server_admitted"]
+        assert all(a >= 1 for a in admitted), \
+            f"server starved under goodput placement: {admitted}"

@@ -129,6 +129,38 @@ class TestRequestManager:
         assert rm.active[0].arrival_round == 0
         assert rm.active[0].admit_round == 1
 
+    def test_tick_ages_queued_unplaced_requests(self):
+        """All-idle rounds (tick) age requests still waiting in the global
+        arrival queue AND in per-server queues — wait metrics are honest
+        even before a request is ever placed."""
+        rm = RequestManager(1)
+        req = Request(prompt=np.zeros(2, np.int32), max_new_tokens=2)
+        rm.submit(0, req)
+        rm.tick()                          # still in the arrival queue
+        rm.tick()
+        assert req.queue_wait == 2
+        assert rm.stats()["queue_wait_ticks"][req.request_id] == 2
+        fresh = rm.admit()                 # placed + admitted at round 2
+        assert fresh == [0]
+        assert req.admit_round - req.arrival_round == req.queue_wait == 2
+
+    def test_stats_reports_per_request_wait_and_per_server(self):
+        rm = RequestManager(2)
+        a = Request(prompt=np.zeros(2, np.int32), max_new_tokens=2)
+        b = Request(prompt=np.zeros(2, np.int32), max_new_tokens=2)
+        c = Request(prompt=np.zeros(2, np.int32), max_new_tokens=2)
+        rm.submit(0, a)
+        rm.submit(0, b)                    # queued behind a on server 0
+        rm.submit(1, c)
+        rm.admit()
+        rm.record_emitted(np.asarray([[7, -1], [8, 9]], np.int32))
+        st = rm.stats()
+        assert st["queue_wait_ticks"] == {a.request_id: 0,
+                                          b.request_id: 1,
+                                          c.request_id: 0}
+        assert st["per_server_admitted"] == [1, 1]
+        assert st["queued"] == 1
+
     def test_eos_completion_and_refill(self):
         rm = RequestManager(1)
         rm.submit(0, Request(prompt=np.zeros(2, np.int32),
