@@ -18,7 +18,13 @@ kernels-check:
 placement-check:
 	PYTHONPATH=src python -m pytest -x -q tests/test_placement.py tests/test_sampling_requests.py
 
+# draft-lane layer standalone: the split_lanes water-filling properties,
+# the estimator hold-on-unobserved regression, lane-manager conservation,
+# and the engine-level lanes=1 golden-trace equivalence + lanes=2 pins
+lanes-check:
+	PYTHONPATH=src python -m pytest -x -q tests/test_lanes.py tests/test_scheduler.py
+
 bench:
 	PYTHONPATH=src python -m benchmarks.run
 
-.PHONY: test docs-check kernels-check placement-check bench
+.PHONY: test docs-check kernels-check placement-check lanes-check bench

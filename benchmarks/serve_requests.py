@@ -27,6 +27,19 @@ alignment (draft temperatures), swept over the placement policies
 completions, p50/p95 queue wait (from the manager's per-request
 queue-wait ticks), and Jain's fairness index over per-server served
 tokens, into the ``placement_skewed`` section of ``BENCH_serve.json``.
+
+The HEAVY scenario (``--scenario heavy``, also part of the full run)
+measures the draft-lane utilization win: an OVERSUBSCRIBED burst of
+short requests (all arrivals in the first third of a fixed horizon, far
+more requests than servers) swept over ``lanes`` in {1, 2, 4} at a
+fixed verify budget.  With one lane per server a finished request
+leaves its server idle until the next admission; with R lanes the
+server keeps R requests in flight, so the same C is spent on live work
+every round.  Per lane count it records total accepted tokens
+(including in-flight partial progress at the horizon), completions,
+p50/p95 queue wait, and Jain's index over per-server served tokens,
+merged into the ``lanes_heavy`` section of ``BENCH_serve.json``
+(read-modify-write: a single-scenario refresh keeps other baselines).
 """
 from __future__ import annotations
 
@@ -56,6 +69,11 @@ N, K, ROUNDS, VOCAB = 4, 16, 80, 256
 SKEW_K, SKEW_ROUNDS, SKEW_ZIPF = 32, 48, 1.5
 SKEW_TEMPS = (1.0, 1.3, 2.0, 2.8)     # heterogeneous per-server alpha
 PLACEMENTS = ("static", "jsq", "goodput")
+# heavy-traffic lane sweep: an oversubscribed burst of short requests on
+# a FIXED horizon — the utilization gap lanes close is admission cadence,
+# so requests are short (a one-lane server idles between completions)
+HEAVY_K, HEAVY_ROUNDS = 80, 24
+HEAVY_LANES = (1, 2, 4)
 ADMIT_BATCHES = (4, 16, 64)
 ADMIT_PROMPT_LEN = 96
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
@@ -103,6 +121,25 @@ def _skewed_workload(seed: int = 3):
     return items
 
 
+def _drain_metrics(rep):
+    """(total_tokens, per_server_tokens, p50, p95): accepted tokens a
+    fixed serving window actually delivered — INCLUDING partial progress
+    of requests still in flight at the horizon — split per server, plus
+    queue-wait percentiles from the manager's per-request wait ticks."""
+    mgr, s = rep["manager"], rep["summary"]
+    reqs = mgr.completed + [r for r in mgr.active if r is not None]
+    per_server = np.zeros(N)
+    for r in reqs:
+        srv = r.placed_server if r.placed_server is not None \
+            else r.server_hint
+        per_server[srv] += len(r.generated)
+    waits = np.asarray(sorted(s["queue_wait_ticks"].values()), np.float64)
+    p50, p95 = (float(np.percentile(waits, 50)),
+                float(np.percentile(waits, 95))) if len(waits) \
+        else (0.0, 0.0)
+    return sum(len(r.generated) for r in reqs), per_server, p50, p95
+
+
 def skewed_scenario(draft, target, dp, tp):
     """(csv_rows, json_section): the placement-policy sweep under skewed
     arrivals and heterogeneous alpha."""
@@ -116,37 +153,77 @@ def skewed_scenario(draft, target, dp, tp):
         rep = eng.serve_requests(jax.random.PRNGKey(6), _skewed_workload(),
                                  dp, tp, rounds=SKEW_ROUNDS)
         wall = time.perf_counter() - t0
-        mgr, s = rep["manager"], rep["summary"]
-        # total accepted tokens, INCLUDING partial progress of requests
-        # still in flight when the horizon ends (that is the goodput a
-        # fixed serving window actually delivered)
-        reqs = mgr.completed + [r for r in mgr.active if r is not None]
-        total_tokens = sum(len(r.generated) for r in reqs)
-        per_server = np.zeros(N)
-        for r in reqs:
-            srv = r.placed_server if r.placed_server is not None \
-                else r.server_hint
-            per_server[srv] += len(r.generated)
-        waits = np.asarray(sorted(s["queue_wait_ticks"].values()), np.float64)
-        p50, p95 = (float(np.percentile(waits, 50)),
-                    float(np.percentile(waits, 95))) if len(waits) else (0, 0)
+        s = rep["summary"]
+        total_tokens, per_server, p50, p95 = _drain_metrics(rep)
+        fairness = round(jain(per_server), 4)
         rows.append((f"skewed_{placement}_total_accepted_tokens",
                      round(wall * 1e6 / max(1, s["rounds_run"]), 0),
                      total_tokens))
-        rows.append((f"skewed_{placement}_jain_fairness", 0.0,
-                     round(jain(per_server), 4)))
+        rows.append((f"skewed_{placement}_jain_fairness", 0.0, fairness))
         rows.append((f"skewed_{placement}_p95_queue_wait_rounds", 0.0,
                      round(p95, 1)))
         section[placement] = {
             "total_accepted_tokens": total_tokens,
             "completed": s["completed"],
             "of_requests": SKEW_K,
-            "jain_fairness": round(jain(per_server), 4),
+            "jain_fairness": fairness,
             "p50_queue_wait_rounds": round(p50, 1),
             "p95_queue_wait_rounds": round(p95, 1),
             "per_server_tokens": per_server.astype(int).tolist(),
             "per_server_admitted": s["per_server_admitted"],
             "rounds_run": s["rounds_run"],
+        }
+    return rows, section
+
+
+def _heavy_workload(seed: int = 5):
+    """Oversubscribed burst: HEAVY_K short requests all arriving in the
+    first third of the horizon, round-robin server hints."""
+    rng = np.random.default_rng(seed)
+    items, t = [], 0.0
+    for j in range(HEAVY_K):
+        t += rng.exponential(HEAVY_ROUNDS / (3.0 * HEAVY_K))
+        dom = SyntheticDomain(PAPER_DATASETS[j % len(PAPER_DATASETS)],
+                              VOCAB, 90 + j)
+        req = Request(prompt=dom.sample_prompt(rng)[:16],
+                      max_new_tokens=int(rng.integers(4, 9)))
+        items.append((int(t), j % N, req))
+    return items
+
+
+def heavy_scenario(draft, target, dp, tp):
+    """(csv_rows, json_section): the draft-lane sweep under an
+    oversubscribed arrival burst at a fixed horizon and verify budget."""
+    rows, section = [], {}
+    for lanes in HEAVY_LANES:
+        eng = GoodSpeedEngine(draft_model=draft, target_model=target,
+                              n_servers=N, C=16, s_max=6, cache_len=256,
+                              paged_kv=True, kv_block_size=16, lanes=lanes)
+        t0 = time.perf_counter()
+        rep = eng.serve_requests(jax.random.PRNGKey(8), _heavy_workload(),
+                                 dp, tp, rounds=HEAVY_ROUNDS)
+        wall = time.perf_counter() - t0
+        s = rep["summary"]
+        total_tokens, per_server, p50, p95 = _drain_metrics(rep)
+        fairness = round(jain(per_server), 4)
+        rows.append((f"heavy_lanes{lanes}_total_accepted_tokens",
+                     round(wall * 1e6 / max(1, s["rounds_run"]), 0),
+                     total_tokens))
+        rows.append((f"heavy_lanes{lanes}_jain_fairness", 0.0, fairness))
+        rows.append((f"heavy_lanes{lanes}_p95_queue_wait_rounds", 0.0,
+                     round(p95, 1)))
+        section[f"lanes{lanes}"] = {
+            "lanes": lanes,
+            "total_accepted_tokens": total_tokens,
+            "completed": s["completed"],
+            "of_requests": HEAVY_K,
+            "jain_fairness": fairness,
+            "p50_queue_wait_rounds": round(p50, 1),
+            "p95_queue_wait_rounds": round(p95, 1),
+            "per_server_tokens": per_server.astype(int).tolist(),
+            "rounds_run": s["rounds_run"],
+            "round_latency_us": round(wall * 1e6 / max(1, s["rounds_run"]),
+                                      1),
         }
     return rows, section
 
@@ -247,10 +324,13 @@ def run():
         }
     skew_rows, skew_json = skewed_scenario(draft, target, dp, tp)
     rows.extend(skew_rows)
+    heavy_rows, heavy_json = heavy_scenario(draft, target, dp, tp)
+    rows.extend(heavy_rows)
     _merge_bench_json({
         "admission_cost_us": {name: us for name, us, _ in admit_rows},
         "serve": serve_json,
         "placement_skewed": skew_json,
+        "lanes_heavy": heavy_json,
         "paged_decode_microbench": {
             f"capacity_{cap}": r for cap, r in microbench.items()
         },
@@ -260,14 +340,19 @@ def run():
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--scenario", choices=("all", "skewed"), default="all",
-                    help="'skewed' runs only the placement-policy sweep "
-                    "and merges its section into BENCH_serve.json")
+    ap.add_argument("--scenario", choices=("all", "skewed", "heavy"),
+                    default="all",
+                    help="'skewed' runs only the placement-policy sweep, "
+                    "'heavy' only the draft-lane sweep; each merges its "
+                    "section into BENCH_serve.json")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.scenario == "skewed":
         rows, section = skewed_scenario(*_models())
         _merge_bench_json({"placement_skewed": section})
+    elif args.scenario == "heavy":
+        rows, section = heavy_scenario(*_models())
+        _merge_bench_json({"lanes_heavy": section})
     else:
         rows = run()
     for name, us, derived in rows:

@@ -40,6 +40,10 @@ def main():
                     "(serve_requests): submitted per-server affinity, "
                     "join-shortest-queue, or alpha_hat/KV-aware goodput "
                     "placement")
+    ap.add_argument("--lanes", type=int, default=1,
+                    help="draft lanes: concurrent requests per draft "
+                    "server (the serve_requests batch axis becomes "
+                    "n_servers * lanes, server-major)")
     args = ap.parse_args()
 
     vocab = 256
@@ -83,11 +87,12 @@ def main():
                           draft_temps=temps,
                           attn_backend=args.attn_backend,
                           paged_kv=args.paged_kv,
-                          placement=args.placement)
+                          placement=args.placement,
+                          lanes=args.lanes)
     rep = eng.serve_requests(jax.random.PRNGKey(3), reqs, dp, tp,
                              rounds=8 * args.rounds)
     s = rep["summary"]
-    print(f"\nserve_requests[{args.placement}]: "
+    print(f"\nserve_requests[{args.placement}, lanes={args.lanes}]: "
           f"{s['completed']}/{len(reqs)} requests in "
           f"{s['rounds_run']} rounds  tokens/round={s['tokens_per_round']:.2f}  "
           f"mean latency={s['mean_latency_rounds']:.1f} rounds  "

@@ -79,10 +79,15 @@ class GoodputEstimator:
         s_f = jnp.maximum(S.astype(jnp.float32), 1.0)
         empirical = jnp.clip(accept_ratio_sum / s_f, 0.0, 1.0)
         # Servers scheduled S_i = 0 this round contribute no observation —
-        # hold their estimate (the paper's Eq. 3 is only defined for S_i>0).
+        # hold BOTH estimates (the paper's Eq. 3 is only defined for S_i>0,
+        # and letting the Eq. 4 EMA absorb x_i from a round the server never
+        # drafted in would silently drag an idle server's goodput toward
+        # the bonus token's x_i = 1, distorting the fairness weight
+        # w_i = dU/dx(X_i) it re-enters the scheduler with).
         observed = S > 0
         alpha_new = (1.0 - eta) * state.alpha_hat + eta * empirical
         alpha_hat = jnp.where(observed, alpha_new, state.alpha_hat)
 
-        goodput = (1.0 - beta) * state.goodput + beta * realized_goodput
+        goodput_new = (1.0 - beta) * state.goodput + beta * realized_goodput
+        goodput = jnp.where(observed, goodput_new, state.goodput)
         return EstimatorState(alpha_hat=alpha_hat, goodput=goodput, t=t + 1)

@@ -59,11 +59,24 @@ class LatencyModel:
             + (self.probs_topk > 0) * k * 4  # top-k also ships indices
         return S.astype(jnp.float32) * per_tok
 
-    def receive_time(self, S: Array, vocab: int, jitter: Array) -> Array:
-        """Batch assembly = max over servers of (draft + uplink)."""
-        per = self.draft_time(S, jitter) \
-            + self.uplink_payload(S, vocab) / self.uplink_bytes_s + self.rtt_s
-        return jnp.max(jnp.where(S > 0, per, 0.0))
+    def receive_time(self, S: Array, vocab: int, jitter: Array,
+                     lanes: int = 1) -> Array:
+        """Batch assembly = max over servers of (draft + uplink).
+
+        ``lanes`` > 1 groups the [N*R] per-lane rows server-major: a
+        server's lanes decode in ONE batched forward (draft time = its
+        slowest lane) but share the server's uplink (payloads SUM over
+        its lanes before the transfer-time division)."""
+        draft = self.draft_time(S, jitter)
+        payload = self.uplink_payload(S, vocab)
+        live = S > 0
+        if lanes > 1:
+            n = S.shape[0] // lanes
+            draft = jnp.max(draft.reshape(n, lanes), axis=1)
+            payload = payload.reshape(n, lanes).sum(axis=1)
+            live = live.reshape(n, lanes).any(axis=1)
+        per = draft + payload / self.uplink_bytes_s + self.rtt_s
+        return jnp.max(jnp.where(live, per, 0.0))
 
     def verify_time(self, S: Array) -> Array:
         """Roofline time of one batched verify pass over T = sum(S_i + 1)."""
@@ -83,8 +96,12 @@ class LatencyModel:
         return payload / self.downlink_bytes_s
 
     def round_time(self, S: Array, num_emitted: Array, vocab: int,
-                   jitter: Array):
-        r = self.receive_time(S, vocab, jitter)
+                   jitter: Array, lanes: int = 1):
+        """S / num_emitted / jitter are per-row ([N] servers, or [N*R]
+        server-major lane rows with ``lanes`` set).  Verify and send cost
+        every lane's tokens (sums over rows already); only receive needs
+        the lane grouping (shared per-server uplink)."""
+        r = self.receive_time(S, vocab, jitter, lanes=lanes)
         v = self.verify_time(S)
         s = self.send_time(num_emitted)
         return r + v + s, (r, v, s)

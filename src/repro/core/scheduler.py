@@ -152,8 +152,12 @@ def solve_threshold(alpha: Array, weights: Array, C: int,
 
 @functools.partial(jax.jit, static_argnames=("C", "n"))
 def fixed_s(n: int, C: int) -> Array:
-    """Fixed-S baseline: S_i = C // N (uniform; paper §IV-B2)."""
-    return jnp.full((n,), C // n, jnp.int32)
+    """Fixed-S baseline (uniform; paper §IV-B2): S_i = C // N, with the
+    C % N remainder handed deterministically to the first C % N servers so
+    the baseline spends its whole verify budget (sum(S) == C) instead of
+    silently dropping up to N-1 slots every round."""
+    base = jnp.full((n,), C // n, jnp.int32)
+    return base + (jnp.arange(n) < C % n).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("C", "n"))
@@ -168,6 +172,45 @@ def random_s(key: Array, n: int, C: int) -> Array:
 
 def _capped(S: Array, s_max: Array | None) -> Array:
     return S if s_max is None else jnp.minimum(S, jnp.asarray(s_max, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Per-server lane splitter (multi-request draft servers)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("level_max",))
+def split_lanes(S: Array, lane_caps: Array, level_max: int) -> Array:
+    """Divide each server's budget across its request lanes (water-filling).
+
+    GOODSPEED-SCHED stays at SERVER granularity — the paper's fairness unit
+    — and this splitter turns the per-server allocation ``S`` (i32[N]) into
+    per-lane draft lengths (i32[N, R]) against the lanes' remaining caps
+    ``lane_caps`` (i32[N, R], already min'd with the engine's s_max, which
+    is ``level_max``).  Completion-aware and deterministic:
+
+      * idle lanes (cap 0) get nothing;
+      * allocation water-fills — as even as the caps allow (any two lanes
+        differ by at most 1 unless one is sitting at its cap);
+      * the sub-level remainder goes to the lowest-indexed eligible lanes;
+      * per lane out[i, r] <= lane_caps[i, r], and per server
+        sum_r out[i, r] == min(S[i], sum_r lane_caps[i, r]).
+
+    The water level L* is found in closed form: fill(L) = sum_r
+    min(cap_r, L) is non-decreasing in L, so L* is the first level whose
+    fill reaches the target — a [N, R, level_max+1] broadcast, no loop.
+    """
+    lane_caps = jnp.asarray(lane_caps, jnp.int32)
+    target = jnp.minimum(jnp.asarray(S, jnp.int32),
+                         lane_caps.sum(axis=1))                  # i32[N]
+    levels = jnp.arange(level_max + 1, dtype=jnp.int32)          # [L+1]
+    fill = jnp.minimum(lane_caps[:, :, None],
+                       levels[None, None, :]).sum(axis=1)        # [N, L+1]
+    lstar = jnp.sum(fill < target[:, None], axis=1)              # i32[N]
+    base = jnp.minimum(lane_caps, jnp.maximum(lstar - 1, 0)[:, None])
+    rem = target - base.sum(axis=1)          # 0 <= rem <= #lanes at >= L*
+    elig = lane_caps >= lstar[:, None]
+    rank = jnp.cumsum(elig.astype(jnp.int32), axis=1) - 1
+    return base + (elig & (rank < rem[:, None])).astype(jnp.int32)
 
 
 def make_scheduler(name: str):

@@ -8,7 +8,8 @@ Round structure (paper Fig. 1):
       masked out of the verify chunk entirely);
   (1) each draft server autoregressively samples S_i(t) tokens from its
       draft model (KV-cached decode steps);
-  (2-3) drafts are batched into one ragged [N, S_max] verify batch;
+  (2-3) drafts are batched into one ragged [N*R, S_max] verify batch
+        (R = draft lanes: concurrent request rows per server);
   (4) the target model scores the chunk [pending_i, d_1..d_S] in ONE
       decode-chunk forward (positions len_i..len_i+S), and the verifier
       runs lossless rejection sampling (core.speculative.verify);
@@ -30,10 +31,15 @@ Request lifecycle (``serve_requests``): the verification server owns a
 pluggable placement policy (``placement="static" | "jsq" | "goodput"``,
 serving.placement) routes each arrival onto a draft server at admission
 time, deciding against the live estimator state (alpha_hat), per-server
-queue loads, and free paged-KV blocks.  Each server carries one ACTIVE
-request; when it completes (per-request cap reached or EOS emitted) the
-next queued request is admitted immediately — continuous batching at
-server granularity.  Admission re-prefills ONLY the
+queue loads, and free paged-KV blocks.  Each server carries up to
+``lanes`` ACTIVE requests, one per draft lane — the batch axis is
+[N*R] lane rows, server-major — and when a request completes
+(per-request cap reached or EOS emitted) the next queued request is
+seated into the freed lane immediately: continuous batching at lane
+granularity.  GOODSPEED-SCHED keeps allocating per SERVER (the paper's
+fairness unit; alpha_hat / X^beta stay f32[N]) and
+``core.scheduler.split_lanes`` water-fills each server's budget across
+its live lanes by remaining caps.  Admission re-prefills ONLY the
 fresh rows of both model caches — ``_admit_rows`` runs a full-batch prefill
 and row-merges it into the live stack caches (``_merge_cache_rows``, the
 stack-level analogue of the single-cache ``kv_cache.prefill_rows``) while
@@ -61,7 +67,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.estimator import EstimatorState, GoodputEstimator
 from repro.core.latency import LatencyModel
-from repro.core.scheduler import fixed_s, make_scheduler
+from repro.core.scheduler import fixed_s, make_scheduler, split_lanes
 from repro.core.speculative import verify
 from repro.core.utility import UtilitySpec
 from repro.models import Model
@@ -147,25 +153,27 @@ def _merge_cache_rows(old, new, rows: Array):
 
 
 class EngineState(NamedTuple):
-    # sequences: committed tokens per server (host-side ragged bookkeeping)
+    # sequences: committed tokens per lane row (host-side ragged
+    # bookkeeping).  All row-indexed arrays are [N*R], server-major: row
+    # b serves (server b // R, lane b % R); estimator state stays [N].
     target_cache: object
     draft_cache: object
-    pending: Array        # i32[N] last committed token (next chunk input)
-    length: Array         # i32[N] committed length EXCLUDING pending
-    est: EstimatorState
-    S: Array              # i32[N] allocation used in the last round
+    pending: Array        # i32[N*R] last committed token (next chunk input)
+    length: Array         # i32[N*R] committed length EXCLUDING pending
+    est: EstimatorState   # per-SERVER (alpha_hat/goodput: f32[N])
+    S: Array              # i32[N*R] per-lane allocation used last round
     key: Array
 
 
 class RoundStats(NamedTuple):
-    S: np.ndarray
-    accepted: np.ndarray
-    realized: np.ndarray
-    alpha_hat: np.ndarray
-    goodput_est: np.ndarray
+    S: np.ndarray          # i32[N*R] per-lane draft lengths (server-major)
+    accepted: np.ndarray   # i32[N*R]
+    realized: np.ndarray   # f32[N*R]
+    alpha_hat: np.ndarray  # f32[N] per-server (the fairness unit)
+    goodput_est: np.ndarray  # f32[N]
     utility: float
     wall: np.ndarray       # [total, receive, verify, send]
-    emitted: np.ndarray    # [N, S_max+1] tokens, -1 padded
+    emitted: np.ndarray    # [N*R, S_max+1] tokens, -1 padded
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,8 +182,16 @@ class GoodSpeedEngine:
     target_model: Model
     n_servers: int
     C: int
-    s_max: int                     # per-server draft cap (latency bound)
+    s_max: int                     # per-lane draft cap (latency bound)
     cache_len: int = 512
+    # draft lanes: concurrent request slots PER SERVER.  Every row-indexed
+    # surface (caches, pending/length, caps, verify chunk) runs at batch
+    # N*R, server-major; GOODSPEED-SCHED still allocates per SERVER (the
+    # paper's fairness unit, alpha_hat/X^beta stay f32[N]) and
+    # ``core.scheduler.split_lanes`` water-fills each server's S_i across
+    # its live lanes.  lanes=1 is byte-identical to the single-request
+    # engine (tests/test_lanes.py pins it against a recorded trace).
+    lanes: int = 1
     policy: str = "goodspeed"      # goodspeed | greedy | fixed | random
     estimator: GoodputEstimator = GoodputEstimator()
     utility: UtilitySpec = UtilitySpec(alpha=1.0)
@@ -187,7 +203,7 @@ class GoodSpeedEngine:
     # static [B, L] caches so both paths can be diffed for equivalence.
     paged_kv: bool = False
     kv_block_size: int = 16
-    kv_num_blocks: int = 0         # 0 = n_servers * ceil(cache_len / bs)
+    kv_num_blocks: int = 0         # 0 = n_rows * ceil(cache_len / bs)
     # request placement at admission ("static" | "jsq" | "goodput", or a
     # PlacementPolicy instance): how serve_requests routes arrivals onto
     # draft servers.  "static" keeps the submitted per-server affinity
@@ -205,6 +221,7 @@ class GoodSpeedEngine:
     attn_backend: Optional[str] = None
 
     def __post_init__(self):
+        assert self.lanes >= 1, "lanes must be >= 1"
         # resolve the policy once; validates the name at construction time
         object.__setattr__(self, "_sched", make_scheduler(self.policy))
         make_placement(self.placement)   # validate at construction time
@@ -239,6 +256,11 @@ class GoodSpeedEngine:
         object.__setattr__(self, "_prefill_fn_draft",
                            _make_prefill(self.draft_model))
 
+    @property
+    def n_rows(self) -> int:
+        """Total lane rows: n_servers * lanes (the batch axis)."""
+        return self.n_servers * self.lanes
+
     # ------------------------------------------------------------------
     def _fresh_cache(self, model: Model, batch: int):
         """Empty stack cache in the engine's configured layout."""
@@ -253,7 +275,7 @@ class GoodSpeedEngine:
                       target_params):
         """Prefill FRESH caches for the given per-row prompts; returns
         (target_cache, draft_cache, pending, length)."""
-        n = self.n_servers
+        n = self.n_rows
         assert len(prompts) == n
         maxlen = max(len(p) for p in prompts)
         toks = np.zeros((n, maxlen), np.int32)
@@ -287,11 +309,12 @@ class GoodSpeedEngine:
 
     def init(self, key: Array, prompts: list[np.ndarray],
              draft_params, target_params) -> EngineState:
-        """Prefill both models on the per-server prompts."""
+        """Prefill both models on the per-row prompts (one prompt per lane
+        row, server-major — n_servers * lanes entries)."""
         if self.paged_kv:
             state = self.cold_start(key)
             return self._admit_rows(
-                state, list(range(self.n_servers)),
+                state, list(range(self.n_rows)),
                 dict(enumerate(prompts)), draft_params, target_params)
         tcache, dcache, pending, length = self._prefill_rows(
             prompts, draft_params, target_params)
@@ -299,21 +322,21 @@ class GoodSpeedEngine:
             target_cache=tcache, draft_cache=dcache,
             pending=pending, length=length,
             est=self.estimator.init(self.n_servers),
-            S=fixed_s(self.n_servers, self.C), key=key)
+            S=fixed_s(self.n_rows, self.C), key=key)
 
     def cold_start(self, key: Array) -> EngineState:
         """All-idle engine state with empty caches — no model forward.
         ``serve_requests`` starts here: every row is masked out until its
         first admission re-prefills it, so prefilling dummy prompts would
         be wasted compute."""
-        n = self.n_servers
+        b = self.n_rows
         return EngineState(
-            target_cache=self._fresh_cache(self.target_model, n),
-            draft_cache=self._fresh_cache(self.draft_model, n),
-            pending=jnp.zeros((n,), jnp.int32),
-            length=jnp.zeros((n,), jnp.int32),
-            est=self.estimator.init(n),
-            S=fixed_s(n, self.C), key=key)
+            target_cache=self._fresh_cache(self.target_model, b),
+            draft_cache=self._fresh_cache(self.draft_model, b),
+            pending=jnp.zeros((b,), jnp.int32),
+            length=jnp.zeros((b,), jnp.int32),
+            est=self.estimator.init(self.n_servers),
+            S=fixed_s(b, self.C), key=key)
 
     # ------------------------------------------------------------------
     def _admit_rows(self, state: EngineState, rows: list[int],
@@ -332,8 +355,8 @@ class GoodSpeedEngine:
 
         With ``paged_kv`` the admission prefill runs at batch = len(rows)
         and scatters straight into the shared block pools
-        (``_admit_rows_paged``) — cost independent of n_servers."""
-        n = self.n_servers
+        (``_admit_rows_paged``) — cost independent of the total rows."""
+        n = self.n_rows
         self._check_admission_fits(
             [np.asarray(prompts[i], np.int32) for i in rows], rows, budgets)
         if self.paged_kv:
@@ -433,7 +456,7 @@ class GoodSpeedEngine:
         this, an undersized pool could refuse an admission while an idle
         row sits on freed-able blocks.  Paged leaves only; static caches
         need no release (masking already hides stale rows)."""
-        mask = np.zeros((self.n_servers,), bool)
+        mask = np.zeros((self.n_rows,), bool)
         mask[list(rows)] = True
         mask_j = jnp.asarray(mask)
 
@@ -532,8 +555,12 @@ class GoodSpeedEngine:
 
         vmask: the pad-vocab mask from ``_vocab_mask``, built ONCE per
         round and closed over here — not rebuilt in every scan step."""
-        n, s_cap = self.n_servers, self.s_max
-        temps = jnp.asarray(self.draft_temps or (1.0,) * n, jnp.float32)
+        s_cap = self.s_max
+        # draft_temps are per SERVER (hardware heterogeneity); each of a
+        # server's lanes samples at its server's temperature
+        temps = jnp.repeat(jnp.asarray(
+            self.draft_temps or (1.0,) * self.n_servers, jnp.float32),
+            self.lanes)
 
         def dec(carry, t):
             cache, tok, pos, key = carry
@@ -573,9 +600,9 @@ class GoodSpeedEngine:
                       S: Array, active: Array, vmask: Optional[Array]):
         """Step (4a): target scores [pending, d_1..d_{S-1}, d_S] in one
         decode-chunk; output j is the distribution of chunk position j+1.
-        Inactive (idle-server) rows are masked out of the chunk entirely —
+        Inactive (idle-lane) rows are masked out of the chunk entirely —
         their caches see no writes and they commit nothing."""
-        n, s_cap = self.n_servers, self.s_max
+        n, s_cap = self.n_rows, self.s_max
         chunk = jnp.concatenate([state.pending[:, None], draft_toks], axis=1)
         in_draft = jnp.arange(s_cap)[None, :] < S[:, None]
         chunk_valid = active[:, None] & jnp.concatenate(
@@ -593,21 +620,31 @@ class GoodSpeedEngine:
                     caps: Array):
         """One full Algorithm-1 round (jit'd, state donated).
 
-        caps: i32[N] per-server remaining-token budget.  cap == 0 marks an
-        IDLE server: it gets S_i = 0 from the scheduler (inside the solver,
-        so the budget flows to live servers), is masked out of the verify
-        chunk, commits nothing, and its estimator state holds.
+        caps: i32[N*R] per-LANE remaining-token budget (server-major).
+        cap == 0 marks an IDLE lane: it gets S = 0 from the splitter, is
+        masked out of the verify chunk and commits nothing.  A server
+        whose lanes are all idle gets S_i = 0 from the scheduler (inside
+        the solver, so the budget flows to live servers) and its
+        estimator state holds.
         """
         key, k_draft, k_verify, k_sched, k_jit = jax.random.split(state.key, 5)
         cfg_t = self.target_model.cfg
-        n = self.n_servers
+        n, lanes = self.n_servers, self.lanes
 
         # ---- step (0): completion-aware scheduling -----------------------
+        # GOODSPEED-SCHED solves at SERVER granularity (the paper's
+        # fairness unit): each server's cap is the sum of its lanes'
+        # per-round draft capacity, and the per-server allocation is then
+        # water-filled across the live lanes (core.scheduler.split_lanes).
         active = caps > 0
-        s_cap = jnp.minimum(caps, self.s_max)
+        lane_cap = jnp.minimum(caps, self.s_max)          # i32[N*R]
+        srv_cap = lane_cap.reshape(n, lanes).sum(axis=1)  # i32[N]
         w = self.utility.grad(state.est.goodput)
-        S = self._sched(state.est.alpha_hat, w, self.C,
-                        key=k_sched, s_max=s_cap)
+        S_srv = self._sched(state.est.alpha_hat, w, self.C,
+                            key=k_sched, s_max=srv_cap)
+        S_srv = jnp.where(srv_cap > 0, S_srv, 0)
+        S = split_lanes(S_srv, lane_cap.reshape(n, lanes),
+                        self.s_max).reshape(-1)           # i32[N*R]
         S = jnp.where(active, S, 0)
 
         # pad-vocab masks built once per round (closed over by the draft
@@ -642,18 +679,27 @@ class GoodSpeedEngine:
                 self.draft_model, draft_params, state.draft_cache,
                 state.pending, draft_toks, m_eff, state.length)
 
-        # ---- estimator update (step 5); idle rows hold their estimates ---
-        est_new = self.estimator.update(state.est, res.accept_ratio_sum,
-                                        S, realized)
-        est = EstimatorState(
-            alpha_hat=jnp.where(active, est_new.alpha_hat,
-                                state.est.alpha_hat),
-            goodput=jnp.where(active, est_new.goodput, state.est.goodput),
-            t=est_new.t)
+        # ---- estimator update (step 5): per-SERVER aggregation over the
+        # server's lanes (Eq. 3 divides the summed accept ratios by the
+        # summed verified positions; Eq. 4's x_i is the server's total
+        # emitted tokens).  Unobserved servers (no lane drafted: S_i = 0)
+        # hold BOTH estimates inside the estimator — an idle server must
+        # not have its fairness weight dragged by rounds it never saw.
+        ratio = jnp.where(active, res.accept_ratio_sum, 0.0)
+        est = self.estimator.update(
+            state.est,
+            ratio.reshape(n, lanes).sum(axis=1),
+            S.reshape(n, lanes).sum(axis=1),
+            realized.reshape(n, lanes).sum(axis=1))
 
-        jitter = jax.random.uniform(k_jit, (n,), minval=-1.0, maxval=1.0)
+        # latency sees per-lane rows with the lane grouping: a server's
+        # lanes draft in one batched decode (receive = max over its
+        # lanes) but share its uplink (payloads sum per server), while
+        # the verify chunk and downlink pay for every lane's tokens
+        jitter = jax.random.uniform(k_jit, (n * lanes,),
+                                    minval=-1.0, maxval=1.0)
         total, (rt, vt, st) = self.latency.round_time(
-            S, num_emitted, cfg_t.vocab_size, jitter)
+            S, num_emitted, cfg_t.vocab_size, jitter, lanes=lanes)
 
         pending = jnp.where(active, res.extra_token, state.pending)
         emitted = jnp.where(active[:, None], res.emitted, -1)
@@ -668,11 +714,12 @@ class GoodSpeedEngine:
     def run_round(self, state: EngineState, draft_params, target_params,
                   caps: Optional[np.ndarray] = None
                   ) -> tuple[EngineState, RoundStats]:
-        """One round.  caps defaults to "every server live at full s_max"
-        (the fixed-round simulator behaviour).  NOTE: ``state`` is donated
-        to the compiled round — use the returned state, not the argument."""
+        """One round.  caps (i32[N*R], per lane) defaults to "every lane
+        live at full s_max" (the fixed-round simulator behaviour).  NOTE:
+        ``state`` is donated to the compiled round — use the returned
+        state, not the argument."""
         if caps is None:
-            caps = np.full((self.n_servers,), self.s_max, np.int32)
+            caps = np.full((self.n_rows,), self.s_max, np.int32)
         new_state, raw = self._round_fn(
             state, draft_params, target_params, jnp.asarray(caps, jnp.int32))
         S, m, realized, alpha_hat, goodput, util, wall, emitted = raw
@@ -718,8 +765,8 @@ class GoodSpeedEngine:
                     totals.append(int(free.shape[0]))
             if frees:
                 free_blocks, total_blocks = min(frees), min(totals)
-                # reserve the ACTIVE rows' same-round growth: each live
-                # row's verify chunk (<= s_max+1 tokens) may claim up to
+                # reserve the ACTIVE lanes' same-round growth: each live
+                # lane's verify chunk (<= s_max+1 tokens) may claim up to
                 # blocks_for(s_max+1) fresh blocks this round, and an
                 # admission that takes them would trip the sticky
                 # alloc_failed mid-round — the crash deferral prevents
@@ -728,7 +775,7 @@ class GoodSpeedEngine:
                     self.s_max + 1, self.kv_block_size))
         return PlacementView(
             queue_load=mgr.queue_load(),
-            active_remaining=mgr.remaining_caps(),
+            active_remaining=mgr.server_remaining(),
             alpha_hat=np.asarray(state.est.alpha_hat, np.float32),
             alpha_init=self.estimator.alpha_init,
             s_max=self.s_max,
@@ -739,8 +786,9 @@ class GoodSpeedEngine:
     # ------------------------------------------------------------------
     def serve(self, key: Array, prompts: list[np.ndarray], draft_params,
               target_params, rounds: int) -> list[RoundStats]:
-        """Fixed-round simulator: every server decodes forever (no request
-        lifecycle).  The paper's Fig. 2-4 experiments run through here."""
+        """Fixed-round simulator: every lane decodes forever (no request
+        lifecycle; one prompt per lane row, n_servers * lanes entries).
+        The paper's Fig. 2-4 experiments run through here."""
         state = self.init(key, prompts, draft_params, target_params)
         history = []
         for _ in range(rounds):
@@ -772,9 +820,13 @@ class GoodSpeedEngine:
         rounds) to resume an interrupted drain — mid-flight requests are
         re-prefilled from prompt + generated-so-far.
         """
-        n = self.n_servers
+        n, rows = self.n_servers, self.n_rows
         mgr = manager if manager is not None \
-            else RequestManager(n, placement=self.placement)
+            else RequestManager(n, placement=self.placement,
+                                lanes=self.lanes)
+        assert mgr.rows == rows, \
+            (f"manager has {mgr.n} servers x {mgr.lanes} lanes but the "
+             f"engine runs {self.n_servers} x {self.lanes}")
         sched = []
         for j, item in enumerate(workload):
             if isinstance(item, Request):
@@ -795,7 +847,7 @@ class GoodSpeedEngine:
         state = self.cold_start(key)
         # requests already active in a caller-supplied manager need their
         # rows rebuilt too — this engine state starts cold
-        carried = [i for i in range(n) if mgr.active[i] is not None
+        carried = [i for i in range(rows) if mgr.active[i] is not None
                    and not mgr.active[i].done]
         prev_done = len(mgr.completed)     # completions from earlier calls
         history: list[RoundStats] = []
@@ -811,7 +863,7 @@ class GoodSpeedEngine:
                 # a retired row holds blocks another server's admission may
                 # need — release BEFORE the placement view reads the free
                 # list, so admission and the pool pre-check see them
-                newly_idle = [i for i in range(n)
+                newly_idle = [i for i in range(rows)
                               if mgr.active[i] is None and i not in released]
                 if newly_idle:
                     state = self._release_rows(state, newly_idle)
@@ -868,6 +920,7 @@ class GoodSpeedEngine:
             "request_id": req.request_id,
             "server": (req.placed_server if req.placed_server is not None
                        else req.server_hint),
+            "lane": req.placed_lane,
             "arrival_round": req.arrival_round,
             "admit_round": req.admit_round,
             "finish_round": req.finish_round,

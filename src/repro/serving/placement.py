@@ -22,6 +22,13 @@ arrived request joins:
   at ``alpha_init`` (cold start) the scores are uniform in ``alpha`` and
   the choice degrades exactly to ``jsq``.
 
+Policies decide the SERVER only: under draft lanes
+(``GoodSpeedEngine(lanes=R)``) the manager seats the placed request into
+the chosen server's lowest free lane, and the view's signals are
+lane-aware server aggregates (``active_remaining`` sums the lanes' caps;
+the engine's free-block reserve counts every active lane's chunk
+headroom).
+
 Policies are host-side and pure: ``place`` never mutates the manager; the
 ``RequestManager`` owns the queues and updates the view's running load as
 a burst of arrivals is placed, so successive placements see each other.
@@ -56,7 +63,10 @@ class PlacementView:
     """
 
     queue_load: np.ndarray          # i64[N] queued token demand per server
-    active_remaining: np.ndarray    # i32[N] active request's remaining cap
+    # i32[N] remaining caps of the server's ACTIVE requests (summed over
+    # its lanes when the engine runs lanes > 1 — placement decides the
+    # server; the manager picks the lane)
+    active_remaining: np.ndarray
     alpha_hat: Optional[np.ndarray] = None   # f32[N] estimator state
     alpha_init: float = 0.5
     s_max: int = 4                  # per-server draft cap (mu horizon)

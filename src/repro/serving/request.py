@@ -7,13 +7,15 @@ request to a draft server — ``static`` binds on arrival and reproduces
 the original per-server FIFO affinity exactly, while ``jsq``/``goodput``
 hold requests in the global queue and decide the server at SEAT time
 against the live view, so a request is never stuck behind a binding that
-turned out to be the hot server (see ``placement.py``).  Each draft server carries one
-ACTIVE request at a time (its end-user session); when a request completes
-(max_new_tokens reached or EOS), the next queued request for that server
-is admitted immediately — continuous batching at the server granularity.
-The engine reads ``remaining`` caps from here and feeds them to
-GOODSPEED-SCHED as s_max (completion-aware allocation, EXPERIMENTS
-§Repro).
+turned out to be the hot server (see ``placement.py``).  Each draft server
+carries up to ``lanes`` ACTIVE requests at a time (its end-user sessions,
+batched through the engine's draft lanes); when a request completes
+(max_new_tokens reached or EOS), the next queued request is seated into
+the freed lane immediately — continuous batching at lane granularity.
+The engine reads per-lane ``remaining`` caps from here; GOODSPEED-SCHED
+aggregates them per server (the paper's fairness unit) and a water-filling
+splitter divides each server's allocation across its live lanes
+(completion-aware allocation, EXPERIMENTS §Repro).
 
 Host-side bookkeeping by design (request arrival is I/O, not jit-able);
 everything the jit'd round loop needs is exported as dense arrays.
@@ -45,10 +47,13 @@ class Request:                      # queue entries, and the generated
     arrival_round: int = 0
     admit_round: Optional[int] = None
     finish_round: Optional[int] = None
-    # placement: the server the submitter asked for (static affinity) and
-    # the server the policy actually chose
+    # placement: the server the submitter asked for (static affinity), the
+    # server the policy actually chose, and the lane (request slot on that
+    # server) the manager seated it in — placement decides the SERVER only;
+    # the lane is the lowest free slot (deterministic)
     server_hint: Optional[int] = None
     placed_server: Optional[int] = None
+    placed_lane: Optional[int] = None
     # rounds spent waiting (arrival -> admission); aged by the manager
     # every round-clock advance while the request is still queued, so wait
     # metrics are honest for requests that have not been admitted yet
@@ -78,16 +83,37 @@ class RequestManager:
     self-derived view when driven directly.  Binding-on-arrival policies
     park arrivals on per-server FIFO queues first; lazy policies seat
     straight from the global queue.
+
+    ``lanes``: concurrent request slots PER SERVER (the engine's draft
+    lanes).  ``self.active`` is row-indexed, server-major — row
+    ``srv * lanes + lane`` — matching the engine's [N*R] batch layout;
+    queues, hints and placement decisions stay at SERVER granularity, and
+    a seated request takes the lowest free lane of its chosen server.
+    ``lanes=1`` is exactly the one-request-per-server manager.
     """
 
-    def __init__(self, n_servers: int, placement="static"):
+    def __init__(self, n_servers: int, placement="static", lanes: int = 1):
+        assert lanes >= 1, "lanes must be >= 1"
         self.n = n_servers
+        self.lanes = lanes
+        self.rows = n_servers * lanes
         self.placement = make_placement(placement)
         self.arrivals: deque = deque()             # global cross-server
         self.queues: list[deque] = [deque() for _ in range(n_servers)]
-        self.active: list[Optional[Request]] = [None] * n_servers
+        self.active: list[Optional[Request]] = [None] * self.rows
         self.completed: list[Request] = []
         self.round = 0
+
+    # -- (server, lane) <-> row ----------------------------------------------
+    def server_of(self, row: int) -> int:
+        return row // self.lanes
+
+    def _free_row(self, server: int) -> Optional[int]:
+        """Lowest free row (lane) of ``server``; None when all lanes busy."""
+        for row in range(server * self.lanes, (server + 1) * self.lanes):
+            if self.active[row] is None:
+                return row
+        return None
 
     # -- admission ----------------------------------------------------------
     def submit(self, server: Optional[int], request: Request) -> None:
@@ -114,7 +140,7 @@ class RequestManager:
         """Self-derived view for direct-driven managers (no engine): queue
         state only, cold estimates, no pool gate."""
         return PlacementView(queue_load=self.queue_load(),
-                             active_remaining=self.remaining_caps())
+                             active_remaining=self.server_remaining())
 
     def _bind_arrivals(self, view: PlacementView) -> None:
         """Binding-on-arrival policies only (static affinity): drain the
@@ -136,7 +162,7 @@ class RequestManager:
         seatable."""
         best = None
         for i in range(self.n):
-            if self.active[i] is None and self.queues[i]:
+            if self._free_row(i) is not None and self.queues[i]:
                 r = self.queues[i][0]
                 key = (r.arrival_round, r.request_id)
                 if best is None or key < best[0]:
@@ -150,12 +176,12 @@ class RequestManager:
         return None if best is None else (best[1], best[2])
 
     def retire_done(self) -> list[int]:
-        """Move done active requests to ``completed``; returns their
-        servers.  A done request retires even when its queue is empty —
-        the slot goes idle (``remaining_caps`` reports 0) rather than
-        holding a finished request forever."""
+        """Move done active requests to ``completed``; returns their rows
+        (server-major ``srv * lanes + lane``).  A done request retires even
+        when its queue is empty — the slot goes idle (``remaining_caps``
+        reports 0) rather than holding a finished request forever."""
         retired = []
-        for i in range(self.n):
+        for i in range(self.rows):
             if self.active[i] is not None and self.active[i].done:
                 self.active[i].finish_round = self.round
                 self.completed.append(self.active[i])
@@ -165,8 +191,10 @@ class RequestManager:
 
     def admit(self, view: Optional[PlacementView] = None) -> list[int]:
         """Retire done active requests, then seat waiting requests —
-        oldest first — until nothing more fits; returns servers that got
-        a NEW request this call (their caches need re-prefilling).
+        oldest first — until nothing more fits; returns the ROWS
+        (server-major ``srv * lanes + lane``) that got a NEW request this
+        call (their cache rows need re-prefilling).  The policy picks the
+        server; the manager seats into its lowest free lane.
 
         Binding-on-arrival policies (static) first drain arrivals onto
         their per-server queues; lazy policies (jsq/goodput) seat
@@ -196,7 +224,7 @@ class RequestManager:
             srv, req = cand
             if srv is None:                 # global head: decide NOW
                 srv = self.placement.place(req, view) % self.n
-                if self.active[srv] is not None:
+                if self._free_row(srv) is None:
                     # the policy prefers waiting for this busy server
                     # (e.g. goodput betting on a fast draft) — the
                     # request keeps waiting, but younger candidates may
@@ -210,11 +238,13 @@ class RequestManager:
                 self.queues[srv].popleft()
             else:
                 self.arrivals.remove(req)
+            row = self._free_row(srv)
             req.admit_round = self.round
             req.placed_server = srv
-            self.active[srv] = req
+            req.placed_lane = row % self.lanes
+            self.active[row] = req
             view.note_admitted(req, srv)
-            fresh.append(srv)
+            fresh.append(row)
         return sorted(fresh)
 
     # -- round bookkeeping ---------------------------------------------------
@@ -227,13 +257,14 @@ class RequestManager:
                 req.queue_wait += 1
 
     def record_emitted(self, emitted: np.ndarray) -> None:
-        """emitted: i32[N, S+1], -1 padded (engine RoundStats.emitted).
+        """emitted: i32[N*R, S+1], -1 padded, server-major rows (engine
+        RoundStats.emitted).
 
         Tokens are truncated at the request's cap AND at the first EOS
         token (the EOS itself is kept so ``done`` observes it); anything
         past EOS never enters ``generated``, keeping ``remaining``, goodput
         accounting, and returned text consistent with completion."""
-        for i in range(self.n):
+        for i in range(self.rows):
             req = self.active[i]
             if req is None:
                 continue
@@ -254,12 +285,19 @@ class RequestManager:
 
     # -- dense views for the jit'd loop --------------------------------------
     def remaining_caps(self) -> np.ndarray:
-        """i32[N] remaining tokens per server (0 where idle or done — an
-        EOS-finished request may have cap budget left but must not be
-        scheduled) — feeds GOODSPEED-SCHED's s_max."""
+        """i32[N*R] remaining tokens per ROW, server-major (0 where idle or
+        done — an EOS-finished request may have cap budget left but must
+        not be scheduled) — feeds the engine's per-lane caps, which the
+        scheduler aggregates per server and the lane splitter divides."""
         return np.asarray(
             [r.remaining if r is not None and not r.done else 0
              for r in self.active], np.int32)
+
+    def server_remaining(self) -> np.ndarray:
+        """i32[N] remaining tokens per SERVER (lane caps summed) — the
+        placement view's ``active_remaining`` signal."""
+        return self.remaining_caps().reshape(
+            self.n, self.lanes).sum(axis=1).astype(np.int32)
 
     def idle(self) -> bool:
         """True when nothing is in flight anywhere (drain detection)."""

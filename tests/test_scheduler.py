@@ -94,11 +94,24 @@ class TestSchedulerBehaviour:
         assert S[1] > S[0]
 
     def test_fixed_and_random_budget(self):
-        S = fixed_s(8, 20)
-        assert int(jnp.sum(S)) == 16  # floor(20/8)*8
+        # fixed_s must spend the WHOLE budget: C % n used to be silently
+        # dropped (C=20, n=8 allocated only 16 of 20 slots)
+        S = np.asarray(fixed_s(8, 20))
+        assert S.sum() == 20
+        np.testing.assert_array_equal(S, [3, 3, 3, 3, 2, 2, 2, 2])
         Sr = random_s(jax.random.PRNGKey(0), 8, 20)
         assert int(jnp.sum(Sr)) == 20
         assert bool(jnp.all(Sr >= 0))
+
+    @sweep(cases=20, seed=9)
+    def test_fixed_s_spends_exact_budget(self, draw):
+        n = draw.integers(1, 16)
+        C = draw.integers(1, 64)
+        S = np.asarray(fixed_s(n, C))
+        assert S.sum() == C, (n, C, S)
+        # deterministic remainder: first C % n servers get one extra
+        assert np.all(S[:C % n] == C // n + 1) \
+            and np.all(S[C % n:] == C // n), (n, C, S)
 
     def test_marginal_gain_is_decreasing(self):
         a = jnp.asarray([0.7])
