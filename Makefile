@@ -24,7 +24,15 @@ placement-check:
 lanes-check:
 	PYTHONPATH=src python -m pytest -x -q tests/test_lanes.py tests/test_scheduler.py
 
+# round-graph layer standalone: verify_bucket table properties, the
+# discard_tail/snapshot_alloc_flag deferred-rollback primitives, the
+# overlap-vs-sync state identity + golden-trace equivalence, and the
+# LatencyModel round decomposition / overlapped-round pins
+overlap-check:
+	PYTHONPATH=src python -m pytest -x -q tests/test_overlap.py tests/test_budget_latency.py
+
 bench:
 	PYTHONPATH=src python -m benchmarks.run
 
-.PHONY: test docs-check kernels-check placement-check lanes-check bench
+.PHONY: test docs-check kernels-check placement-check lanes-check \
+	overlap-check bench

@@ -40,6 +40,14 @@ every round.  Per lane count it records total accepted tokens
 p50/p95 queue wait, and Jain's index over per-server served tokens,
 merged into the ``lanes_heavy`` section of ``BENCH_serve.json``
 (read-modify-write: a single-scenario refresh keeps other baselines).
+
+The OVERLAP scenario (``--scenario overlap``, also part of the full run)
+serves the heavy burst with the synchronous composed round vs the
+four-phase async round graph (``GoodSpeedEngine(overlap=True)``) and
+records accepted tokens, simulated round time (overlap prices rounds as
+max(receive_t, verify_{t-1}) + send) and measured wall-clock per round
+into the ``overlap`` section; it also asserts the retrace telemetry —
+no round phase compiles more than once per verify bucket.
 """
 from __future__ import annotations
 
@@ -228,6 +236,69 @@ def heavy_scenario(draft, target, dp, tp):
     return rows, section
 
 
+def overlap_scenario(draft, target, dp, tp):
+    """(csv_rows, json_section): the round-graph overlap win on the heavy
+    burst — the same oversubscribed workload served with the synchronous
+    composed round vs the four-phase async pipeline
+    (``GoodSpeedEngine(overlap=True)``).  Both modes emit identical
+    accepted tokens (the deferred reconcile restores the exact
+    synchronous state, pinned by tests/test_overlap.py); what changes is
+    the ROUND PRICE: the simulated distributed round time collapses
+    receive+verify to max(receive_t, verify_{t-1})
+    (``LatencyModel.overlapped_round_time``), and the host pipeline
+    enqueues all four phase dispatches before syncing.  Records, per
+    mode: total accepted tokens, simulated round time (sum over the
+    horizon of the mode's own pricing), and measured wall-clock/round;
+    asserts overlap delivers >= the baseline's tokens at a strictly
+    lower simulated round time, and that no round-phase jit ever
+    retraced more than once for the engine's verify bucket
+    (``round_trace_counts``)."""
+    rows, section = [], {}
+    for overlap in (False, True):
+        tag = "overlap" if overlap else "sync"
+        eng = GoodSpeedEngine(draft_model=draft, target_model=target,
+                              n_servers=N, C=16, s_max=6, cache_len=256,
+                              paged_kv=True, kv_block_size=16,
+                              overlap=overlap)
+        t0 = time.perf_counter()
+        rep = eng.serve_requests(jax.random.PRNGKey(8), _heavy_workload(),
+                                 dp, tp, rounds=HEAVY_ROUNDS)
+        wall = time.perf_counter() - t0
+        s = rep["summary"]
+        # retrace telemetry: one compiled variant per phase per bucket
+        counts = eng.round_trace_counts()
+        assert all(c <= 1 for c in counts.values()), \
+            f"round phase retraced beyond its bucket: {counts}"
+        sim_sync = sum(float(h.wall[0]) for h in rep["rounds"])
+        sim = sum(float(h.wall_overlap) for h in rep["rounds"]) \
+            if overlap else sim_sync
+        total_tokens, _, _, p95 = _drain_metrics(rep)
+        rows.append((f"overlap_{tag}_total_accepted_tokens",
+                     round(wall * 1e6 / max(1, s["rounds_run"]), 0),
+                     total_tokens))
+        rows.append((f"overlap_{tag}_sim_round_time_ms", 0.0,
+                     round(sim * 1e3 / max(1, s["rounds_run"]), 3)))
+        section[tag] = {
+            "overlap": overlap,
+            "total_accepted_tokens": total_tokens,
+            "completed": s["completed"],
+            "of_requests": HEAVY_K,
+            "sim_round_time_ms": round(sim * 1e3 / max(1, s["rounds_run"]),
+                                       3),
+            "sim_total_time_s": round(sim, 4),
+            "round_latency_us": round(wall * 1e6 / max(1, s["rounds_run"]),
+                                      1),
+            "p95_queue_wait_rounds": round(p95, 1),
+            "rounds_run": s["rounds_run"],
+            "phase_trace_counts": counts,
+        }
+    assert section["overlap"]["total_accepted_tokens"] \
+        >= section["sync"]["total_accepted_tokens"], section
+    assert section["overlap"]["sim_total_time_s"] \
+        < section["sync"]["sim_total_time_s"], section
+    return rows, section
+
+
 def _merge_bench_json(update: dict) -> None:
     """Read-modify-write BENCH_serve.json so a single scenario run keeps
     the other sections' baselines."""
@@ -326,11 +397,14 @@ def run():
     rows.extend(skew_rows)
     heavy_rows, heavy_json = heavy_scenario(draft, target, dp, tp)
     rows.extend(heavy_rows)
+    ov_rows, ov_json = overlap_scenario(draft, target, dp, tp)
+    rows.extend(ov_rows)
     _merge_bench_json({
         "admission_cost_us": {name: us for name, us, _ in admit_rows},
         "serve": serve_json,
         "placement_skewed": skew_json,
         "lanes_heavy": heavy_json,
+        "overlap": ov_json,
         "paged_decode_microbench": {
             f"capacity_{cap}": r for cap, r in microbench.items()
         },
@@ -340,10 +414,12 @@ def run():
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--scenario", choices=("all", "skewed", "heavy"),
+    ap.add_argument("--scenario",
+                    choices=("all", "skewed", "heavy", "overlap"),
                     default="all",
                     help="'skewed' runs only the placement-policy sweep, "
-                    "'heavy' only the draft-lane sweep; each merges its "
+                    "'heavy' only the draft-lane sweep, 'overlap' only "
+                    "the round-graph overlap comparison; each merges its "
                     "section into BENCH_serve.json")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
@@ -353,6 +429,9 @@ def main(argv=None) -> None:
     elif args.scenario == "heavy":
         rows, section = heavy_scenario(*_models())
         _merge_bench_json({"lanes_heavy": section})
+    elif args.scenario == "overlap":
+        rows, section = overlap_scenario(*_models())
+        _merge_bench_json({"overlap": section})
     else:
         rows = run()
     for name, us, derived in rows:

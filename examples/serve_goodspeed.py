@@ -44,6 +44,11 @@ def main():
                     help="draft lanes: concurrent requests per draft "
                     "server (the serve_requests batch axis becomes "
                     "n_servers * lanes, server-major)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="async round graph: dispatch the next round's "
+                    "draft-ahead while the verify chunk is in flight "
+                    "(deferred reconcile discards the speculative tail; "
+                    "emitted tokens are identical to the sync engine)")
     args = ap.parse_args()
 
     vocab = 256
@@ -88,11 +93,13 @@ def main():
                           attn_backend=args.attn_backend,
                           paged_kv=args.paged_kv,
                           placement=args.placement,
-                          lanes=args.lanes)
+                          lanes=args.lanes,
+                          overlap=args.overlap)
     rep = eng.serve_requests(jax.random.PRNGKey(3), reqs, dp, tp,
                              rounds=8 * args.rounds)
     s = rep["summary"]
-    print(f"\nserve_requests[{args.placement}, lanes={args.lanes}]: "
+    print(f"\nserve_requests[{args.placement}, lanes={args.lanes}"
+          f"{', overlap' if args.overlap else ''}]: "
           f"{s['completed']}/{len(reqs)} requests in "
           f"{s['rounds_run']} rounds  tokens/round={s['tokens_per_round']:.2f}  "
           f"mean latency={s['mean_latency_rounds']:.1f} rounds  "

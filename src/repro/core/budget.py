@@ -36,6 +36,29 @@ class TpuSpec:
 
 V5E = TpuSpec()
 
+# Canonical jit-static verify-chunk widths (draft tokens per lane, i.e. the
+# engine's per-round chunk is ``bucket + 1`` tokens wide).  The round-graph
+# split compiles one draft scan / verify chunk / overlap draft-ahead per
+# bucket, so every engine snaps its speculative shapes to this table —
+# an ad-hoc s_max sweep then reuses a handful of compiled rounds instead
+# of retracing per value.  ``benchmarks/serve_requests.py`` asserts a
+# serving run never retraces a round phase more than once per bucket.
+VERIFY_BUCKETS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+
+
+def verify_bucket(s_max: int) -> int:
+    """Smallest canonical bucket >= s_max (s_max itself beyond the table).
+
+    The engine's REAL draft/verify shapes stay at its exact ``s_max`` (the
+    recorded equivalence traces pin them); the bucket bounds the shapes of
+    the speculative overlap draft-ahead and gives serve benchmarks a
+    registry to assert compile counts against."""
+    assert s_max >= 1, f"s_max must be >= 1, got {s_max}"
+    for b in VERIFY_BUCKETS:
+        if b >= s_max:
+            return b
+    return s_max
+
 
 def ridge_tokens(bytes_per_param: int = 2, spec: TpuSpec = V5E) -> int:
     """Tokens per forward pass at the roofline ridge point.

@@ -15,6 +15,15 @@ Assumption 3 of the paper takes decaying step sizes eta = O(1/t^a),
 beta = O(1/t^b) with 0.5 < a,b <= 1 and eta/beta -> 0; we support both the
 constant-step regime used in the experiments (beta = 0.5) and the decaying
 schedules used by the theory.
+
+Staleness contract (the overlap round graph relies on this): ``update``
+is a pure fold over per-round observations, so the engine may consume an
+EstimatorState one round LATE without touching this module — the
+overlapped draft-ahead for round t+1 plans its budgets from the state as
+of round t-1's update (round t's observations have not landed when the
+ahead dispatches), while the real round t+1 re-plans from the fully
+updated state.  Both reads see internally-consistent (alpha_hat, X^beta,
+t) snapshots; the EWMA itself is never forked or partially applied.
 """
 from __future__ import annotations
 

@@ -105,3 +105,18 @@ class LatencyModel:
         v = self.verify_time(S)
         s = self.send_time(num_emitted)
         return r + v + s, (r, v, s)
+
+    def overlapped_round_time(self, S: Array, prev_S: Array,
+                              num_emitted: Array, vocab: int, jitter: Array,
+                              lanes: int = 1):
+        """PEARL-style draft/verify overlap: round t's drafts (receive =
+        draft + per-server uplink, unchanged shape) are produced WHILE the
+        verify server is still scoring round t-1's chunk, so the steady-
+        state round time is max(receive_t, verify_{t-1}) + send instead of
+        their sum.  ``prev_S`` is the previous round's per-row allocation
+        (the chunk in flight during this round's drafting); the per-server
+        uplink sharing of ``receive_time`` is preserved verbatim."""
+        r = self.receive_time(S, vocab, jitter, lanes=lanes)
+        v = self.verify_time(prev_S)
+        s = self.send_time(num_emitted)
+        return jnp.maximum(r, v) + s, (r, v, s)

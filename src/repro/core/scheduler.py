@@ -213,6 +213,26 @@ def split_lanes(S: Array, lane_caps: Array, level_max: int) -> Array:
     return base + (elig & (rank < rem[:, None])).astype(jnp.int32)
 
 
+def plan_budgets(sched, alpha_hat: Array, weights: Array, C: int,
+                 lane_cap: Array, s_max: int, key: Array | None = None
+                 ) -> Array:
+    """One round's per-LANE draft budgets: GOODSPEED-SCHED at server
+    granularity (the paper's fairness unit) water-filled across each
+    server's live lanes.  ``lane_cap`` is i32[N, R] (remaining caps
+    already min'd with ``s_max``); returns i32[N*R] server-major.
+
+    Extracted from the engine's round step (0) so BOTH planning lanes of
+    the round graph share it: the synchronous/reconciled round plans from
+    the CURRENT estimator state, while overlap mode's draft-ahead plans
+    round t+1 from the state BEFORE round t's update (round t-1's
+    observations — the estimator update lands one round late relative to
+    the speculative dispatch; see serving.engine)."""
+    srv_cap = lane_cap.sum(axis=1)                    # i32[N]
+    S_srv = sched(alpha_hat, weights, C, key=key, s_max=srv_cap)
+    S_srv = jnp.where(srv_cap > 0, S_srv, 0)
+    return split_lanes(S_srv, lane_cap, s_max).reshape(-1)
+
+
 def make_scheduler(name: str):
     """Factory used by the serving engine; returns
     ``fn(alpha, weights, C, key=None, s_max=None) -> S``.

@@ -16,8 +16,23 @@ Round structure (paper Fig. 1):
   (5) estimators update (Eqs. 3-4);
   (6) accepted tokens commit; caches roll back past rejected drafts.
 
-The whole round is ONE jit-compiled function with the engine state donated,
-so the dynamic serving loop pays no per-round retrace or cache-copy cost.
+The round is an explicit ROUND GRAPH of pure phase functions —
+``_draft_phase`` (plan budgets + draft decode) -> ``_verify_phase``
+(ragged chunk + rejection sampling) -> ``_reconcile_phase``
+(commit/rollback + estimator + latency) — coordinated by a small
+pure-Python ``RoundPlan``.  With ``overlap=False`` (default) the phases
+compose inside ONE jit-compiled function with the engine state donated,
+so the dynamic serving loop pays no per-round retrace or cache-copy cost
+and emits byte-identical sequences to the historical monolithic round.
+With ``overlap=True`` the phases compile separately (donated caches) and
+the engine additionally dispatches a speculative DRAFT-AHEAD for round
+t+1 — continuing from the round-t draft tail over the post-draft cache
+buffer, budgeted from round t-1's estimator observations (the update
+lands one round late relative to the speculative dispatch) — before
+round t's verification is reconciled; the reconcile then applies a
+one-round-late ``kv_cache.discard_tail`` that provably restores the
+draft cache to the exact synchronous post-round state, so overlap
+changes WHEN work runs, never WHAT is accepted (tests/test_overlap.py).
 ``attn_backend="kernel"`` additionally routes every attention in the
 round — draft decode, the verify chunk, and the jit'd admission prefill —
 through the Pallas kernel packages (``repro.kernels``: flash_prefill /
@@ -65,17 +80,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.budget import verify_bucket
 from repro.core.estimator import EstimatorState, GoodputEstimator
 from repro.core.latency import LatencyModel
-from repro.core.scheduler import fixed_s, make_scheduler, split_lanes
+from repro.core.scheduler import fixed_s, make_scheduler, plan_budgets
 from repro.core.speculative import verify
 from repro.core.utility import UtilitySpec
 from repro.models import Model
 from repro.serving.kv_cache import (AttnCache, MLACache, PAGED_TYPES,
                                     PoolExhaustedError, blocks_for,
-                                    paged_merge_rows, paged_over_groups,
-                                    paged_reset_rows, paged_select_rows,
-                                    reset_rows, rollback)
+                                    discard_tail, paged_merge_rows,
+                                    paged_over_groups, paged_reset_rows,
+                                    paged_select_rows, reset_rows, rollback,
+                                    snapshot_alloc_flag)
 from repro.serving.placement import PlacementView, make_placement
 from repro.serving.request import Request, RequestManager
 
@@ -99,6 +116,35 @@ def _cache_rollback(cache, keep_pos: Array):
     def fix(c):
         if isinstance(c, _ROLLBACK_TYPES):
             return rollback(c, keep_pos)
+        return c
+    return jax.tree.map(fix, cache,
+                        is_leaf=lambda c: isinstance(c, _ROLLBACK_TYPES))
+
+
+def _stack_alloc_flag(cache) -> Array:
+    """Traced ``alloc_failed`` snapshot of a stack cache's (first) paged
+    leaf — the draft-tail snapshot the one-round-late discard restores
+    (``kv_cache.snapshot_alloc_flag``).  All paged leaves share one
+    allocator trajectory; False scalar for static caches (nothing
+    sticky to restore)."""
+    for leaf in jax.tree.leaves(
+            cache, is_leaf=lambda c: isinstance(c, PAGED_TYPES)):
+        if isinstance(leaf, PAGED_TYPES):
+            return snapshot_alloc_flag(leaf)
+    return jnp.zeros((), bool)
+
+
+def _cache_discard_tail(cache, keep_pos: Array, alloc_failed: Array):
+    """One-round-late rollback of the whole stack cache: every attention
+    leaf discards slots >= keep_pos (``kv_cache.discard_tail``) and paged
+    leaves additionally restore the pre-ahead ``alloc_failed`` snapshot —
+    a pool exhaustion caused only by discarded ahead-writes must not
+    poison the sticky health flag."""
+    def fix(c):
+        if isinstance(c, PAGED_TYPES):
+            return discard_tail(c, keep_pos, alloc_failed)
+        if isinstance(c, _ROLLBACK_TYPES):
+            return discard_tail(c, keep_pos)
         return c
     return jax.tree.map(fix, cache,
                         is_leaf=lambda c: isinstance(c, _ROLLBACK_TYPES))
@@ -152,6 +198,41 @@ def _merge_cache_rows(old, new, rows: Array):
             "rest": jax.tree.map(sel(0), old["rest"], new["rest"])}
 
 
+@dataclasses.dataclass(frozen=True)
+class RoundPlan:
+    """Pure-Python coordinator of one round of the round graph: the HOST
+    inputs every phase dispatch shares.  The per-lane budgets S and the
+    active mask derive from ``caps`` on device inside ``_draft_phase``
+    (via ``core.scheduler.plan_budgets``) so planning never forces a
+    host sync on the estimator state."""
+    caps: np.ndarray          # i32[N*R] per-lane remaining budgets (host)
+    s_bucket: int             # jit-static speculative chunk bucket
+    overlap: bool             # dispatch a round-(t+1) draft-ahead
+    admitted: tuple = ()      # rows re-prefilled just before this round
+
+
+class DraftOut(NamedTuple):
+    """Device outputs of ``draft_dispatch`` (phase 1 of the round graph)."""
+    toks: Array       # i32[N*R, s_max] drafted tokens
+    qlogits: Array    # f32[N*R, s_max, V] draft sampling distributions
+    S: Array          # i32[N*R] per-lane budgets (device-planned)
+    active: Array     # bool[N*R]
+    cache: object     # post-scan draft stack cache
+    k_verify: Array   # subkey for rejection sampling
+    k_jit: Array      # subkey for the latency jitter draw
+    key: Array        # next round's state key
+
+
+class VerifyOut(NamedTuple):
+    """Device outputs of ``verify_dispatch`` (phase 2 of the round graph)."""
+    cache: object       # post-chunk target stack cache
+    accepted: Array     # i32[N*R] m (idle rows masked to 0)
+    num_emitted: Array  # i32[N*R] m + 1 for active rows
+    extra_token: Array  # i32[N*R] residual/bonus token
+    emitted: Array      # i32[N*R, s_max+1], -1 padded
+    ratio_sum: Array    # f32[N*R] Eq.-3 accept-ratio sums
+
+
 class EngineState(NamedTuple):
     # sequences: committed tokens per lane row (host-side ragged
     # bookkeeping).  All row-indexed arrays are [N*R], server-major: row
@@ -174,6 +255,13 @@ class RoundStats(NamedTuple):
     utility: float
     wall: np.ndarray       # [total, receive, verify, send]
     emitted: np.ndarray    # [N*R, S_max+1] tokens, -1 padded
+    # overlapped-round simulated wall time: max(receive_t, verify_{t-1})
+    # + send (LatencyModel.overlapped_round_time).  == wall[0] when the
+    # engine runs synchronously (overlap=False).
+    wall_overlap: float = 0.0
+    # i32[N*R] speculative draft-ahead budgets dispatched for round t+1
+    # (zeros when overlap=False)
+    ahead_S: np.ndarray = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -219,6 +307,18 @@ class GoodSpeedEngine:
     # rejection sampling through the fused spec_verify gather-logprobs
     # kernel.  None inherits the target model's cfg.attn_backend.
     attn_backend: Optional[str] = None
+    # double-buffered draft/verify overlap (the round-graph payoff): each
+    # round additionally dispatches a speculative draft-ahead for round
+    # t+1 from the current draft tail while round t's verify chunk is in
+    # flight, and reconciliation lands one round late, discarding the
+    # ahead tail exactly (kv_cache.discard_tail) whenever verification
+    # rejects its root.  Accepted-token sequences are IDENTICAL to
+    # overlap=False; the win is the simulated overlapped round time
+    # (max(draft_{t+1}, verify_t) + send) plus host/device pipelining —
+    # all four phase dispatches enqueue before any host sync.  Requires
+    # slot-rollbackable (pure-attention) stacks for both models: a
+    # ring/recurrent draft state cannot undo the ahead writes.
+    overlap: bool = False
 
     def __post_init__(self):
         assert self.lanes >= 1, "lanes must be >= 1"
@@ -236,10 +336,34 @@ class GoodSpeedEngine:
             if model.cfg.attn_backend != backend:
                 object.__setattr__(self, name, Model(dataclasses.replace(
                     model.cfg, attn_backend=backend)))
-        # ONE compiled round: engine state is donated so caches update
-        # in place — the dynamic serve loop stays retrace-free.
+        # Speculative chunk shapes snap to the canonical bucket table
+        # (core.budget.VERIFY_BUCKETS); the REAL draft/verify shapes stay
+        # at the exact s_max (recorded equivalence traces pin them).
+        object.__setattr__(self, "s_bucket", verify_bucket(self.s_max))
+        if self.overlap:
+            assert _is_rollbackable(self.draft_model.cfg) and \
+                _is_rollbackable(self.target_model.cfg), \
+                ("overlap=True needs slot-rollbackable (pure-attention) "
+                 "stacks for both models: the one-round-late discard "
+                 "cannot undo ahead-writes into ring/recurrent state")
+        # overlap=False: the phases compose inside ONE compiled round with
+        # the engine state donated so caches update in place — the dynamic
+        # serve loop stays retrace-free and byte-identical to the
+        # historical monolithic round.
         object.__setattr__(self, "_round_fn",
                            jax.jit(self._round_core, donate_argnums=(0,)))
+        # overlap=True: separately compiled, donated-cache phase dispatches
+        # (draft -> verify -> draft-ahead -> deferred reconcile).  jax.jit
+        # is lazy, so these cost nothing unless the overlap path runs.
+        object.__setattr__(self, "_draft_fn",
+                           jax.jit(self._draft_phase, donate_argnums=(1,)))
+        object.__setattr__(self, "_verify_fn",
+                           jax.jit(self._verify_phase, donate_argnums=(1,)))
+        object.__setattr__(self, "_ahead_fn",
+                           jax.jit(self._ahead_phase, donate_argnums=(1,)))
+        object.__setattr__(self, "_reconcile_fn",
+                           jax.jit(self._reconcile_overlap,
+                                   donate_argnums=(2, 3)))
         # jit-compiled admission prefill per model, with the cache donated
         # so paged admission updates the shared pools in place instead of
         # copying them per admission.  Retraces per distinct
@@ -543,10 +667,13 @@ class GoodSpeedEngine:
             length=state.length.at[idx].set(pend_idx))
 
     # ------------------------------------------------------------------
-    def _draft(self, params, state: EngineState, key: Array, active: Array,
-               vmask: Optional[Array]):
-        """Step (1): each server decodes s_max tokens (rows with S_i < s_max
-        mask the tail).  Returns draft tokens, their q logits, updated cache.
+    def _draft(self, params, cache, pending: Array, length: Array,
+               key: Array, active: Array, vmask: Optional[Array],
+               steps: Optional[int] = None,
+               budgets: Optional[Array] = None):
+        """Step (1): each server decodes ``steps`` (default s_max) tokens
+        (rows with S_i < s_max mask the tail).  Returns draft tokens,
+        their q logits, updated cache.
 
         Idle rows (active[b] = False) are masked out of the cache writes:
         their draft tokens are discarded anyway, and under ``paged_kv`` an
@@ -554,8 +681,15 @@ class GoodSpeedEngine:
         need.
 
         vmask: the pad-vocab mask from ``_vocab_mask``, built ONCE per
-        round and closed over here — not rebuilt in every scan step."""
-        s_cap = self.s_max
+        round and closed over here — not rebuilt in every scan step.
+
+        budgets: optional i32[N*R] per-row write budget — the speculative
+        draft-ahead masks cache writes past its planned S so the
+        one-round-late discard has less tail to free.  None (the real
+        draft) keeps the historical behaviour: every active row writes
+        all ``steps`` tokens and rollback cleans past the accepted
+        prefix."""
+        s_cap = self.s_max if steps is None else steps
         # draft_temps are per SERVER (hardware heterogeneity); each of a
         # server's lanes samples at its server's temperature
         temps = jnp.repeat(jnp.asarray(
@@ -565,9 +699,10 @@ class GoodSpeedEngine:
         def dec(carry, t):
             cache, tok, pos, key = carry
             key, k_s = jax.random.split(key)
+            valid = active if budgets is None else active & (t < budgets)
             out = self.draft_model.forward(
                 params, tok[:, None], mode="decode", cache=cache,
-                positions=pos[:, None], chunk_valid=active[:, None])
+                positions=pos[:, None], chunk_valid=valid[:, None])
             logits = out.logits[:, 0, :]  # [N, Vp]
             if vmask is not None:
                 logits = logits + vmask
@@ -579,8 +714,7 @@ class GoodSpeedEngine:
                 (nxt.astype(jnp.int32), logits)
 
         (cache, _, _, _), (toks, qlogits) = jax.lax.scan(
-            dec, (state.draft_cache, state.pending, state.length, key),
-            jnp.arange(s_cap))
+            dec, (cache, pending, length, key), jnp.arange(s_cap))
         # scan stacks time-first: [S, N] -> [N, S]
         return toks.swapaxes(0, 1), qlogits.swapaxes(0, 1), cache
 
@@ -596,88 +730,170 @@ class GoodSpeedEngine:
                                 jnp.full((pad,), -1e30)])
 
     # ------------------------------------------------------------------
-    def _verify_chunk(self, params, state: EngineState, draft_toks: Array,
-                      S: Array, active: Array, vmask: Optional[Array]):
+    def _verify_chunk(self, params, tcache, pending: Array, length: Array,
+                      draft_toks: Array, S: Array, active: Array,
+                      vmask: Optional[Array]):
         """Step (4a): target scores [pending, d_1..d_{S-1}, d_S] in one
         decode-chunk; output j is the distribution of chunk position j+1.
         Inactive (idle-lane) rows are masked out of the chunk entirely —
         their caches see no writes and they commit nothing."""
         n, s_cap = self.n_rows, self.s_max
-        chunk = jnp.concatenate([state.pending[:, None], draft_toks], axis=1)
+        chunk = jnp.concatenate([pending[:, None], draft_toks], axis=1)
         in_draft = jnp.arange(s_cap)[None, :] < S[:, None]
         chunk_valid = active[:, None] & jnp.concatenate(
             [jnp.ones((n, 1), bool), in_draft], axis=1)
-        positions = state.length[:, None] + jnp.cumsum(
+        positions = length[:, None] + jnp.cumsum(
             chunk_valid.astype(jnp.int32), axis=1) - 1
         out = self.target_model.forward(
-            params, chunk, mode="decode", cache=state.target_cache,
+            params, chunk, mode="decode", cache=tcache,
             positions=positions, chunk_valid=chunk_valid)
         p_logits = out.logits if vmask is None else out.logits + vmask
         return p_logits, out.cache, in_draft
 
     # ------------------------------------------------------------------
-    def _round_core(self, state: EngineState, draft_params, target_params,
-                    caps: Array):
-        """One full Algorithm-1 round (jit'd, state donated).
+    def _draft_phase(self, draft_params, dcache, pending: Array,
+                     length: Array, est: EstimatorState, key: Array,
+                     caps: Array) -> DraftOut:
+        """``draft_dispatch``: round-graph phase 1 — split the round key,
+        plan the per-lane budgets ON DEVICE from the estimator state
+        (step 0: GOODSPEED-SCHED at server granularity, water-filled over
+        lanes by ``core.scheduler.plan_budgets``), and run the draft
+        decode scan.
 
         caps: i32[N*R] per-LANE remaining-token budget (server-major).
         cap == 0 marks an IDLE lane: it gets S = 0 from the splitter, is
         masked out of the verify chunk and commits nothing.  A server
         whose lanes are all idle gets S_i = 0 from the scheduler (inside
         the solver, so the budget flows to live servers) and its
-        estimator state holds.
-        """
-        key, k_draft, k_verify, k_sched, k_jit = jax.random.split(state.key, 5)
-        cfg_t = self.target_model.cfg
+        estimator state holds."""
+        key, k_draft, k_verify, k_sched, k_jit = jax.random.split(key, 5)
         n, lanes = self.n_servers, self.lanes
-
-        # ---- step (0): completion-aware scheduling -----------------------
-        # GOODSPEED-SCHED solves at SERVER granularity (the paper's
-        # fairness unit): each server's cap is the sum of its lanes'
-        # per-round draft capacity, and the per-server allocation is then
-        # water-filled across the live lanes (core.scheduler.split_lanes).
         active = caps > 0
         lane_cap = jnp.minimum(caps, self.s_max)          # i32[N*R]
-        srv_cap = lane_cap.reshape(n, lanes).sum(axis=1)  # i32[N]
-        w = self.utility.grad(state.est.goodput)
-        S_srv = self._sched(state.est.alpha_hat, w, self.C,
-                            key=k_sched, s_max=srv_cap)
-        S_srv = jnp.where(srv_cap > 0, S_srv, 0)
-        S = split_lanes(S_srv, lane_cap.reshape(n, lanes),
-                        self.s_max).reshape(-1)           # i32[N*R]
+        w = self.utility.grad(est.goodput)
+        S = plan_budgets(self._sched, est.alpha_hat, w, self.C,
+                         lane_cap.reshape(n, lanes), self.s_max,
+                         key=k_sched)                     # i32[N*R]
         S = jnp.where(active, S, 0)
-
-        # pad-vocab masks built once per round (closed over by the draft
+        # pad-vocab mask built once per round (closed over by the draft
         # scan body instead of rebuilt per token)
         vmask_d = self._vocab_mask(self.draft_model.cfg)
-        vmask_t = self._vocab_mask(self.target_model.cfg)
-        draft_toks, q_logits, draft_cache = self._draft(
-            draft_params, state, k_draft, active, vmask_d)
-        p_logits, target_cache, in_draft = self._verify_chunk(
-            target_params, state, draft_toks, S, active, vmask_t)
+        draft_toks, q_logits, cache = self._draft(
+            draft_params, dcache, pending, length, k_draft, active, vmask_d)
+        return DraftOut(toks=draft_toks, qlogits=q_logits, S=S,
+                        active=active, cache=cache, k_verify=k_verify,
+                        k_jit=k_jit, key=key)
 
-        res = verify(k_verify, draft_toks, q_logits, p_logits, S,
+    def _verify_phase(self, target_params, tcache, pending: Array,
+                      length: Array, toks: Array, qlogits: Array, S: Array,
+                      active: Array, k_verify: Array) -> VerifyOut:
+        """``verify_dispatch``: round-graph phase 2 — score the ragged
+        [pending, d_1..d_S] chunk in one target decode-chunk forward and
+        run lossless rejection sampling (core.speculative.verify)."""
+        vmask_t = self._vocab_mask(self.target_model.cfg)
+        p_logits, cache, _ = self._verify_chunk(
+            target_params, tcache, pending, length, toks, S, active, vmask_t)
+        res = verify(k_verify, toks, qlogits, p_logits, S,
                      backend=self.attn_backend)
         m = jnp.where(active, res.accepted, 0)
         num_emitted = jnp.where(active, res.num_emitted, 0)
+        return VerifyOut(
+            cache=cache, accepted=m, num_emitted=num_emitted,
+            extra_token=res.extra_token,
+            emitted=jnp.where(active[:, None], res.emitted, -1),
+            ratio_sum=jnp.where(active, res.accept_ratio_sum, 0.0))
+
+    def _ahead_phase(self, draft_params, dcache, toks: Array, S: Array,
+                     active: Array, length: Array, est: EstimatorState,
+                     caps: Array, key: Array):
+        """Speculative draft-ahead for round t+1 (overlap mode only):
+        continue drafting from each lane's round-t draft tail (root
+        token d_S at position length+S) over the post-draft cache buffer
+        while round t's verify chunk is conceptually in flight —
+        speculative-on-speculative.  Budgets come from ROUND t-1's
+        observations: ``est`` is the state BEFORE round t's update (the
+        estimator update lands one round late relative to this dispatch)
+        and ``caps`` are round t's remaining caps.  The tail is ALWAYS
+        discarded exactly at reconcile (the true round t+1 re-drafts from
+        the committed state — a rejected root invalidates the
+        continuation, and even on full acceptance the bonus token is only
+        sampled inside verify), so the ahead can never change what is
+        accepted; its value is the modeled distributed-timing win
+        (LatencyModel.overlapped_round_time) and keeping the device busy
+        while the host reconciles.  Returns (polluted cache, ahead
+        budgets, pre-ahead alloc_failed snapshot)."""
+        # mirror the NEXT round's key split so the ahead consumes the
+        # same draft/sched streams the real round t+1 will draw
+        _, k_draft, _, k_sched, _ = jax.random.split(key, 5)
+        n, lanes = self.n_servers, self.lanes
+        live = active & (S > 0)
+        lane_cap = jnp.minimum(caps, self.s_max)
+        w = self.utility.grad(est.goodput)
+        S_ahead = plan_budgets(self._sched, est.alpha_hat, w, self.C,
+                               lane_cap.reshape(n, lanes), self.s_max,
+                               key=k_sched)
+        S_ahead = jnp.where(live, jnp.minimum(S_ahead, self.s_bucket), 0)
+        # draft-tail snapshot: the sticky pool flag the deferred discard
+        # restores (ahead-writes may exhaust a pool the real round won't)
+        flag = _stack_alloc_flag(dcache)
+        root = jnp.take_along_axis(
+            toks, jnp.maximum(S - 1, 0)[:, None], axis=1)[:, 0]
+        vmask_d = self._vocab_mask(self.draft_model.cfg)
+        _, _, cache = self._draft(
+            draft_params, dcache, jnp.where(live, root, 0), length + S,
+            k_draft, live, vmask_d, steps=self.s_bucket, budgets=S_ahead)
+        return cache, S_ahead, flag
+
+    def _reconcile_phase(self, draft_params, target_params, dcache, tcache,
+                         dcache_ckpt, tcache_ckpt, est: EstimatorState,
+                         pending: Array, length: Array, prev_S: Array,
+                         toks: Array, S: Array, active: Array, v: VerifyOut,
+                         k_jit: Array, key: Array, deferred: bool,
+                         saved_flag: Optional[Array] = None):
+        """``reconcile``: round-graph phase 3 — apply acceptance/rollback
+        to both caches, update the estimators (Eqs. 3-4), price the round
+        (LatencyModel) and assemble the next EngineState.
+
+        deferred=False (synchronous round): plain rollback to the
+        committed boundary; ``*_ckpt`` are the pre-chunk checkpoints the
+        recompute strategy needs for non-rollbackable stacks.
+
+        deferred=True (overlap): the draft cache arrives POLLUTED by the
+        round-(t+1) draft-ahead, whose writes start at counter
+        length + s_max (the real draft writes all s_max steps for active
+        rows; rollback has always cleaned past the accepted prefix).
+        ``keep = length + min(m+1, s_max)`` therefore restores the
+        bit-exact synchronous post-round state: for m <= S < s_max it
+        equals the sync boundary, and at full acceptance (m = S = s_max)
+        it additionally drops the ahead-root's write at counter
+        length+s_max — a slot the synchronous round never wrote.  Paged
+        free-lists restore exactly too (the allocator is a deterministic
+        first-free mask), with the sticky alloc_failed flag reset to the
+        pre-ahead snapshot (``kv_cache.discard_tail``)."""
+        cfg_t = self.target_model.cfg
+        n, lanes = self.n_servers, self.lanes
+        m, num_emitted = v.accepted, v.num_emitted
         realized = num_emitted.astype(jnp.float32)
 
         # ---- commit / rollback -------------------------------------------
-        new_length = state.length + num_emitted       # m+1 tokens if active
-        keep_pos = new_length                         # cache keeps < keep (pending excl.)
-        m_eff = jnp.where(active, m, -1)              # -1: recompute holds the row
+        new_length = length + num_emitted             # m+1 tokens if active
+        keep_pos = new_length                         # cache keeps < keep
+        m_eff = jnp.where(active, m, -1)              # -1: recompute holds
         if _is_rollbackable(cfg_t):
-            target_cache = _cache_rollback(target_cache, keep_pos)
+            tcache = _cache_rollback(tcache, keep_pos)
         else:
-            target_cache = self._recompute_cache(
-                self.target_model, target_params, state.target_cache,
-                state.pending, draft_toks, m_eff, state.length)
-        if _is_rollbackable(self.draft_model.cfg):
-            draft_cache = _cache_rollback(draft_cache, keep_pos)
+            tcache = self._recompute_cache(
+                self.target_model, target_params, tcache_ckpt,
+                pending, toks, m_eff, length)
+        if deferred:
+            draft_keep = length + jnp.minimum(num_emitted, self.s_max)
+            dcache = _cache_discard_tail(dcache, draft_keep, saved_flag)
+        elif _is_rollbackable(self.draft_model.cfg):
+            dcache = _cache_rollback(dcache, keep_pos)
         else:
-            draft_cache = self._recompute_cache(
-                self.draft_model, draft_params, state.draft_cache,
-                state.pending, draft_toks, m_eff, state.length)
+            dcache = self._recompute_cache(
+                self.draft_model, draft_params, dcache_ckpt,
+                pending, toks, m_eff, length)
 
         # ---- estimator update (step 5): per-SERVER aggregation over the
         # server's lanes (Eq. 3 divides the summed accept ratios by the
@@ -685,10 +901,9 @@ class GoodSpeedEngine:
         # emitted tokens).  Unobserved servers (no lane drafted: S_i = 0)
         # hold BOTH estimates inside the estimator — an idle server must
         # not have its fairness weight dragged by rounds it never saw.
-        ratio = jnp.where(active, res.accept_ratio_sum, 0.0)
         est = self.estimator.update(
-            state.est,
-            ratio.reshape(n, lanes).sum(axis=1),
+            est,
+            v.ratio_sum.reshape(n, lanes).sum(axis=1),
             S.reshape(n, lanes).sum(axis=1),
             realized.reshape(n, lanes).sum(axis=1))
 
@@ -700,35 +915,118 @@ class GoodSpeedEngine:
                                     minval=-1.0, maxval=1.0)
         total, (rt, vt, st) = self.latency.round_time(
             S, num_emitted, cfg_t.vocab_size, jitter, lanes=lanes)
+        if deferred:
+            # overlapped pipeline: round t's drafts were produced while
+            # round t-1's chunk (prev_S) was still being verified
+            total_ov, _ = self.latency.overlapped_round_time(
+                S, prev_S, num_emitted, cfg_t.vocab_size, jitter,
+                lanes=lanes)
+        else:
+            total_ov = total
 
-        pending = jnp.where(active, res.extra_token, state.pending)
-        emitted = jnp.where(active[:, None], res.emitted, -1)
+        pending = jnp.where(active, v.extra_token, pending)
         new_state = EngineState(
-            target_cache=target_cache, draft_cache=draft_cache,
+            target_cache=tcache, draft_cache=dcache,
             pending=pending, length=new_length, est=est, S=S, key=key)
         stats = (S, m, realized, est.alpha_hat, est.goodput,
                  self.utility.value(est.goodput),
-                 jnp.stack([total, rt, vt, st]), emitted)
+                 jnp.stack([total, rt, vt, st]), v.emitted, total_ov)
         return new_state, stats
 
-    def run_round(self, state: EngineState, draft_params, target_params,
-                  caps: Optional[np.ndarray] = None
-                  ) -> tuple[EngineState, RoundStats]:
-        """One round.  caps (i32[N*R], per lane) defaults to "every lane
-        live at full s_max" (the fixed-round simulator behaviour).  NOTE:
-        ``state`` is donated to the compiled round — use the returned
-        state, not the argument."""
+    def _reconcile_overlap(self, draft_params, target_params, dcache,
+                           tcache, est, pending, length, prev_S, toks, S,
+                           active, v, k_jit, key, saved_flag):
+        """jit entry for the overlap reconcile (donated polluted caches;
+        rollbackable stacks asserted at construction, so no checkpoints)."""
+        return self._reconcile_phase(
+            draft_params, target_params, dcache, tcache, None, None, est,
+            pending, length, prev_S, toks, S, active, v, k_jit, key,
+            deferred=True, saved_flag=saved_flag)
+
+    def _round_core(self, state: EngineState, draft_params, target_params,
+                    caps: Array):
+        """One full Algorithm-1 round (jit'd, state donated): the round
+        graph composed synchronously — plan/draft -> verify -> reconcile
+        inside one compiled graph, byte-identical to the historical
+        monolithic round."""
+        d = self._draft_phase(draft_params, state.draft_cache,
+                              state.pending, state.length, state.est,
+                              state.key, caps)
+        v = self._verify_phase(target_params, state.target_cache,
+                               state.pending, state.length, d.toks,
+                               d.qlogits, d.S, d.active, d.k_verify)
+        return self._reconcile_phase(
+            draft_params, target_params, d.cache, v.cache,
+            state.draft_cache, state.target_cache, state.est,
+            state.pending, state.length, state.S, d.toks, d.S, d.active,
+            v, d.k_jit, d.key, deferred=False)
+
+    # ------------------------------------------------------------------
+    def plan_round(self, caps: Optional[np.ndarray] = None,
+                   admitted: tuple = ()) -> RoundPlan:
+        """Build the host-side coordinator of the next round.  caps
+        (i32[N*R], per lane) defaults to "every lane live at full s_max"
+        (the fixed-round simulator behaviour)."""
         if caps is None:
             caps = np.full((self.n_rows,), self.s_max, np.int32)
-        new_state, raw = self._round_fn(
-            state, draft_params, target_params, jnp.asarray(caps, jnp.int32))
-        S, m, realized, alpha_hat, goodput, util, wall, emitted = raw
+        return RoundPlan(caps=np.asarray(caps, np.int32),
+                         s_bucket=self.s_bucket, overlap=self.overlap,
+                         admitted=tuple(admitted))
+
+    def run_round(self, state: EngineState, draft_params, target_params,
+                  caps: Optional[np.ndarray] = None,
+                  plan: Optional[RoundPlan] = None
+                  ) -> tuple[EngineState, RoundStats]:
+        """One round of the round graph.  NOTE: ``state`` is donated to
+        the compiled phases — use the returned state, not the argument.
+
+        overlap=False: one composed dispatch (plan -> draft -> verify ->
+        reconcile in a single jit).  overlap=True: four phase dispatches
+        enqueue back-to-back with NO host sync in between — verify_t and
+        the round-(t+1) draft-ahead are in flight together, and the
+        deferred reconcile (one round late from the ahead's perspective)
+        discards the ahead tail exactly; the host only blocks when it
+        reads the round's stats."""
+        if plan is None:
+            plan = self.plan_round(caps)
+        caps_j = jnp.asarray(plan.caps, jnp.int32)
+        if not plan.overlap:
+            new_state, raw = self._round_fn(
+                state, draft_params, target_params, caps_j)
+            ahead_S = np.zeros((self.n_rows,), np.int32)
+        else:
+            d = self._draft_fn(draft_params, state.draft_cache,
+                               state.pending, state.length, state.est,
+                               state.key, caps_j)
+            v = self._verify_fn(target_params, state.target_cache,
+                                state.pending, state.length, d.toks,
+                                d.qlogits, d.S, d.active, d.k_verify)
+            ahead_cache, ahead_S_j, flag = self._ahead_fn(
+                draft_params, d.cache, d.toks, d.S, d.active,
+                state.length, state.est, caps_j, d.key)
+            new_state, raw = self._reconcile_fn(
+                draft_params, target_params, ahead_cache, v.cache,
+                state.est, state.pending, state.length, state.S, d.toks,
+                d.S, d.active, v, d.k_jit, d.key, flag)
+            ahead_S = np.asarray(ahead_S_j)
+        S, m, realized, alpha_hat, goodput, util, wall, emitted, ov = raw
         stats = RoundStats(
             S=np.asarray(S), accepted=np.asarray(m),
             realized=np.asarray(realized), alpha_hat=np.asarray(alpha_hat),
             goodput_est=np.asarray(goodput), utility=float(util),
-            wall=np.asarray(wall), emitted=np.asarray(emitted))
+            wall=np.asarray(wall), emitted=np.asarray(emitted),
+            wall_overlap=float(ov), ahead_S=ahead_S)
         return new_state, stats
+
+    def round_trace_counts(self) -> dict:
+        """Compiled-variant count per round-phase jit — the retrace
+        telemetry ``benchmarks/serve_requests.py`` asserts against (a
+        serving run must never retrace a phase more than once per
+        engine bucket shape)."""
+        fns = {"round": self._round_fn} if not self.overlap else {
+            "draft": self._draft_fn, "verify": self._verify_fn,
+            "ahead": self._ahead_fn, "reconcile": self._reconcile_fn}
+        return {name: f._cache_size() for name, f in fns.items()}
 
     # ------------------------------------------------------------------
     def _recompute_cache(self, model: Model, params, checkpoint_cache,

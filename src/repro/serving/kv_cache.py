@@ -468,6 +468,44 @@ def rollback(cache, keep_pos: Array):
                           next_pos=jnp.minimum(cache.next_pos, keep_pos))
 
 
+def snapshot_alloc_flag(cache) -> Array | None:
+    """Draft-tail snapshot for one-round-late rollback: the sticky
+    ``alloc_failed`` flag BEFORE a speculative draft-ahead writes its
+    tail.  Everything else the ahead-chunk touches is restored exactly by
+    ``discard_tail`` (slot invalidation + tail-block free), but a pool
+    allocation that failed only because of discarded ahead-writes must
+    not poison the sticky flag — so the engine snapshots it at dispatch
+    and ``discard_tail`` writes it back.  Returns a traced bool scalar
+    (group 0 of stacked leaves; all groups share one allocator
+    trajectory), or None for non-paged caches (nothing sticky to
+    restore)."""
+    if isinstance(cache, PAGED_TYPES):
+        return cache.alloc_failed[0] if cache.next_pos.ndim == 2 \
+            else cache.alloc_failed
+    return None
+
+
+def discard_tail(cache, keep_pos: Array, alloc_failed: Array | None = None):
+    """One-round-late rollback of a speculative draft-ahead (overlap
+    mode): identical to ``rollback`` — the ahead-tail's slots invalidate
+    and its paged blocks return to the pool — except the sticky
+    ``alloc_failed`` flag is restored to its pre-ahead snapshot
+    (``snapshot_alloc_flag``).  With ``keep_pos = length +
+    min(accepted+1, S)`` this lands the cache bit-exactly on the state a
+    synchronous round would have produced: the deferred discard differs
+    from the sync rollback only when the whole chunk was accepted, where
+    it additionally drops the ahead-root's write at position length+S —
+    a slot the synchronous round never wrote."""
+    if isinstance(cache, PAGED_TYPES):
+        def f(c):
+            r = paged_rollback(c, keep_pos)
+            if alloc_failed is not None:
+                r = r._replace(alloc_failed=alloc_failed)
+            return r
+        return paged_over_groups(f, cache)
+    return rollback(cache, keep_pos)
+
+
 def reset_rows(cache, rows: Array):
     """Invalidate ALL slots of the selected rows (bool[B]) — used when a
     fresh request is admitted into a draft-server slot.  Stale K/V values

@@ -65,3 +65,64 @@ class TestLatency:
         total, (r, v, s) = self.lm.round_time(self.S, self.S + 1, 32000,
                                               self.jit)
         assert float(s) / float(total) < 0.001
+
+    def test_round_decomposition_pins(self):
+        """Pin the synchronous per-round latency law: the round is the
+        straight-line SUM receive + verify + send of the components the
+        model exposes (the round-graph reconcile prices rounds with
+        exactly this decomposition)."""
+        total, (r, v, s) = self.lm.round_time(self.S, self.S + 1, 32000,
+                                              self.jit)
+        assert float(total) == pytest.approx(float(r) + float(v) + float(s),
+                                             rel=1e-6)
+        assert float(r) == pytest.approx(
+            float(self.lm.receive_time(self.S, 32000, self.jit)), rel=1e-6)
+        assert float(v) == pytest.approx(
+            float(self.lm.verify_time(self.S)), rel=1e-6)
+        assert float(s) == pytest.approx(
+            float(self.lm.send_time(self.S + 1)), rel=1e-6)
+
+    def test_lane_rows_share_server_uplink(self):
+        """Two lanes on one server pay ONE uplink (payloads sum before
+        the transfer-time division) and draft in one batched forward
+        (draft time = slowest lane) — versus two single-lane servers
+        whose transfers overlap (receive = max of the two)."""
+        S = jnp.asarray([3, 3])
+        shared = float(self.lm.receive_time(S, 32000, jnp.zeros(2),
+                                            lanes=2))
+        separate = float(self.lm.receive_time(S, 32000, jnp.zeros(2),
+                                              lanes=1))
+        draft = float(self.lm.draft_time(jnp.asarray([3]), jnp.zeros(1))[0])
+        pay = float(self.lm.uplink_payload(jnp.asarray([3]), 32000)[0])
+        assert shared == pytest.approx(
+            draft + 2 * pay / self.lm.uplink_bytes_s + self.lm.rtt_s,
+            rel=1e-6)
+        assert separate == pytest.approx(
+            draft + pay / self.lm.uplink_bytes_s + self.lm.rtt_s, rel=1e-6)
+        assert shared > separate
+
+    def test_overlapped_round_is_max_not_sum(self):
+        """PEARL-style overlap: steady-state round time collapses the
+        receive/verify SUM to their MAX (drafts for round t are produced
+        while round t-1's chunk is in flight); send is still serial."""
+        prev_S = jnp.asarray([6, 4, 2, 1])
+        ov, (r, v, s) = self.lm.overlapped_round_time(
+            self.S, prev_S, self.S + 1, 32000, self.jit)
+        assert float(ov) == pytest.approx(
+            max(float(r), float(v)) + float(s), rel=1e-6)
+        assert float(r) == pytest.approx(
+            float(self.lm.receive_time(self.S, 32000, self.jit)), rel=1e-6)
+        # verify prices the PREVIOUS round's chunk, not this round's
+        assert float(v) == pytest.approx(
+            float(self.lm.verify_time(prev_S)), rel=1e-6)
+        # overlap never exceeds the synchronous sum of the same parts
+        assert float(ov) <= float(r) + float(v) + float(s) + 1e-9
+
+    def test_overlapped_degenerate_prev_zero(self):
+        """First round of a serve (nothing in flight): verify(prev_S=0)
+        is the weight-streaming floor, so overlap still beats the sum."""
+        zeros = jnp.zeros((4,), jnp.int32)
+        ov, (r, v, s) = self.lm.overlapped_round_time(
+            self.S, zeros, self.S + 1, 32000, self.jit)
+        sync, _ = self.lm.round_time(self.S, self.S + 1, 32000, self.jit)
+        assert float(ov) <= float(sync)

@@ -1,0 +1,364 @@
+"""Round-graph overlap tests (ISSUE 6): async draft/verify pipelining.
+
+Covers the three layers of the round-graph refactor:
+
+  * ``core.budget.verify_bucket`` — the canonical jit-static chunk-width
+    table (monotone cover, identity beyond the table);
+  * ``serving.kv_cache.discard_tail`` / ``snapshot_alloc_flag`` — the
+    draft-tail discard primitive the deferred reconcile uses: dropping
+    ahead-writes restores the exact synchronous rollback state (static
+    and paged, including the sticky ``alloc_failed`` flag snapshot);
+  * ``serving.engine.GoodSpeedEngine(overlap=True)`` — the four-phase
+    dispatch pipeline (draft -> verify -> draft-ahead -> deferred
+    reconcile) lands the IDENTICAL post-round engine state as the
+    synchronous composed round, round by round: the ahead tail is
+    discarded one round late whenever verification rejects its root
+    (and even when it doesn't — the bonus token is only sampled inside
+    verify), accepted-token sequences on the ACCEPTANCE mixed trace
+    match the recorded golden across paged x static x jnp x kernel,
+    and committed caches stay equal to a fresh prefill.
+
+``make overlap-check`` runs this module standalone.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import conftest
+from repro.core.budget import VERIFY_BUCKETS, verify_bucket
+from repro.serving.engine import GoodSpeedEngine
+from repro.serving.kv_cache import (AttnCache, PagedAttnCache,
+                                    discard_tail, init_attn_cache,
+                                    init_paged_attn_cache, rollback,
+                                    snapshot_alloc_flag, write_chunk)
+
+GOLDEN = conftest.__file__.replace("conftest.py",
+                                   "tests/data/mixed_trace_golden.json")
+
+
+# ---------------------------------------------------------------------------
+# verify_bucket
+# ---------------------------------------------------------------------------
+
+class TestVerifyBucket:
+    def test_table_sorted_unique(self):
+        assert list(VERIFY_BUCKETS) == sorted(set(VERIFY_BUCKETS))
+
+    def test_covers_and_monotone(self):
+        prev = 0
+        for s in range(1, 80):
+            b = verify_bucket(s)
+            assert b >= s
+            assert b >= prev          # non-decreasing in s_max
+            prev = b
+
+    def test_table_values_map_to_themselves(self):
+        for b in VERIFY_BUCKETS:
+            assert verify_bucket(b) == b
+
+    def test_identity_beyond_table(self):
+        assert verify_bucket(max(VERIFY_BUCKETS) + 7) \
+            == max(VERIFY_BUCKETS) + 7
+
+
+# ---------------------------------------------------------------------------
+# kv_cache: discard_tail == synchronous rollback state
+# ---------------------------------------------------------------------------
+
+def _write_tokens(cache, start, count, base=1.0):
+    """Append a ``count``-token chunk per row (the cache's own ``next_pos``
+    counter places it — ``start`` documents the expected position of the
+    first write; deterministic values so buffers are comparable)."""
+    b = cache.next_pos.shape[0]
+    kv, hd = (cache.k.shape[2:] if isinstance(cache, AttnCache)
+              else cache.kpool.shape[2:])
+    assert int(cache.next_pos.max()) == start
+    chunk = (base + jnp.arange(count, dtype=jnp.float32))[None, :, None,
+                                                          None]
+    val = jnp.broadcast_to(chunk, (b, count, kv, hd))
+    return write_chunk(cache, (val, val), jnp.ones((b, count), bool))
+
+
+class TestDiscardTail:
+    """The deferred reconcile's contract: committed prefix + real draft
+    chunk + ahead-writes, then ``discard_tail(keep)`` must equal the
+    cache that never drafted ahead and rolled back synchronously."""
+
+    def _check_equal_static(self, got, want):
+        m = np.asarray(want.pos_arr) >= 0
+        np.testing.assert_array_equal(np.asarray(got.pos_arr),
+                                      np.asarray(want.pos_arr))
+        np.testing.assert_array_equal(np.asarray(got.next_pos),
+                                      np.asarray(want.next_pos))
+        for f in ("k", "v"):
+            a = np.where(m[..., None, None], np.asarray(getattr(got, f)), 0)
+            b = np.where(m[..., None, None], np.asarray(getattr(want, f)), 0)
+            np.testing.assert_array_equal(a, b)
+
+    def test_static_matches_sync_rollback(self):
+        cache = init_attn_cache(2, 32, 1, 4, jnp.float32)
+        cache = _write_tokens(cache, 0, 6)          # committed prefix
+        cache = _write_tokens(cache, 6, 4, 10.0)    # real draft chunk
+        keep = jnp.asarray([8, 7], jnp.int32)       # accept 2 / 1 tokens
+        want = rollback(cache, keep)
+        ahead = _write_tokens(cache, 10, 3, 99.0)   # overlap draft-ahead
+        got = discard_tail(ahead, keep)
+        self._check_equal_static(got, want)
+
+    def test_static_full_accept_drops_ahead_root(self):
+        """m == S == s_max: keep equals the post-draft counter, so the
+        sync rollback is a no-op past the chunk — but the ahead root
+        wrote AT the counter and must still be dropped."""
+        cache = _write_tokens(init_attn_cache(1, 32, 1, 4, jnp.float32),
+                              0, 10)
+        keep = jnp.asarray([10], jnp.int32)
+        want = rollback(cache, keep)
+        ahead = _write_tokens(cache, 10, 2, 99.0)
+        got = discard_tail(ahead, keep)
+        self._check_equal_static(got, want)
+        assert int(got.pos_arr[0, 10]) == -1
+
+    def _paged_view(self, c):
+        """Gather the logical per-row view of a paged cache (valid slots
+        only) + the allocator state — the full comparable surface."""
+        table, pos = np.asarray(c.table), np.asarray(c.pos_arr)
+        bs = c.kpool.shape[1]
+        bsz, slots = pos.shape
+        out = np.zeros((bsz, slots) + c.kpool.shape[2:], np.float32)
+        for b in range(bsz):
+            for l in range(slots):
+                blk = table[b, l // bs]
+                if pos[b, l] >= 0 and blk >= 0:
+                    out[b, l] = np.asarray(c.kpool[blk, l % bs])
+        return out, table, np.asarray(c.free), pos, \
+            np.asarray(c.next_pos), np.asarray(c.alloc_failed)
+
+    def test_paged_matches_sync_rollback(self):
+        cache = init_paged_attn_cache(2, 24, 1, 4, jnp.float32,
+                                      num_blocks=8, block_size=4)
+        cache = _write_tokens(cache, 0, 5)
+        cache = _write_tokens(cache, 5, 4, 10.0)
+        keep = jnp.asarray([8, 5], jnp.int32)
+        want = self._paged_view(discard_tail(cache, keep))
+        ahead = _write_tokens(cache, 9, 3, 99.0)
+        got = self._paged_view(discard_tail(ahead, keep))
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a, b)
+
+    def test_paged_block_boundary_frees_ahead_blocks(self):
+        """keep lands exactly on a block boundary: every block the ahead
+        allocated must return to the free list."""
+        cache = init_paged_attn_cache(1, 16, 1, 4, jnp.float32,
+                                      num_blocks=6, block_size=4)
+        cache = _write_tokens(cache, 0, 8)          # fills blocks 0-1
+        free_before = np.asarray(cache.free).copy()
+        ahead = _write_tokens(cache, 8, 5, 99.0)    # allocates 2 more
+        assert np.asarray(ahead.free).sum() < free_before.sum()
+        got = discard_tail(ahead, jnp.asarray([8], jnp.int32))
+        np.testing.assert_array_equal(np.asarray(got.free), free_before)
+
+    def test_alloc_flag_snapshot_restored(self):
+        """Ahead-writes that exhaust the pool set the sticky
+        ``alloc_failed`` flag; the deferred discard must restore the
+        pre-ahead snapshot so speculative exhaustion never poisons the
+        host's admission health checks."""
+        cache = init_paged_attn_cache(1, 64, 1, 4, jnp.float32,
+                                      num_blocks=3, block_size=4)
+        cache = _write_tokens(cache, 0, 10)         # 3 blocks: pool full
+        flag = snapshot_alloc_flag(cache)
+        assert not bool(flag)
+        ahead = _write_tokens(cache, 10, 4, 99.0)   # needs a 4th block
+        assert bool(ahead.alloc_failed)             # sticky failure set
+        got = discard_tail(ahead, jnp.asarray([10], jnp.int32),
+                           alloc_failed=flag)
+        assert not bool(got.alloc_failed)
+
+    def test_snapshot_alloc_flag_static_is_none(self):
+        assert snapshot_alloc_flag(
+            init_attn_cache(1, 8, 1, 4, jnp.float32)) is None
+
+
+# ---------------------------------------------------------------------------
+# engine: overlap round == synchronous round, state-for-state
+# ---------------------------------------------------------------------------
+
+def _canon_cache(c):
+    """Comparable form of a cache leaf: values at VALID slots only (both
+    modes leave garbage past the committed boundary — sync from the real
+    over-draft, overlap additionally from the discarded ahead tail — and
+    masked slots contribute exactly 0 to attention)."""
+    if c.next_pos.ndim == 2:      # layer-stacked leaf: canon each layer
+        return [_canon_cache(type(c)(*[f[g] for f in c]))
+                for g in range(c.next_pos.shape[0])]
+    if isinstance(c, AttnCache):
+        m = np.asarray(c.pos_arr) >= 0
+        return dict(k=np.where(m[..., None, None], np.asarray(c.k), 0),
+                    v=np.where(m[..., None, None], np.asarray(c.v), 0),
+                    pos=np.asarray(c.pos_arr), nxt=np.asarray(c.next_pos))
+    if isinstance(c, PagedAttnCache):
+        table, pos = np.asarray(c.table), np.asarray(c.pos_arr)
+        bs = c.kpool.shape[1]
+        bsz, slots = pos.shape
+        k = np.zeros((bsz, slots) + c.kpool.shape[2:], np.float32)
+        v = np.zeros_like(k)
+        kp, vp = np.asarray(c.kpool), np.asarray(c.vpool)
+        for b in range(bsz):
+            for l in range(slots):
+                blk = table[b, l // bs]
+                if pos[b, l] >= 0 and blk >= 0:
+                    k[b, l], v[b, l] = kp[blk, l % bs], vp[blk, l % bs]
+        return dict(k=k, v=v, pos=pos, nxt=np.asarray(c.next_pos),
+                    table=table, free=np.asarray(c.free),
+                    failed=np.asarray(c.alloc_failed))
+    return c
+
+
+def _canon_state(state):
+    leaves = jax.tree_util.tree_leaves(
+        (state.target_cache, state.draft_cache),
+        is_leaf=lambda x: isinstance(x, (AttnCache, PagedAttnCache)))
+    canon = []
+    for c in leaves:
+        out = _canon_cache(c)
+        canon.extend(out if isinstance(out, list) else [out])
+    return (canon,
+            np.asarray(state.pending), np.asarray(state.length),
+            np.asarray(state.S), np.asarray(state.key),
+            jax.tree.map(np.asarray, state.est))
+
+
+def _assert_state_equal(a, b, tag):
+    ca, pa, la, sa, ka, ea = a
+    cb, pb, lb, sb, kb, eb = b
+    np.testing.assert_array_equal(pa, pb, err_msg=tag)
+    np.testing.assert_array_equal(la, lb, err_msg=tag)
+    np.testing.assert_array_equal(sa, sb, err_msg=tag)
+    np.testing.assert_array_equal(ka, kb, err_msg=tag)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y), ea, eb)
+    assert len(ca) == len(cb)
+    for x, y in zip(ca, cb):
+        for f in x:
+            np.testing.assert_array_equal(x[f], y[f],
+                                          err_msg=f"{tag}: cache field {f}")
+
+
+class TestDeferredReconcile:
+    """Round-by-round: the overlap pipeline's deferred reconcile restores
+    the exact synchronous post-round state — including rounds whose
+    verify REJECTS the ahead root (m < S), where the entire speculative
+    tail drafted from that root is discarded."""
+
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_state_identical_each_round(self, serve_pair, paged):
+        dm, tm, dp0, tp0 = serve_pair
+        kw = dict(draft_model=dm, target_model=tm, n_servers=2, C=6,
+                  s_max=3, cache_len=64, kv_block_size=8, paged_kv=paged)
+        prompts = [np.arange(1, 7, dtype=np.int32),
+                   np.arange(2, 10, dtype=np.int32)]
+        runs = {}
+        for overlap in (False, True):
+            eng = GoodSpeedEngine(**kw, overlap=overlap)
+            state = eng.init(jax.random.PRNGKey(4), prompts, dp0, tp0)
+            snaps, rejected_root = [], False
+            for _ in range(6):
+                state, stats = eng.run_round(state, dp0, tp0)
+                snaps.append(_canon_state(state))
+                rejected_root |= bool(np.any(stats.accepted < stats.S))
+                if overlap:
+                    assert stats.wall_overlap > 0.0
+                    assert np.all(stats.ahead_S >= 0)
+                    assert np.all(stats.ahead_S <= eng.s_bucket)
+                    # the overlapped round is never slower than the sum
+                    assert stats.wall_overlap <= stats.wall[0] + 1e-6
+            runs[overlap] = snaps
+            # the trace must actually exercise a rejected overlap root
+            assert rejected_root
+        for r, (a, b) in enumerate(zip(runs[False], runs[True])):
+            _assert_state_equal(a, b, f"round {r} (paged={paged})")
+
+    def test_overlap_cache_matches_fresh_prefill(self, serve_pair):
+        """Acceptance pin: after overlap rounds (ahead tails discarded
+        every round), the committed caches answer exactly like a
+        from-scratch prefill of the committed tokens."""
+        dm, tm, dp, tp = serve_pair
+        n = 2
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=n,
+                              C=6, s_max=3, cache_len=96, paged_kv=True,
+                              kv_block_size=8, overlap=True)
+        prompts = [np.arange(1, 8, dtype=np.int32),
+                   np.arange(3, 9, dtype=np.int32)]
+        state = eng.init(jax.random.PRNGKey(2), prompts, dp, tp)
+        committed = [list(p) for p in prompts]
+        for _ in range(4):
+            state, stats = eng.run_round(state, dp, tp)
+            for i in range(n):
+                row = stats.emitted[i]
+                committed[i].extend(int(t) for t in row[row >= 0])
+        out = tm.forward(tp, state.pending[:, None], mode="decode",
+                         cache=state.target_cache,
+                         positions=state.length[:, None])
+        for i in range(n):
+            toks = jnp.asarray(committed[i], jnp.int32)[None, :]
+            ref = tm.forward(tp, toks, mode="train").logits[0, -1]
+            err = float(jnp.max(jnp.abs(out.logits[i, 0] - ref)))
+            assert err < 3e-3, f"row {i}: cache drift {err}"
+
+    def test_overlap_requires_rollbackable_stacks(self):
+        from repro.configs import get_reduced
+        from repro.models import Model
+        dm = Model(get_reduced("olmo-1b", num_layers=2, d_model=64,
+                               num_heads=2, num_kv_heads=2, head_dim=32,
+                               d_ff=128, vocab_size=64))
+        tm = Model(get_reduced("xlstm-350m", num_layers=2, d_model=64,
+                               num_heads=2, num_kv_heads=2, head_dim=32,
+                               d_ff=128, vocab_size=64))
+        with pytest.raises(AssertionError, match="rollbackable"):
+            GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=2,
+                            C=6, s_max=3, cache_len=64, overlap=True)
+
+    def test_phase_jits_compile_once(self, serve_pair):
+        """Retrace telemetry: a fixed-shape round loop compiles each
+        overlap phase exactly once (``round_trace_counts``)."""
+        dm, tm, dp, tp = serve_pair
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=2,
+                              C=6, s_max=3, cache_len=64, overlap=True)
+        state = eng.init(jax.random.PRNGKey(0),
+                         [np.arange(1, 6, dtype=np.int32)] * 2, dp, tp)
+        for r in range(3):
+            caps = np.asarray([5, 3 + r], np.int32)  # values vary, shape not
+            state, _ = eng.run_round(state, dp, tp, caps=caps)
+        counts = eng.round_trace_counts()
+        assert set(counts) == {"draft", "verify", "ahead", "reconcile"}
+        assert all(v == 1 for v in counts.values()), counts
+
+
+# ---------------------------------------------------------------------------
+# acceptance trace: overlap == golden across cache x backend x lanes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+class TestOverlapEquivalenceTrace:
+    """``GoodSpeedEngine(overlap=True)`` must emit the IDENTICAL
+    accepted-token sequences as the synchronous engine on the ACCEPTANCE
+    mixed admit/retire/EOS trace — pinned against the same recorded
+    golden the sync engine is held to."""
+
+    @pytest.mark.parametrize("paged,backend", [
+        (False, "jnp"), (True, "jnp"), (False, "kernel"), (True, "kernel")])
+    def test_overlap_matches_recorded_trace(self, mixed_trace, paged,
+                                            backend):
+        golden = json.load(open(GOLDEN))
+        rep = mixed_trace(paged_kv=paged, attn_backend=backend,
+                          overlap=True)
+        assert conftest.generated_seqs(rep) == golden
+
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_overlap_matches_sync_lanes2(self, mixed_trace, paged):
+        """Lane rows keep the equivalence too (server-major [N*R] rows,
+        ahead budgets water-filled per server like the real round)."""
+        ref = mixed_trace(lanes=2, paged_kv=paged)
+        rep = mixed_trace(lanes=2, paged_kv=paged, overlap=True)
+        assert conftest.generated_seqs(rep) == conftest.generated_seqs(ref)
