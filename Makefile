@@ -24,6 +24,13 @@ placement-check:
 lanes-check:
 	PYTHONPATH=src python -m pytest -x -q tests/test_lanes.py tests/test_scheduler.py
 
+# churn layer standalone: fault-plan/health-tracker state machine, the
+# in-graph verify-deadline drop semantics, migration byte-equivalence
+# under greedy decoding, paged-block reclamation on crash, and manager
+# conservation under random fault plans
+churn-check:
+	PYTHONPATH=src python -m pytest -x -q tests/test_faults.py
+
 # round-graph layer standalone: verify_bucket table properties, the
 # discard_tail/snapshot_alloc_flag deferred-rollback primitives, the
 # overlap-vs-sync state identity + golden-trace equivalence, and the
@@ -35,4 +42,4 @@ bench:
 	PYTHONPATH=src python -m benchmarks.run
 
 .PHONY: test docs-check kernels-check placement-check lanes-check \
-	overlap-check bench
+	churn-check overlap-check bench

@@ -48,6 +48,18 @@ records accepted tokens, simulated round time (overlap prices rounds as
 max(receive_t, verify_{t-1}) + send) and measured wall-clock per round
 into the ``overlap`` section; it also asserts the retrace telemetry —
 no round phase compiles more than once per verify bucket.
+
+The CHURN scenario (``--scenario churn``, also part of the full run)
+drains a workload through a scripted adversary (mid-drain crash +
+rejoin, a 20x straggler window, an uplink-drop burst — see
+``repro.serving.faults``) twice: once with the mitigations on (finite
+verify deadline, health state machine, exact request migration) and
+once as the no-mitigation baseline (infinite deadline, crashes destroy
+seated requests' state).  It records accepted tokens, requests lost
+(must be 0 mitigated), Jain's index over PER-REQUEST token counts, p95
+queue wait and simulated round time into the ``churn`` section, and
+asserts the mitigated run strictly beats the baseline on tokens and
+fairness.
 """
 from __future__ import annotations
 
@@ -82,6 +94,12 @@ PLACEMENTS = ("static", "jsq", "goodput")
 # so requests are short (a one-lane server idles between completions)
 HEAVY_K, HEAVY_ROUNDS = 80, 24
 HEAVY_LANES = (1, 2, 4)
+# churn scenario: mid-drain crash + straggler + uplink drops against the
+# mitigated engine (verify deadlines + health tracking + exact request
+# migration) vs the no-mitigation baseline (infinite deadline, crashes
+# destroy seated requests' state)
+CHURN_K, CHURN_ROUNDS = 24, 72
+CHURN_DEADLINE = 0.12
 ADMIT_BATCHES = (4, 16, 64)
 ADMIT_PROMPT_LEN = 96
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
@@ -299,12 +317,136 @@ def overlap_scenario(draft, target, dp, tp):
     return rows, section
 
 
+def _churn_workload(seed: int = 7):
+    """CHURN_K medium requests arriving over the first half of the
+    horizon, no server hints (goodput placement decides)."""
+    rng = np.random.default_rng(seed)
+    items, t = [], 0.0
+    for j in range(CHURN_K):
+        t += rng.exponential(CHURN_ROUNDS / (2.0 * CHURN_K))
+        dom = SyntheticDomain(PAPER_DATASETS[j % len(PAPER_DATASETS)],
+                              VOCAB, 130 + j)
+        req = Request(prompt=dom.sample_prompt(rng)[:16],
+                      max_new_tokens=int(rng.integers(6, 12)))
+        items.append((int(t), None, req))
+    return items
+
+
+def _churn_plan():
+    """The adversary: server 1 crashes mid-drain and rejoins late; server
+    2 straggles hard enough (draft time x20) to blow the verify deadline
+    every round of its window, so the health tracker downs it and its
+    rejoin re-warms the estimator; server 3 suffers a short uplink-drop
+    burst (one miss: SUSPECT haircut, then recovers)."""
+    from repro.serving.faults import FaultEvent, FaultPlan
+
+    return FaultPlan(events=(
+        FaultEvent(round=10, kind="crash", server=1),
+        FaultEvent(round=30, kind="rejoin", server=1),
+        FaultEvent(round=8, kind="slowdown", server=2, factor=20.0,
+                   duration=12),
+        FaultEvent(round=24, kind="rejoin", server=2),
+        FaultEvent(round=14, kind="drop", server=3, duration=1),
+    ), deadline=CHURN_DEADLINE, k_down=2, migrate=True)
+
+
+def _request_tokens(rep):
+    """f64[K] tokens delivered per REQUEST across the whole workload —
+    completed, in-flight, still-queued and lost alike.  Jain over THIS
+    vector is the per-user fairness the churn scenario scores: a lost or
+    starved request drags the index down even though per-server totals
+    may look balanced."""
+    mgr = rep["manager"]
+    reqs = (mgr.completed + [r for r in mgr.active if r is not None]
+            + list(mgr.arrivals) + [r for q in mgr.queues for r in q])
+    return np.asarray([float(len(r.generated)) for r in reqs], np.float64)
+
+
+def churn_scenario(draft, target, dp, tp):
+    """(csv_rows, json_section): churn-tolerant serving vs no mitigation.
+
+    Both runs serve the SAME workload under the SAME adversary script
+    (``_churn_plan``); they differ only in the mitigation config.  The
+    mitigated engine (finite verify deadline + health state machine +
+    exact migration) must complete EVERY request (requests-lost = 0) and
+    strictly beat the baseline (deadline=inf — one straggler stalls every
+    round — and migrate=False — the crash destroys its seated requests)
+    on both accepted tokens and per-request Jain fairness."""
+    import dataclasses as _dc
+
+    rows, section = [], {}
+    plan = _churn_plan()
+    configs = (
+        ("mitigated", plan),
+        ("no_mitigation", _dc.replace(plan, deadline=float("inf"),
+                                      migrate=False)),
+    )
+    for tag, p in configs:
+        eng = GoodSpeedEngine(draft_model=draft, target_model=target,
+                              n_servers=N, C=16, s_max=6, cache_len=256,
+                              paged_kv=True, kv_block_size=16, lanes=2,
+                              placement="goodput", greedy=True)
+        t0 = time.perf_counter()
+        rep = eng.serve_requests(jax.random.PRNGKey(13), _churn_workload(),
+                                 dp, tp, rounds=CHURN_ROUNDS, faults=p)
+        wall = time.perf_counter() - t0
+        s = rep["summary"]
+        per_req = _request_tokens(rep)
+        total_tokens = int(per_req.sum())
+        fairness = round(jain(per_req), 4)
+        _, _, p50, p95 = _drain_metrics(rep)
+        sim = sum(float(h.wall[0]) for h in rep["rounds"])
+        rows.append((f"churn_{tag}_total_accepted_tokens",
+                     round(wall * 1e6 / max(1, s["rounds_run"]), 0),
+                     total_tokens))
+        rows.append((f"churn_{tag}_jain_fairness", 0.0, fairness))
+        rows.append((f"churn_{tag}_requests_lost", 0.0,
+                     s["requests_lost"]))
+        section[tag] = {
+            "total_accepted_tokens": total_tokens,
+            "completed": s["completed"],
+            "of_requests": CHURN_K,
+            "requests_lost": s["requests_lost"],
+            "migrations": s["migrations"],
+            "jain_fairness_per_request": fairness,
+            "p50_queue_wait_rounds": round(p50, 1),
+            "p95_queue_wait_rounds": round(p95, 1),
+            "sim_round_time_ms": round(sim * 1e3 / max(1, s["rounds_run"]),
+                                       3),
+            "rounds_run": s["rounds_run"],
+            "health": s["faults"],
+        }
+    mit, base = section["mitigated"], section["no_mitigation"]
+    assert mit["requests_lost"] == 0, section
+    assert mit["completed"] == CHURN_K, section
+    assert mit["total_accepted_tokens"] > base["total_accepted_tokens"], \
+        section
+    assert mit["jain_fairness_per_request"] \
+        > base["jain_fairness_per_request"], section
+    return rows, section
+
+
 def _merge_bench_json(update: dict) -> None:
     """Read-modify-write BENCH_serve.json so a single scenario run keeps
-    the other sections' baselines."""
+    the other sections' baselines.  A corrupt or truncated baseline file
+    (killed run, merge conflict markers, partial write) must not abort a
+    benchmark that just spent minutes collecting numbers: the bad file is
+    backed up to ``BENCH_serve.json.corrupt`` and the merge restarts from
+    a fresh dict."""
     data = {}
     if BENCH_JSON.exists():
-        data = json.loads(BENCH_JSON.read_text())
+        try:
+            data = json.loads(BENCH_JSON.read_text())
+            if not isinstance(data, dict):
+                raise ValueError(f"expected a JSON object, "
+                                 f"got {type(data).__name__}")
+        except (ValueError, OSError) as e:
+            backup = BENCH_JSON.with_suffix(".json.corrupt")
+            BENCH_JSON.replace(backup)
+            print(f"WARNING: {BENCH_JSON.name} is not valid JSON ({e}); "
+                  f"backed it up to {backup.name} and starting fresh",
+                  file=sys.stderr)
+            data = {}
     data.update(update)
     BENCH_JSON.write_text(json.dumps(data, indent=2) + "\n")
 
@@ -399,12 +541,15 @@ def run():
     rows.extend(heavy_rows)
     ov_rows, ov_json = overlap_scenario(draft, target, dp, tp)
     rows.extend(ov_rows)
+    churn_rows, churn_json = churn_scenario(draft, target, dp, tp)
+    rows.extend(churn_rows)
     _merge_bench_json({
         "admission_cost_us": {name: us for name, us, _ in admit_rows},
         "serve": serve_json,
         "placement_skewed": skew_json,
         "lanes_heavy": heavy_json,
         "overlap": ov_json,
+        "churn": churn_json,
         "paged_decode_microbench": {
             f"capacity_{cap}": r for cap, r in microbench.items()
         },
@@ -415,12 +560,13 @@ def run():
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--scenario",
-                    choices=("all", "skewed", "heavy", "overlap"),
+                    choices=("all", "skewed", "heavy", "overlap", "churn"),
                     default="all",
                     help="'skewed' runs only the placement-policy sweep, "
                     "'heavy' only the draft-lane sweep, 'overlap' only "
-                    "the round-graph overlap comparison; each merges its "
-                    "section into BENCH_serve.json")
+                    "the round-graph overlap comparison, 'churn' only the "
+                    "fault-injection mitigated-vs-baseline comparison; "
+                    "each merges its section into BENCH_serve.json")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.scenario == "skewed":
@@ -432,6 +578,9 @@ def main(argv=None) -> None:
     elif args.scenario == "overlap":
         rows, section = overlap_scenario(*_models())
         _merge_bench_json({"overlap": section})
+    elif args.scenario == "churn":
+        rows, section = churn_scenario(*_models())
+        _merge_bench_json({"churn": section})
     else:
         rows = run()
     for name, us, derived in rows:

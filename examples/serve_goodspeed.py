@@ -9,7 +9,15 @@ multi-user request workload through the continuous-batching lifecycle loop
 (``serve_requests``): FIFO admission per server, per-row cache re-prefill
 on admission, completion-aware scheduling, EOS/cap termination.
 
+``--churn`` additionally scripts server churn against the drain (crash +
+rejoin, a straggler window, a dropped chunk) with a per-round verify
+``--deadline``: late chunks are discarded exactly, a server that keeps
+missing goes DOWN, and its in-flight requests migrate back to the global
+queue with their committed tokens preserved (``repro.serving.faults``).
+
 Run:  PYTHONPATH=src python examples/serve_goodspeed.py [--rounds 30]
+      PYTHONPATH=src python examples/serve_goodspeed.py \\
+          --churn --placement goodput --lanes 2
 """
 import argparse
 
@@ -20,6 +28,7 @@ from repro.configs import get_reduced
 from repro.data.pipeline import PAPER_DATASETS, SyntheticDomain
 from repro.models import Model
 from repro.serving.engine import GoodSpeedEngine
+from repro.serving.faults import FaultEvent, FaultPlan
 from repro.serving.request import Request
 
 N = 4
@@ -49,6 +58,17 @@ def main():
                     "draft-ahead while the verify chunk is in flight "
                     "(deferred reconcile discards the speculative tail; "
                     "emitted tokens are identical to the sync engine)")
+    ap.add_argument("--churn", action="store_true",
+                    help="inject server churn into the request drain: "
+                    "crash server 1 mid-drain (its requests migrate), a "
+                    "20x straggler window on server 2, one dropped chunk "
+                    "on server 3, then a rejoin — with verify deadlines "
+                    "and the healthy/suspect/down tracker mitigating")
+    ap.add_argument("--deadline", type=float, default=0.12,
+                    help="per-round verify deadline in seconds under "
+                    "--churn: a chunk arriving later is discarded for the "
+                    "round (that server accepts zero tokens; caches roll "
+                    "back exactly)")
     args = ap.parse_args()
 
     vocab = 256
@@ -95,16 +115,33 @@ def main():
                           placement=args.placement,
                           lanes=args.lanes,
                           overlap=args.overlap)
+    plan = None
+    if args.churn:
+        plan = FaultPlan(events=(
+            FaultEvent(round=6, kind="crash", server=1),
+            FaultEvent(round=18, kind="rejoin", server=1),
+            FaultEvent(round=4, kind="slowdown", server=2, factor=20.0,
+                       duration=8),
+            FaultEvent(round=13, kind="rejoin", server=2),
+            FaultEvent(round=8, kind="drop", server=3),
+        ), deadline=args.deadline, k_down=2)
     rep = eng.serve_requests(jax.random.PRNGKey(3), reqs, dp, tp,
-                             rounds=8 * args.rounds)
+                             rounds=8 * args.rounds, faults=plan)
     s = rep["summary"]
     print(f"\nserve_requests[{args.placement}, lanes={args.lanes}"
-          f"{', overlap' if args.overlap else ''}]: "
+          f"{', overlap' if args.overlap else ''}"
+          f"{', churn' if args.churn else ''}]: "
           f"{s['completed']}/{len(reqs)} requests in "
           f"{s['rounds_run']} rounds  tokens/round={s['tokens_per_round']:.2f}  "
           f"mean latency={s['mean_latency_rounds']:.1f} rounds  "
           f"mean queue delay={s['mean_queue_delay_rounds']:.1f} rounds  "
           f"admitted/server={s['per_server_admitted']}")
+    if args.churn:
+        f = s["faults"]
+        print(f"churn: migrations={s['migrations']}  "
+              f"lost={s['requests_lost']}  deadline misses={f['misses']}  "
+              f"down events={f['down_events']}  "
+              f"rejoins={f['rejoin_events']}  final status={f['status']}")
 
 
 if __name__ == "__main__":

@@ -59,14 +59,22 @@ class LatencyModel:
             + (self.probs_topk > 0) * k * 4  # top-k also ships indices
         return S.astype(jnp.float32) * per_tok
 
-    def receive_time(self, S: Array, vocab: int, jitter: Array,
-                     lanes: int = 1) -> Array:
-        """Batch assembly = max over servers of (draft + uplink).
+    def server_arrival_times(self, S: Array, vocab: int, jitter: Array,
+                             lanes: int = 1, slow: Array = None,
+                             uplink: Array = None):
+        """Per-SERVER chunk arrival times: (arrival f32[N], live bool[N]).
 
         ``lanes`` > 1 groups the [N*R] per-lane rows server-major: a
         server's lanes decode in ONE batched forward (draft time = its
         slowest lane) but share the server's uplink (payloads SUM over
-        its lanes before the transfer-time division)."""
+        its lanes before the transfer-time division).
+
+        ``slow`` / ``uplink`` are optional f32[N] fault multipliers
+        (``serving.faults.RoundFaults``): a straggler's draft time and a
+        degraded link's transfer time scale by them (1.0 = nominal; the
+        None path is bit-identical to the historical receive-time math).
+        The engine compares ``arrival`` against the verify deadline to
+        decide per-server misses."""
         draft = self.draft_time(S, jitter)
         payload = self.uplink_payload(S, vocab)
         live = S > 0
@@ -75,7 +83,21 @@ class LatencyModel:
             draft = jnp.max(draft.reshape(n, lanes), axis=1)
             payload = payload.reshape(n, lanes).sum(axis=1)
             live = live.reshape(n, lanes).any(axis=1)
-        per = draft + payload / self.uplink_bytes_s + self.rtt_s
+        if slow is not None:
+            draft = draft * slow
+        xfer = payload / self.uplink_bytes_s
+        if uplink is not None:
+            xfer = xfer * uplink
+        return draft + xfer + self.rtt_s, live
+
+    def receive_time(self, S: Array, vocab: int, jitter: Array,
+                     lanes: int = 1, slow: Array = None,
+                     uplink: Array = None) -> Array:
+        """Batch assembly = max over LIVE servers of (draft + uplink),
+        optionally under per-server fault multipliers (see
+        ``server_arrival_times``)."""
+        per, live = self.server_arrival_times(S, vocab, jitter, lanes=lanes,
+                                              slow=slow, uplink=uplink)
         return jnp.max(jnp.where(live, per, 0.0))
 
     def verify_time(self, S: Array) -> Array:
@@ -96,27 +118,43 @@ class LatencyModel:
         return payload / self.downlink_bytes_s
 
     def round_time(self, S: Array, num_emitted: Array, vocab: int,
-                   jitter: Array, lanes: int = 1):
+                   jitter: Array, lanes: int = 1, slow: Array = None,
+                   uplink: Array = None, deadline: Array = None):
         """S / num_emitted / jitter are per-row ([N] servers, or [N*R]
         server-major lane rows with ``lanes`` set).  Verify and send cost
         every lane's tokens (sums over rows already); only receive needs
-        the lane grouping (shared per-server uplink)."""
-        r = self.receive_time(S, vocab, jitter, lanes=lanes)
+        the lane grouping (shared per-server uplink).
+
+        ``slow`` / ``uplink`` are per-server fault multipliers and
+        ``deadline`` caps the receive wait: under verify deadlines the
+        batch assembles at min(slowest live arrival, deadline) — the
+        verify server stops waiting and drops the late chunks (the engine
+        masks their tokens; late rows' verify/send costs should already
+        be zeroed out of ``S`` / ``num_emitted`` by the caller)."""
+        r = self.receive_time(S, vocab, jitter, lanes=lanes, slow=slow,
+                              uplink=uplink)
+        if deadline is not None:
+            r = jnp.minimum(r, deadline)
         v = self.verify_time(S)
         s = self.send_time(num_emitted)
         return r + v + s, (r, v, s)
 
     def overlapped_round_time(self, S: Array, prev_S: Array,
                               num_emitted: Array, vocab: int, jitter: Array,
-                              lanes: int = 1):
+                              lanes: int = 1, slow: Array = None,
+                              uplink: Array = None, deadline: Array = None):
         """PEARL-style draft/verify overlap: round t's drafts (receive =
         draft + per-server uplink, unchanged shape) are produced WHILE the
         verify server is still scoring round t-1's chunk, so the steady-
         state round time is max(receive_t, verify_{t-1}) + send instead of
         their sum.  ``prev_S`` is the previous round's per-row allocation
         (the chunk in flight during this round's drafting); the per-server
-        uplink sharing of ``receive_time`` is preserved verbatim."""
-        r = self.receive_time(S, vocab, jitter, lanes=lanes)
+        uplink sharing of ``receive_time`` is preserved verbatim, as is
+        the deadline cap on the receive wait (see ``round_time``)."""
+        r = self.receive_time(S, vocab, jitter, lanes=lanes, slow=slow,
+                              uplink=uplink)
+        if deadline is not None:
+            r = jnp.minimum(r, deadline)
         v = self.verify_time(prev_S)
         s = self.send_time(num_emitted)
         return jnp.maximum(r, v) + s, (r, v, s)

@@ -55,6 +55,7 @@ def verify(
     p_logits: Array,       # f32[N, S_max+1, V]   target distributions
     lengths: Array,        # i32[N]               S_i <= S_max
     backend: str = "jnp",  # jnp | kernel (fused spec_verify gather)
+    greedy: bool = False,  # deterministic exact-match verification
 ) -> VerifyResult:
     """Batched ragged rejection-sampling verification.
 
@@ -63,7 +64,17 @@ def verify(
     (online logsumexp over vocab tiles; no [N, S, V] softmax
     materialization); the residual/bonus distributions then normalize
     only the single gathered row m per server.  ``"jnp"`` is the
-    full-materialization oracle path."""
+    full-materialization oracle path.
+
+    ``greedy=True`` is DETERMINISTIC greedy speculative decoding: a draft
+    token is accepted iff it equals the target's argmax at its position,
+    and the extra token is the target argmax at position m (no key
+    consumed).  The emitted sequence is exactly the target model's greedy
+    decode, so it depends only on the committed context — never on the
+    batch row, the round boundaries, or rng — which is what makes request
+    migration byte-equivalent to an uninterrupted run
+    (tests/test_faults.py).  ``accept_ratio_sum`` becomes the match count
+    (the empirical acceptance rate Eq. 3 folds is then the match rate)."""
     n, s_max = draft_tokens.shape
     v = q_logits.shape[-1]
 
@@ -71,6 +82,18 @@ def verify(
     in_draft = pos < lengths[:, None]                  # [N, S]
 
     tok = jnp.clip(draft_tokens, 0, v - 1)
+    if greedy:
+        p_top = jnp.argmax(p_logits[:, :s_max, :], axis=-1)
+        accept = in_draft & (tok == p_top)
+        ratio = accept.astype(jnp.float32)
+        rejected = ~accept
+        any_rej = jnp.any(rejected, axis=-1)
+        first_rej = jnp.argmax(rejected, axis=-1)
+        m = jnp.where(any_rej, first_rej, s_max).astype(jnp.int32)
+        extra = jnp.argmax(jnp.take_along_axis(
+            p_logits, m[:, None, None], axis=1)[:, 0, :],
+            axis=-1).astype(jnp.int32)
+        return _assemble(draft_tokens, in_draft, ratio, m, extra, n, s_max)
     if backend == "kernel":
         from repro.kernels.spec_verify import gather_logprobs
         logp_tok, _ = gather_logprobs(p_logits[:, :s_max, :], tok,
@@ -124,7 +147,12 @@ def verify(
     extra_logits = jnp.log(jnp.maximum(extra_probs, 1e-30))
     extra = jax.random.categorical(key_x, extra_logits, axis=-1).astype(jnp.int32)
 
-    # --- assemble outputs --------------------------------------------------
+    return _assemble(draft_tokens, in_draft, ratio, m, extra, n, s_max)
+
+
+def _assemble(draft_tokens: Array, in_draft: Array, ratio: Array, m: Array,
+              extra: Array, n: int, s_max: int) -> VerifyResult:
+    """Shared output assembly: accepted prefix + extra token, -1 padded."""
     out_pos = jnp.arange(s_max + 1)[None, :]
     keep = out_pos < m[:, None]
     padded_draft = jnp.concatenate(

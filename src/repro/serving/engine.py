@@ -87,6 +87,7 @@ from repro.core.scheduler import fixed_s, make_scheduler, plan_budgets
 from repro.core.speculative import verify
 from repro.core.utility import UtilitySpec
 from repro.models import Model
+from repro.serving.faults import FaultPlan, HealthTracker, RoundFaults
 from repro.serving.kv_cache import (AttnCache, MLACache, PAGED_TYPES,
                                     PoolExhaustedError, blocks_for,
                                     discard_tail, paged_merge_rows,
@@ -262,6 +263,13 @@ class RoundStats(NamedTuple):
     # i32[N*R] speculative draft-ahead budgets dispatched for round t+1
     # (zeros when overlap=False)
     ahead_S: np.ndarray = None
+    # bool[N] per-SERVER verify-deadline misses this round (chunk arrived
+    # past RoundFaults.deadline or was dropped): the server's speculative
+    # tokens were discarded — zero accepted, no bonus, caches rolled back.
+    # All-False without a fault plan.  Feeds HealthTracker.observe_round.
+    missed: np.ndarray = None
+    # f32[N] simulated per-server chunk arrival times (diagnostics)
+    arrival: np.ndarray = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,9 +327,21 @@ class GoodSpeedEngine:
     # slot-rollbackable (pure-attention) stacks for both models: a
     # ring/recurrent draft state cannot undo the ahead writes.
     overlap: bool = False
+    # deterministic greedy speculative decoding: drafts take the draft
+    # model's argmax, verification accepts a draft token iff it equals
+    # the target argmax, and the extra token is the target argmax at the
+    # first mismatch (core.speculative.verify(greedy=True)).  The emitted
+    # sequence is exactly the target's greedy decode — a pure function of
+    # the committed context, independent of batch row / round boundaries
+    # / rng — which makes request migration byte-equivalent to an
+    # uninterrupted run (the churn property tests pin this).
+    greedy: bool = False
 
     def __post_init__(self):
-        assert self.lanes >= 1, "lanes must be >= 1"
+        # serving-surface validation: misconfigurations fail HERE with a
+        # clear ValueError, not rounds later as shape errors inside jit
+        if self.lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {self.lanes}")
         # resolve the policy once; validates the name at construction time
         object.__setattr__(self, "_sched", make_scheduler(self.policy))
         make_placement(self.placement)   # validate at construction time
@@ -329,8 +349,9 @@ class GoodSpeedEngine:
         if backend is None:
             backend = self.target_model.cfg.attn_backend
             object.__setattr__(self, "attn_backend", backend)
-        assert backend in ("jnp", "kernel"), \
-            f"attn_backend must be jnp|kernel, got {backend!r}"
+        if backend not in ("jnp", "kernel"):
+            raise ValueError(f"attn_backend must be 'jnp' or 'kernel', "
+                             f"got {backend!r}")
         for name in ("draft_model", "target_model"):
             model = getattr(self, name)
             if model.cfg.attn_backend != backend:
@@ -709,7 +730,10 @@ class GoodSpeedEngine:
             # q := the ACTUAL sampling distribution (incl. temperature) —
             # rejection sampling is only lossless w.r.t. the true q.
             logits = logits / temps[:, None]
-            nxt = jax.random.categorical(k_s, logits, axis=-1)
+            if self.greedy:
+                nxt = jnp.argmax(logits, axis=-1)
+            else:
+                nxt = jax.random.categorical(k_s, logits, axis=-1)
             return (out.cache, nxt.astype(jnp.int32), pos + 1, key), \
                 (nxt.astype(jnp.int32), logits)
 
@@ -794,7 +818,7 @@ class GoodSpeedEngine:
         p_logits, cache, _ = self._verify_chunk(
             target_params, tcache, pending, length, toks, S, active, vmask_t)
         res = verify(k_verify, toks, qlogits, p_logits, S,
-                     backend=self.attn_backend)
+                     backend=self.attn_backend, greedy=self.greedy)
         m = jnp.where(active, res.accepted, 0)
         num_emitted = jnp.where(active, res.num_emitted, 0)
         return VerifyOut(
@@ -849,7 +873,8 @@ class GoodSpeedEngine:
                          pending: Array, length: Array, prev_S: Array,
                          toks: Array, S: Array, active: Array, v: VerifyOut,
                          k_jit: Array, key: Array, deferred: bool,
-                         saved_flag: Optional[Array] = None):
+                         saved_flag: Optional[Array] = None,
+                         faults: Optional[RoundFaults] = None):
         """``reconcile``: round-graph phase 3 — apply acceptance/rollback
         to both caches, update the estimators (Eqs. 3-4), price the round
         (LatencyModel) and assemble the next EngineState.
@@ -869,16 +894,51 @@ class GoodSpeedEngine:
         length+s_max — a slot the synchronous round never wrote.  Paged
         free-lists restore exactly too (the allocator is a deterministic
         first-free mask), with the sticky alloc_failed flag reset to the
-        pre-ahead snapshot (``kv_cache.discard_tail``)."""
+        pre-ahead snapshot (``kv_cache.discard_tail``).
+
+        faults (``serving.faults.RoundFaults``) carries this round's
+        per-server straggler/uplink multipliers, payload drops and the
+        verify DEADLINE.  A live server whose simulated chunk arrival
+        exceeds the deadline (or whose payload dropped) MISSES the round:
+        its speculative tokens are discarded — zero accepted, no bonus,
+        ratio sums zeroed (the estimator holds, exactly as for an
+        unobserved server) and both caches roll back to the committed
+        boundary, while every other server's round is untouched.  The
+        nominal faults (all multipliers 1.0, deadline inf) are a bitwise
+        no-op on every output, so fault-free traces stay byte-identical
+        to the historical round."""
         cfg_t = self.target_model.cfg
         n, lanes = self.n_servers, self.lanes
         m, num_emitted = v.accepted, v.num_emitted
+
+        # ---- verify deadline (fault model) -------------------------------
+        # jitter is drawn here (same k_jit stream as always) because the
+        # per-server arrival times both decide the deadline misses and
+        # price the round below
+        jitter = jax.random.uniform(k_jit, (n * lanes,),
+                                    minval=-1.0, maxval=1.0)
+        if faults is None:
+            faults = RoundFaults.nominal(n)
+        slow = jnp.asarray(faults.slow, jnp.float32)
+        uplink = jnp.asarray(faults.uplink, jnp.float32)
+        dropped = jnp.asarray(faults.dropped, bool)
+        deadline = jnp.asarray(faults.deadline, jnp.float32)
+        arrival, live = self.latency.server_arrival_times(
+            S, cfg_t.vocab_size, jitter, lanes=lanes,
+            slow=slow, uplink=uplink)
+        missed = live & (dropped | (arrival > deadline))
+        ok_row = jnp.repeat(~missed, lanes)           # bool[N*R]
+        m = jnp.where(ok_row, m, 0)
+        num_emitted = jnp.where(ok_row, num_emitted, 0)
+        emitted = jnp.where(ok_row[:, None], v.emitted, -1)
+        ratio_sum = jnp.where(ok_row, v.ratio_sum, 0.0)
+        S_obs = jnp.where(ok_row, S, 0)               # what verify saw
         realized = num_emitted.astype(jnp.float32)
 
         # ---- commit / rollback -------------------------------------------
         new_length = length + num_emitted             # m+1 tokens if active
         keep_pos = new_length                         # cache keeps < keep
-        m_eff = jnp.where(active, m, -1)              # -1: recompute holds
+        m_eff = jnp.where(active & ok_row, m, -1)     # -1: recompute holds
         if _is_rollbackable(cfg_t):
             tcache = _cache_rollback(tcache, keep_pos)
         else:
@@ -903,48 +963,53 @@ class GoodSpeedEngine:
         # not have its fairness weight dragged by rounds it never saw.
         est = self.estimator.update(
             est,
-            v.ratio_sum.reshape(n, lanes).sum(axis=1),
-            S.reshape(n, lanes).sum(axis=1),
+            ratio_sum.reshape(n, lanes).sum(axis=1),
+            S_obs.reshape(n, lanes).sum(axis=1),
             realized.reshape(n, lanes).sum(axis=1))
 
         # latency sees per-lane rows with the lane grouping: a server's
         # lanes draft in one batched decode (receive = max over its
         # lanes) but share its uplink (payloads sum per server), while
-        # the verify chunk and downlink pay for every lane's tokens
-        jitter = jax.random.uniform(k_jit, (n * lanes,),
-                                    minval=-1.0, maxval=1.0)
-        total, (rt, vt, st) = self.latency.round_time(
-            S, num_emitted, cfg_t.vocab_size, jitter, lanes=lanes)
+        # the verify chunk and downlink pay for every lane's tokens.
+        # Under a finite deadline the batch assembles at min(slowest live
+        # arrival, deadline) — the verify server stops waiting — and the
+        # dropped chunks cost no verify/downlink time (S_obs/num_emitted
+        # are already masked).  With nominal faults this is bit-identical
+        # to LatencyModel.round_time / overlapped_round_time.
+        rt = jnp.minimum(jnp.max(jnp.where(live, arrival, 0.0)), deadline)
+        vt = self.latency.verify_time(S_obs)
+        st = self.latency.send_time(num_emitted)
+        total = rt + vt + st
         if deferred:
             # overlapped pipeline: round t's drafts were produced while
             # round t-1's chunk (prev_S) was still being verified
-            total_ov, _ = self.latency.overlapped_round_time(
-                S, prev_S, num_emitted, cfg_t.vocab_size, jitter,
-                lanes=lanes)
+            total_ov = jnp.maximum(rt, self.latency.verify_time(prev_S)) + st
         else:
             total_ov = total
 
-        pending = jnp.where(active, v.extra_token, pending)
+        pending = jnp.where(active & ok_row, v.extra_token, pending)
         new_state = EngineState(
             target_cache=tcache, draft_cache=dcache,
-            pending=pending, length=new_length, est=est, S=S, key=key)
+            pending=pending, length=new_length, est=est, S=S_obs, key=key)
         stats = (S, m, realized, est.alpha_hat, est.goodput,
                  self.utility.value(est.goodput),
-                 jnp.stack([total, rt, vt, st]), v.emitted, total_ov)
+                 jnp.stack([total, rt, vt, st]), emitted, total_ov,
+                 missed, arrival)
         return new_state, stats
 
     def _reconcile_overlap(self, draft_params, target_params, dcache,
                            tcache, est, pending, length, prev_S, toks, S,
-                           active, v, k_jit, key, saved_flag):
+                           active, v, k_jit, key, saved_flag,
+                           faults: Optional[RoundFaults] = None):
         """jit entry for the overlap reconcile (donated polluted caches;
         rollbackable stacks asserted at construction, so no checkpoints)."""
         return self._reconcile_phase(
             draft_params, target_params, dcache, tcache, None, None, est,
             pending, length, prev_S, toks, S, active, v, k_jit, key,
-            deferred=True, saved_flag=saved_flag)
+            deferred=True, saved_flag=saved_flag, faults=faults)
 
     def _round_core(self, state: EngineState, draft_params, target_params,
-                    caps: Array):
+                    caps: Array, faults: Optional[RoundFaults] = None):
         """One full Algorithm-1 round (jit'd, state donated): the round
         graph composed synchronously — plan/draft -> verify -> reconcile
         inside one compiled graph, byte-identical to the historical
@@ -959,7 +1024,7 @@ class GoodSpeedEngine:
             draft_params, target_params, d.cache, v.cache,
             state.draft_cache, state.target_cache, state.est,
             state.pending, state.length, state.S, d.toks, d.S, d.active,
-            v, d.k_jit, d.key, deferred=False)
+            v, d.k_jit, d.key, deferred=False, faults=faults)
 
     # ------------------------------------------------------------------
     def plan_round(self, caps: Optional[np.ndarray] = None,
@@ -975,7 +1040,8 @@ class GoodSpeedEngine:
 
     def run_round(self, state: EngineState, draft_params, target_params,
                   caps: Optional[np.ndarray] = None,
-                  plan: Optional[RoundPlan] = None
+                  plan: Optional[RoundPlan] = None,
+                  faults: Optional[RoundFaults] = None
                   ) -> tuple[EngineState, RoundStats]:
         """One round of the round graph.  NOTE: ``state`` is donated to
         the compiled phases — use the returned state, not the argument.
@@ -986,13 +1052,26 @@ class GoodSpeedEngine:
         the round-(t+1) draft-ahead are in flight together, and the
         deferred reconcile (one round late from the ahead's perspective)
         discards the ahead tail exactly; the host only blocks when it
-        reads the round's stats."""
+        reads the round's stats.
+
+        faults: this round's ``RoundFaults`` (``FaultPlan.round_faults``)
+        — per-server straggler/uplink multipliers, payload drops and the
+        verify deadline.  The arrays enter the reconcile as TRACED leaves
+        (one extra compiled variant per phase, shared by every faulted
+        round); None keeps the fault-free graph byte-identical to the
+        historical round."""
         if plan is None:
             plan = self.plan_round(caps)
         caps_j = jnp.asarray(plan.caps, jnp.int32)
+        if faults is not None:
+            faults = RoundFaults(
+                slow=jnp.asarray(faults.slow, jnp.float32),
+                uplink=jnp.asarray(faults.uplink, jnp.float32),
+                dropped=jnp.asarray(faults.dropped, bool),
+                deadline=jnp.asarray(faults.deadline, jnp.float32))
         if not plan.overlap:
             new_state, raw = self._round_fn(
-                state, draft_params, target_params, caps_j)
+                state, draft_params, target_params, caps_j, faults)
             ahead_S = np.zeros((self.n_rows,), np.int32)
         else:
             d = self._draft_fn(draft_params, state.draft_cache,
@@ -1007,15 +1086,17 @@ class GoodSpeedEngine:
             new_state, raw = self._reconcile_fn(
                 draft_params, target_params, ahead_cache, v.cache,
                 state.est, state.pending, state.length, state.S, d.toks,
-                d.S, d.active, v, d.k_jit, d.key, flag)
+                d.S, d.active, v, d.k_jit, d.key, flag, faults)
             ahead_S = np.asarray(ahead_S_j)
-        S, m, realized, alpha_hat, goodput, util, wall, emitted, ov = raw
+        (S, m, realized, alpha_hat, goodput, util, wall, emitted, ov,
+         missed, arrival) = raw
         stats = RoundStats(
             S=np.asarray(S), accepted=np.asarray(m),
             realized=np.asarray(realized), alpha_hat=np.asarray(alpha_hat),
             goodput_est=np.asarray(goodput), utility=float(util),
             wall=np.asarray(wall), emitted=np.asarray(emitted),
-            wall_overlap=float(ov), ahead_S=ahead_S)
+            wall_overlap=float(ov), ahead_S=ahead_S,
+            missed=np.asarray(missed), arrival=np.asarray(arrival))
         return new_state, stats
 
     def round_trace_counts(self) -> dict:
@@ -1079,7 +1160,25 @@ class GoodSpeedEngine:
             s_max=self.s_max,
             free_blocks=free_blocks,
             total_blocks=total_blocks,
-            block_size=self.kv_block_size)
+            block_size=self.kv_block_size,
+            # None when every server is up, so the fault-free argmin tie
+            # behaviour is untouched byte-for-byte
+            available=(None if mgr.available.all()
+                       else mgr.available.copy()))
+
+    def _rewarm_estimator(self, est: EstimatorState,
+                          servers: list[int]) -> EstimatorState:
+        """Reset a rejoining server's quarantined estimates to the cold
+        init values: while DOWN it drafted nothing (caps masked to 0), so
+        the hold-on-unobserved guard froze its alpha_hat/X^beta at
+        whatever the pre-crash rounds left — stale state a changed
+        post-rejoin reality (re-warmed caches, different load) should not
+        inherit.  Cold-start re-warm also makes GoodputPlacement treat
+        the returnee as unproven rather than as its old self."""
+        idx = jnp.asarray(sorted(servers), jnp.int32)
+        return est._replace(
+            alpha_hat=est.alpha_hat.at[idx].set(self.estimator.alpha_init),
+            goodput=est.goodput.at[idx].set(self.estimator.goodput_init))
 
     # ------------------------------------------------------------------
     def serve(self, key: Array, prompts: list[np.ndarray], draft_params,
@@ -1097,7 +1196,8 @@ class GoodSpeedEngine:
     # ------------------------------------------------------------------
     def serve_requests(self, key: Array, workload, draft_params,
                        target_params, rounds: int,
-                       manager: Optional[RequestManager] = None) -> dict:
+                       manager: Optional[RequestManager] = None,
+                       faults: Optional[FaultPlan] = None) -> dict:
         """Multi-user serving: drain a request workload with continuous
         batching (the production loop; see module docstring).
 
@@ -1109,6 +1209,23 @@ class GoodSpeedEngine:
         admission time against the live estimator state and free KV
         blocks (``_placement_view``).  Runs at most ``rounds`` rounds,
         stopping early once every request has completed.
+
+        faults: a ``serving.faults.FaultPlan`` — the adversary script plus
+        mitigation config.  Each round the plan's dense ``RoundFaults``
+        enter the jit'd round (stragglers/uplink degradation feed the
+        verify DEADLINE check; late or dropped chunks are discarded
+        exactly) and a host-side ``HealthTracker`` folds the resulting
+        per-server misses: healthy -> suspect (budget haircut) ->
+        down (k_down consecutive misses, or a scripted crash).  A DOWN
+        server's caps mask to zero, placement stops routing to it, and —
+        with ``plan.migrate`` — its in-flight requests return to the
+        global queue with committed tokens preserved (exact migration:
+        re-admission re-prefills from the committed prefix; under
+        ``greedy=True`` the emitted sequences are byte-identical to an
+        uninterrupted run).  ``migrate=False`` models the unmitigated
+        system: the crashed server's seated requests are flagged lost.
+        On a scripted rejoin the server's quarantined estimator state is
+        re-warmed to the cold init (``_rewarm_estimator``).
 
         Returns ``{"requests": [...], "rounds": [RoundStats...],
         "summary": {...}}`` with per-request latency (arrival -> finish,
@@ -1125,6 +1242,9 @@ class GoodSpeedEngine:
         assert mgr.rows == rows, \
             (f"manager has {mgr.n} servers x {mgr.lanes} lanes but the "
              f"engine runs {self.n_servers} x {self.lanes}")
+        plan = faults
+        tracker = None if plan is None else HealthTracker(
+            n, k_down=plan.k_down, suspect_haircut=plan.suspect_haircut)
         sched = []
         for j, item in enumerate(workload):
             if isinstance(item, Request):
@@ -1132,7 +1252,7 @@ class GoodSpeedEngine:
             else:
                 arr, srv, req = item
                 sched.append((int(arr), None if srv is None
-                              else int(srv) % n, req))
+                              else int(srv), req))
         sched.sort(key=lambda x: x[0])
 
         def ctx(req: Request) -> np.ndarray:
@@ -1152,6 +1272,25 @@ class GoodSpeedEngine:
         next_arrival = 0
         released: set[int] = set()         # idle rows whose blocks are freed
         for r in range(rounds):
+            if tracker is not None:
+                # fault-plan events land BEFORE this round's admissions so
+                # an eviction's requests can re-place immediately and a
+                # rejoined server can seat work this same round
+                for srv in plan.crashes_at(r):
+                    tracker.crash(srv)
+                for srv in plan.rejoins_at(r):
+                    if tracker.rejoin(srv):
+                        state = state._replace(
+                            est=self._rewarm_estimator(state.est, [srv]))
+                for srv in tracker.take_newly_down():
+                    if plan.migrate:
+                        mgr.evict_server(srv)
+                    else:
+                        mgr.mark_lost(srv)
+                mgr.set_available(tracker.available())
+                # a caller-supplied manager's carried rows may have been
+                # evicted before their cold-state rebuild
+                carried = [i for i in carried if mgr.active[i] is not None]
             while next_arrival < len(sched) and sched[next_arrival][0] <= r:
                 _, srv, req = sched[next_arrival]
                 mgr.submit(srv, req)
@@ -1199,14 +1338,23 @@ class GoodSpeedEngine:
             if mgr.idle() and next_arrival >= len(sched):
                 break                      # workload drained
             caps = mgr.remaining_caps()
+            if tracker is not None:
+                # health masking on top of the request caps: DOWN -> 0
+                # (budget flows to live servers inside the solver),
+                # SUSPECT -> haircut
+                caps = tracker.apply_caps(caps, self.lanes, self.s_max)
             if not caps.any():
                 mgr.tick()                 # all idle: await arrivals without
                 continue                   # burning a full model round
+            rf = plan.round_faults(r, n) if plan is not None else None
             state, stats = self.run_round(state, draft_params, target_params,
-                                          caps=caps)
+                                          caps=caps, faults=rf)
             if self.paged_kv:
                 self._check_pool_health(state)
             mgr.record_emitted(stats.emitted)
+            if tracker is not None:
+                drafted = stats.S.reshape(n, self.lanes).sum(axis=1) > 0
+                tracker.observe_round(drafted, stats.missed)
             history.append(stats)
         mgr.retire_done()                  # last-round completions (retire
                                            # ONLY: admitting here would seat
@@ -1228,6 +1376,7 @@ class GoodSpeedEngine:
             "tokens": len(req.generated),
             "generated": list(req.generated),
             "kv_blocks": req.kv_blocks,
+            "migrations": req.migrations,
         } for req in mgr.completed[prev_done:]]
         rounds_run = len(history)
         toks_done = sum(r["tokens"] for r in requests)
@@ -1239,5 +1388,7 @@ class GoodSpeedEngine:
                        unsubmitted=len(sched) - next_arrival,
                        tokens_per_round=toks_done / max(1, rounds_run),
                        requests_per_round=len(requests) / max(1, rounds_run))
+        if tracker is not None:
+            summary["faults"] = tracker.summary()
         return {"requests": requests, "rounds": history, "summary": summary,
                 "state": state, "manager": mgr}

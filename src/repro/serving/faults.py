@@ -1,0 +1,285 @@
+"""Scriptable fault injection + server-health tracking for the serving
+loop (churn-tolerant serving).
+
+The paper's goodput claims are about DYNAMIC workloads, but a distributed
+edge deployment is dynamic in a second way: draft servers crash, rejoin,
+straggle, and sit behind degraded uplinks.  This module provides the
+failure model the engine and ``LatencyModel`` consume:
+
+* :class:`FaultEvent` / :class:`FaultPlan` — a deterministic per-round
+  script of faults (the adversary), plus the mitigation knobs (verify
+  ``deadline``, ``k_down`` miss threshold, suspect budget haircut, and
+  whether a down server's requests ``migrate``).  ``round_faults(r)``
+  compiles the plan into the dense per-round arrays the jit'd round
+  consumes (:class:`RoundFaults`).
+* :class:`HealthTracker` — the verify server's host-side
+  healthy -> suspect -> down state machine, fed by per-round
+  deadline-miss observations (engine ``RoundStats.missed``) and by
+  scripted crash/rejoin events:
+
+      healthy --miss--> suspect --(k_down consecutive misses)--> down
+      suspect --on-time round--> healthy
+      any     --crash event----> down
+      down    --rejoin event---> healthy   (miss streak cleared)
+
+  A DOWN server only returns via an explicit rejoin event (there is no
+  probe channel in the simulation); SUSPECT servers keep drafting under
+  a budget haircut so one jittery round cannot evict a healthy server.
+
+Everything here is host-side numpy (fault scripts are I/O, like request
+arrival); only :class:`RoundFaults` crosses into jit, as traced arrays so
+fault values never retrace the round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import numpy as np
+
+# fault kinds a plan may script
+FAULT_KINDS = ("crash", "rejoin", "slowdown", "uplink", "drop")
+
+HEALTHY, SUSPECT, DOWN = "healthy", "suspect", "down"
+
+
+class RoundFaults(NamedTuple):
+    """Dense per-round fault arrays consumed INSIDE the jit'd round
+    (``GoodSpeedEngine._reconcile_phase``).  All leaves are traced, so a
+    changing fault script never retraces the round graph."""
+
+    slow: object      # f32[N] draft-rate multiplier on arrival time (>= 1)
+    uplink: object    # f32[N] uplink-transfer multiplier (>= 1 = degraded)
+    dropped: object   # bool[N] payload dropped this round (forced miss)
+    deadline: object  # f32[] verify deadline in seconds (inf = wait forever)
+
+    @classmethod
+    def nominal(cls, n_servers: int,
+                deadline: float = math.inf) -> "RoundFaults":
+        return cls(slow=np.ones((n_servers,), np.float32),
+                   uplink=np.ones((n_servers,), np.float32),
+                   dropped=np.zeros((n_servers,), bool),
+                   deadline=np.float32(deadline))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault.  ``round`` is when it takes effect; windowed
+    kinds (slowdown / uplink / drop) persist for ``duration`` rounds,
+    instantaneous kinds (crash / rejoin) ignore it.  ``factor`` is the
+    multiplier for slowdown (draft time x factor) and uplink (transfer
+    time x factor)."""
+
+    round: int
+    kind: str
+    server: int
+    factor: float = 1.0
+    duration: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"choose from {FAULT_KINDS}")
+        if self.round < 0:
+            raise ValueError(f"fault round must be >= 0, got {self.round}")
+        if self.server < 0:
+            raise ValueError(f"fault server must be >= 0, got {self.server}")
+        if self.kind in ("slowdown", "uplink") and self.factor < 1.0:
+            raise ValueError(f"{self.kind} factor must be >= 1 "
+                             f"(a multiplier on time), got {self.factor}")
+        if self.duration < 1:
+            raise ValueError(f"fault duration must be >= 1, "
+                             f"got {self.duration}")
+
+    def active_at(self, r: int) -> bool:
+        return self.round <= r < self.round + self.duration
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A fault script plus the engine's mitigation configuration.
+
+    deadline:        per-round verify deadline (seconds).  A server whose
+                     simulated chunk arrival exceeds it has its round
+                     dropped (zero accepted, caches rolled back) instead
+                     of blocking the batch.  ``inf`` disables deadlines —
+                     the no-mitigation behaviour where one straggler
+                     stalls every server's round.
+    k_down:          consecutive deadline misses before a server is
+                     declared DOWN.
+    suspect_haircut: budget multiplier (of s_max) for SUSPECT servers in
+                     GOODSPEED-SCHED — a suspect keeps drafting, smaller.
+    migrate:         True re-queues a down server's in-flight requests
+                     (exact migration); False models the unmitigated
+                     system where a crash destroys its seated requests'
+                     state (they are flagged lost).
+    """
+
+    events: tuple = ()
+    deadline: float = math.inf
+    k_down: int = 3
+    suspect_haircut: float = 0.5
+    migrate: bool = True
+
+    def __post_init__(self):
+        for e in self.events:
+            if not isinstance(e, FaultEvent):
+                raise ValueError(f"events must be FaultEvent, got {e!r}")
+        evs = tuple(sorted(self.events,
+                           key=lambda e: (e.round, e.server, e.kind)))
+        object.__setattr__(self, "events", evs)
+        if not (self.deadline > 0.0):
+            raise ValueError(f"deadline must be > 0, got {self.deadline}")
+        if self.k_down < 1:
+            raise ValueError(f"k_down must be >= 1, got {self.k_down}")
+        if not (0.0 < self.suspect_haircut <= 1.0):
+            raise ValueError("suspect_haircut must be in (0, 1], "
+                             f"got {self.suspect_haircut}")
+
+    # -- per-round queries the serving loop makes ---------------------------
+    def crashes_at(self, r: int) -> list[int]:
+        return [e.server for e in self.events
+                if e.kind == "crash" and e.round == r]
+
+    def rejoins_at(self, r: int) -> list[int]:
+        return [e.server for e in self.events
+                if e.kind == "rejoin" and e.round == r]
+
+    def round_faults(self, r: int, n_servers: int) -> RoundFaults:
+        """Dense [N] fault arrays for round ``r`` (numpy; the engine
+        converts to device arrays).  Overlapping windows of the same kind
+        on one server multiply."""
+        rf = RoundFaults.nominal(n_servers, self.deadline)
+        for e in self.events:
+            if e.server >= n_servers or not e.active_at(r):
+                continue
+            if e.kind == "slowdown":
+                rf.slow[e.server] *= e.factor
+            elif e.kind == "uplink":
+                rf.uplink[e.server] *= e.factor
+            elif e.kind == "drop":
+                rf.dropped[e.server] = True
+        return rf
+
+    def horizon(self) -> int:
+        """First round past every scripted event (0 for an empty plan)."""
+        return max((e.round + e.duration for e in self.events), default=0)
+
+    @staticmethod
+    def random_plan(rng: np.random.Generator, n_servers: int, rounds: int,
+                    *, deadline: float = 0.12, k_down: int = 2,
+                    p_crash: float = 0.5, p_window: float = 0.7,
+                    migrate: bool = True) -> "FaultPlan":
+        """Random-but-recoverable plan for property tests: every crash is
+        paired with a rejoin inside the horizon (so a drain can always
+        complete), plus optional slowdown / uplink / drop windows."""
+        events = []
+        for srv in range(n_servers):
+            if rng.random() < p_crash and rounds >= 4:
+                c = int(rng.integers(1, max(2, rounds // 2)))
+                j = int(rng.integers(c + 1, max(c + 2, 3 * rounds // 4)))
+                events.append(FaultEvent(round=c, kind="crash", server=srv))
+                events.append(FaultEvent(round=j, kind="rejoin", server=srv))
+            if rng.random() < p_window and rounds >= 4:
+                kind = rng.choice(("slowdown", "uplink", "drop"))
+                start = int(rng.integers(0, max(1, rounds // 2)))
+                dur = int(rng.integers(1, 4))
+                events.append(FaultEvent(
+                    round=start, kind=str(kind), server=srv,
+                    factor=float(rng.uniform(2.0, 30.0)), duration=dur))
+        return FaultPlan(events=tuple(events), deadline=deadline,
+                         k_down=k_down, migrate=migrate)
+
+
+class HealthTracker:
+    """Host-side healthy/suspect/down state machine over the N draft
+    servers, driven by the engine's per-round deadline-miss observations
+    and the plan's crash/rejoin events (module docstring has the
+    transition diagram)."""
+
+    def __init__(self, n_servers: int, k_down: int = 3,
+                 suspect_haircut: float = 0.5):
+        self.n = n_servers
+        self.k_down = k_down
+        self.suspect_haircut = suspect_haircut
+        self.status = [HEALTHY] * n_servers
+        self.miss_streak = np.zeros((n_servers,), np.int64)
+        self._newly_down: list[int] = []
+        self.counts = {"misses": 0, "down_events": 0, "rejoin_events": 0}
+
+    # -- scripted events ----------------------------------------------------
+    def crash(self, server: int) -> None:
+        """A crash is immediately DOWN — no suspect grace."""
+        if self.status[server] != DOWN:
+            self.status[server] = DOWN
+            self._newly_down.append(server)
+            self.counts["down_events"] += 1
+        self.miss_streak[server] = 0
+
+    def rejoin(self, server: int) -> bool:
+        """Returns True when the server was actually down (the caller
+        re-warms its quarantined estimator state on a real rejoin)."""
+        self.miss_streak[server] = 0
+        if self.status[server] == DOWN:
+            self.status[server] = HEALTHY
+            self.counts["rejoin_events"] += 1
+            return True
+        self.status[server] = HEALTHY
+        return False
+
+    # -- per-round observation ----------------------------------------------
+    def observe_round(self, drafted: np.ndarray, missed: np.ndarray) -> None:
+        """Fold one round of engine observations: ``drafted`` (bool[N],
+        server had S > 0) and ``missed`` (bool[N], its chunk blew the
+        deadline / was dropped).  Servers that did not draft hold their
+        state, mirroring the estimator's hold-on-unobserved contract."""
+        for i in range(self.n):
+            if self.status[i] == DOWN or not bool(drafted[i]):
+                continue
+            if bool(missed[i]):
+                self.counts["misses"] += 1
+                self.miss_streak[i] += 1
+                if self.miss_streak[i] >= self.k_down:
+                    self.status[i] = DOWN
+                    self._newly_down.append(i)
+                    self.counts["down_events"] += 1
+                else:
+                    self.status[i] = SUSPECT
+            else:
+                self.miss_streak[i] = 0
+                self.status[i] = HEALTHY
+
+    def take_newly_down(self) -> list[int]:
+        """Servers that transitioned to DOWN since the last call (the
+        engine migrates their requests exactly once)."""
+        out, self._newly_down = self._newly_down, []
+        return out
+
+    # -- views the serving loop consumes ------------------------------------
+    def available(self) -> np.ndarray:
+        """bool[N]: not DOWN (placement views exclude unavailable
+        servers; seating onto one is gated in the request manager)."""
+        return np.asarray([s != DOWN for s in self.status], bool)
+
+    def apply_caps(self, caps: np.ndarray, lanes: int,
+                   s_max: int) -> np.ndarray:
+        """GOODSPEED-SCHED masking: DOWN servers' lane caps -> 0 (their
+        verify budget flows to live servers inside the solver), SUSPECT
+        servers' caps are haircut to ``ceil(s_max * suspect_haircut)``
+        per lane so a slow server costs the batch less while it proves
+        itself."""
+        caps = np.asarray(caps, np.int32).copy()
+        haircut = max(1, int(math.ceil(s_max * self.suspect_haircut)))
+        for i, st in enumerate(self.status):
+            rows = slice(i * lanes, (i + 1) * lanes)
+            if st == DOWN:
+                caps[rows] = 0
+            elif st == SUSPECT:
+                caps[rows] = np.minimum(caps[rows], haircut)
+        return caps
+
+    def summary(self) -> dict:
+        return {"status": list(self.status),
+                "miss_streak": self.miss_streak.tolist(),
+                **self.counts}

@@ -76,10 +76,23 @@ class PlacementView:
     # (defer, blocks free as requests retire) from "can never fit" (raise)
     total_blocks: Optional[int] = None
     block_size: int = 16
+    # bool[N] server availability (health tracker: not DOWN).  None = all
+    # available.  Lazy policies never choose an unavailable server; the
+    # manager additionally gates seating, so even a static binding cannot
+    # land on a down server.
+    available: Optional[np.ndarray] = None
 
     def backlog(self) -> np.ndarray:
         """Token demand ahead of a new arrival on each server."""
         return self.queue_load + self.active_remaining
+
+    def masked(self, score: np.ndarray) -> np.ndarray:
+        """Push unavailable servers' scores to +inf so argmin never
+        elects a DOWN server (when every server is down, the manager's
+        seating gate holds the request regardless of the argmin)."""
+        if self.available is None:
+            return score
+        return np.where(self.available, score.astype(np.float64), np.inf)
 
     def blocks_need(self, request) -> int:
         """Pool blocks ``request`` needs through its FIRST serving round:
@@ -167,7 +180,7 @@ class JSQPlacement(PlacementPolicy):
     name = "jsq"
 
     def place(self, request, view: PlacementView) -> int:
-        return int(np.argmin(view.backlog()))
+        return int(np.argmin(view.masked(view.backlog())))
 
 
 class GoodputPlacement(PlacementPolicy):
@@ -207,7 +220,7 @@ class GoodputPlacement(PlacementPolicy):
         if view.free_blocks is not None \
                 and view.free_blocks < view.blocks_need(request):
             score = score + backlog / mu    # wait for blocks to free
-        return int(np.argmin(score))
+        return int(np.argmin(view.masked(score)))
 
 
 _POLICIES = {p.name: p for p in (StaticPlacement, JSQPlacement,

@@ -61,6 +61,13 @@ class Request:                      # queue entries, and the generated
     # paged-KV accounting: blocks the admission prefill allocated for this
     # request (0 under static caches); set by the engine at admission
     kv_blocks: int = 0
+    # churn bookkeeping: times this request was migrated off a DOWN server
+    # (returned to the global queue with its committed tokens preserved),
+    # and the unmitigated-crash fate — a ``lost`` request's server died
+    # with its state and no migration ran, so it can never finish (its
+    # lane reports zero cap forever; FaultPlan(migrate=False) baseline)
+    migrations: int = 0
+    lost: bool = False
 
     @property
     def remaining(self) -> int:
@@ -93,7 +100,10 @@ class RequestManager:
     """
 
     def __init__(self, n_servers: int, placement="static", lanes: int = 1):
-        assert lanes >= 1, "lanes must be >= 1"
+        if lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {lanes}")
+        if n_servers < 1:
+            raise ValueError(f"n_servers must be >= 1, got {n_servers}")
         self.n = n_servers
         self.lanes = lanes
         self.rows = n_servers * lanes
@@ -103,6 +113,9 @@ class RequestManager:
         self.active: list[Optional[Request]] = [None] * self.rows
         self.completed: list[Request] = []
         self.round = 0
+        # server availability (health tracker view): DOWN servers take no
+        # bindings and seat no requests until they rejoin
+        self.available = np.ones((n_servers,), bool)
 
     # -- (server, lane) <-> row ----------------------------------------------
     def server_of(self, row: int) -> int:
@@ -119,11 +132,23 @@ class RequestManager:
     def submit(self, server: Optional[int], request: Request) -> None:
         """Enqueue an arrival.  ``server`` is the submitter's affinity hint
         (binding under static placement, advisory otherwise; None is only
-        valid for non-static policies — rejected HERE, at the misuse site,
-        not rounds later inside placement)."""
+        valid for non-static policies).  Misuse — a hint outside
+        [0, n_servers), a non-positive token cap, a missing static hint —
+        is rejected HERE at the submission site with a clear ValueError,
+        not rounds later as a shape error deep inside the jit'd round."""
         if server is None and self.placement.name == "static":
             raise ValueError("static placement needs a server hint: "
                              "submit(server, request)")
+        if server is not None and not 0 <= int(server) < self.n:
+            raise ValueError(
+                f"server hint {server} out of range for {self.n} draft "
+                f"servers (valid: 0..{self.n - 1}, or None under a "
+                f"non-static placement)")
+        if request.max_new_tokens <= 0:
+            raise ValueError(
+                f"request {request.request_id} has non-positive "
+                f"max_new_tokens={request.max_new_tokens}; the scheduler "
+                f"would never allocate it a draft budget")
         request.arrival_round = self.round
         request.server_hint = None if server is None else int(server)
         self.arrivals.append(request)
@@ -147,22 +172,31 @@ class RequestManager:
         global arrival queue onto the per-server FIFO queues, in arrival
         order.  Lazy policies (jsq/goodput) skip this — their requests
         stay in the global queue until a slot can seat them, so every
-        decision runs against live state instead of a stale binding."""
+        decision runs against live state instead of a stale binding.
+        A request bound to an UNAVAILABLE (down) server stays in the
+        global queue until that server rejoins — static affinity means
+        its binding cannot be rerouted."""
+        held = deque()
         while self.arrivals:
             req = self.arrivals.popleft()
             srv = self.placement.place(req, view) % self.n
+            if not self.available[srv]:
+                held.append(req)
+                continue
             self.queues[srv].append(req)
             view.note_placed(req, srv)
+        self.arrivals = held
 
     def _oldest_candidate(self, skip: set):
         """(server_or_None, request): the longest-waiting request that
         could be seated — the head of a per-server queue whose slot is
-        free, or the oldest global arrival not in ``skip`` (server
-        decided by the policy at seat time).  None when nothing is
-        seatable."""
+        free (and whose server is available), or the oldest global
+        arrival not in ``skip`` (server decided by the policy at seat
+        time).  None when nothing is seatable."""
         best = None
         for i in range(self.n):
-            if self._free_row(i) is not None and self.queues[i]:
+            if self.available[i] and self._free_row(i) is not None \
+                    and self.queues[i]:
                 r = self.queues[i][0]
                 key = (r.arrival_round, r.request_id)
                 if best is None or key < best[0]:
@@ -224,12 +258,12 @@ class RequestManager:
             srv, req = cand
             if srv is None:                 # global head: decide NOW
                 srv = self.placement.place(req, view) % self.n
-                if self._free_row(srv) is None:
-                    # the policy prefers waiting for this busy server
-                    # (e.g. goodput betting on a fast draft) — the
-                    # request keeps waiting, but younger candidates may
-                    # still seat on OTHER free slots: they cannot take
-                    # the slot this request is holding out for
+                if not self.available[srv] or self._free_row(srv) is None:
+                    # the policy prefers waiting for this busy (or still
+                    # down) server — the request keeps waiting, but
+                    # younger candidates may still seat on OTHER free
+                    # slots: they cannot take the slot this request is
+                    # holding out for
                     waiting.add(req.request_id)
                     continue
             if not fits_pool(req, view):
@@ -246,6 +280,74 @@ class RequestManager:
             view.note_admitted(req, srv)
             fresh.append(row)
         return sorted(fresh)
+
+    # -- server churn (faults/health integration) ----------------------------
+    def set_available(self, available: np.ndarray) -> None:
+        """Server availability mask (``HealthTracker.available()``): DOWN
+        servers take no new bindings and seat no requests until rejoin."""
+        available = np.asarray(available, bool)
+        if available.shape != (self.n,):
+            raise ValueError(f"availability mask must be bool[{self.n}], "
+                             f"got shape {available.shape}")
+        self.available = available
+
+    def evict_server(self, server: int) -> list[int]:
+        """EXACT request migration off a DOWN server: every in-flight
+        request (all lanes) returns to the GLOBAL arrival queue with its
+        committed tokens preserved (``generated`` is append-only, so
+        re-admission re-prefills from prompt + generated and the emitted
+        sequence continues exactly where it stopped); requests the server
+        had bound-but-unseated (static affinity queue) return too.
+        Returns the freed rows (the engine releases their paged KV
+        blocks).  A request that was already done is completed, not
+        re-queued.  The global queue is re-sorted by (arrival_round,
+        request_id) afterwards — ``_oldest_candidate`` peeks only the
+        deque head and relies on that age order."""
+        if not 0 <= server < self.n:
+            raise ValueError(f"server {server} out of range "
+                             f"(0..{self.n - 1})")
+        freed, moved = [], []
+        for row in range(server * self.lanes, (server + 1) * self.lanes):
+            req = self.active[row]
+            if req is None:
+                continue
+            self.active[row] = None
+            freed.append(row)
+            if req.done:
+                req.finish_round = self.round
+                self.completed.append(req)
+                continue
+            req.placed_server = None
+            req.placed_lane = None
+            req.migrations += 1
+            moved.append(req)
+        while self.queues[server]:
+            moved.append(self.queues[server].popleft())
+        if moved:
+            self.arrivals.extend(moved)
+            self.arrivals = deque(sorted(
+                self.arrivals, key=lambda r: (r.arrival_round,
+                                              r.request_id)))
+        return freed
+
+    def mark_lost(self, server: int) -> list[int]:
+        """No-mitigation crash model (``FaultPlan(migrate=False)``): the
+        server's seated requests lose their state with it and are flagged
+        ``lost`` — they stay seated (blocking their lanes, as an
+        unoperated deployment would) but report zero cap forever and can
+        never complete.  Bound-but-unseated requests keep waiting: they
+        had no server state to lose and seat again if the server rejoins.
+        Returns the lost rows."""
+        if not 0 <= server < self.n:
+            raise ValueError(f"server {server} out of range "
+                             f"(0..{self.n - 1})")
+        rows = []
+        for row in range(server * self.lanes, (server + 1) * self.lanes):
+            req = self.active[row]
+            if req is not None and not req.done and not req.lost:
+                req.lost = True
+                rows.append(row)
+        return rows
 
     # -- round bookkeeping ---------------------------------------------------
     def _age_queued(self) -> None:
@@ -290,8 +392,8 @@ class RequestManager:
         not be scheduled) — feeds the engine's per-lane caps, which the
         scheduler aggregates per server and the lane splitter divides."""
         return np.asarray(
-            [r.remaining if r is not None and not r.done else 0
-             for r in self.active], np.int32)
+            [r.remaining if r is not None and not r.done and not r.lost
+             else 0 for r in self.active], np.int32)
 
     def server_remaining(self) -> np.ndarray:
         """i32[N] remaining tokens per SERVER (lane caps summed) — the
@@ -321,6 +423,11 @@ class RequestManager:
             "completed": len(self.completed),
             "queued": len(queued),
             "active": sum(not r.done for r in live),
+            # churn accounting: total migrations across requests, and
+            # requests whose server crashed unmitigated (lost state,
+            # can never complete — always 0 when migration is on)
+            "migrations": sum(r.migrations for r in admitted + queued),
+            "requests_lost": sum(1 for r in live if r.lost),
             "mean_latency_rounds": float(np.mean(lat)) if lat else 0.0,
             "mean_queue_delay_rounds": float(np.mean(qd)) if qd else 0.0,
             "tokens_generated": sum(len(r.generated) for r in self.completed),

@@ -233,6 +233,6 @@ class TestBackendEquivalence:
                                   target_model=eng.target_model,
                                   n_servers=2, C=8, s_max=4, cache_len=64)
         assert inherit.attn_backend == "kernel"
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError, match="attn_backend"):
             GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=2,
                             C=8, s_max=4, attn_backend="cuda")
