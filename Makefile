@@ -38,8 +38,15 @@ churn-check:
 overlap-check:
 	PYTHONPATH=src python -m pytest -x -q tests/test_overlap.py tests/test_budget_latency.py
 
+# prefix-caching layer standalone: the PrefixIndex host map, refcount /
+# COW / attach primitives, the admission pre-check property sweep, the
+# chunk-write overflow regression, and the shared-prefix serving
+# equivalence matrix (jnp x kernel, sync x overlap, lanes 1-2)
+prefix-check:
+	PYTHONPATH=src python -m pytest -x -q tests/test_prefix_cache.py
+
 bench:
 	PYTHONPATH=src python -m benchmarks.run
 
 .PHONY: test docs-check kernels-check placement-check lanes-check \
-	churn-check overlap-check bench
+	churn-check overlap-check prefix-check bench

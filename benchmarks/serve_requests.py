@@ -49,6 +49,18 @@ max(receive_t, verify_{t-1}) + send) and measured wall-clock per round
 into the ``overlap`` section; it also asserts the retrace telemetry —
 no round phase compiles more than once per verify bucket.
 
+The PREFIX scenario (``--scenario prefix``, also part of the full run)
+measures refcounted prefix caching: a burst of requests that all share a
+long system prompt (>= 75% of each prompt) with short unique suffixes,
+served with ``prefix_cache=True`` vs the plain paged engine, plus a
+single-request admission microbench against a registered shared prefix.
+Sharing must cut the admission cost >= 2x (only the unique suffix is
+prefilled; the shared blocks attach by refcount) WITHOUT changing the
+accepted-token stream (the attached blocks hold bitwise identical K/V).
+Records admission us on/off, serve tokens / completions / Jain on/off
+and the index hit rate into the ``prefix_shared`` section of
+``BENCH_serve.json``.
+
 The CHURN scenario (``--scenario churn``, also part of the full run)
 drains a workload through a scripted adversary (mid-drain crash +
 rejoin, a 20x straggler window, an uplink-drop burst — see
@@ -94,6 +106,15 @@ PLACEMENTS = ("static", "jsq", "goodput")
 # so requests are short (a one-lane server idles between completions)
 HEAVY_K, HEAVY_ROUNDS = 80, 24
 HEAVY_LANES = (1, 2, 4)
+# prefix-sharing scenario: a long shared system prompt dominates every
+# prompt (shared fraction >= 75%) so admission cost is suffix-bound when
+# sharing is on; the serve burst mirrors the heavy scenario's cadence
+PREFIX_K, PREFIX_ROUNDS = 24, 48
+PREFIX_SYS_LEN, PREFIX_SUF_LEN = 96, 16          # serve workload prompts
+# admission microbench sizes: the prompt must be long enough that the
+# prefill chunk (quadratic attention) dominates fixed dispatch overhead
+PREFIX_ADMIT_SHARED, PREFIX_ADMIT_SUF = 1984, 32
+PREFIX_ADMIT_CACHE_LEN = 2048
 # churn scenario: mid-drain crash + straggler + uplink drops against the
 # mitigated engine (verify deadlines + health tracking + exact request
 # migration) vs the no-mitigation baseline (infinite deadline, crashes
@@ -314,6 +335,119 @@ def overlap_scenario(draft, target, dp, tp):
         >= section["sync"]["total_accepted_tokens"], section
     assert section["overlap"]["sim_total_time_s"] \
         < section["sync"]["sim_total_time_s"], section
+    return rows, section
+
+
+def _prefix_workload(seed: int = 9):
+    """PREFIX_K requests sharing one PREFIX_SYS_LEN-token system prompt
+    with short unique suffixes, bursting in over the first half of the
+    horizon — the retrieval/chat pattern prefix caching targets."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(1, VOCAB, size=PREFIX_SYS_LEN).astype(np.int32)
+    items, t = [], 0.0
+    for j in range(PREFIX_K):
+        t += rng.exponential(PREFIX_ROUNDS / (2.0 * PREFIX_K))
+        suffix = rng.integers(1, VOCAB, size=PREFIX_SUF_LEN)
+        req = Request(
+            prompt=np.concatenate([system, suffix]).astype(np.int32),
+            max_new_tokens=int(rng.integers(6, 12)))
+        items.append((int(t), j % N, req))
+    return items
+
+
+def _prefix_admission_us(draft, target, dp, tp, prefix_cache: bool) -> float:
+    """Median us to admit ONE request whose prompt shares a long
+    registered prefix (PREFIX_ADMIT_SHARED of PREFIX_ADMIT_SHARED +
+    PREFIX_ADMIT_SUF tokens).  With sharing on, only the suffix is
+    prefilled; off, the full prompt is."""
+    rng = np.random.default_rng(17)
+    shared = rng.integers(1, VOCAB, size=PREFIX_ADMIT_SHARED)
+    eng = GoodSpeedEngine(draft_model=draft, target_model=target,
+                          n_servers=4, C=12, s_max=6,
+                          cache_len=PREFIX_ADMIT_CACHE_LEN,
+                          paged_kv=True, kv_block_size=16,
+                          prefix_cache=prefix_cache)
+    state = eng.cold_start(jax.random.PRNGKey(0))
+    donor = np.concatenate(
+        [shared, rng.integers(1, VOCAB, size=PREFIX_ADMIT_SUF)]) \
+        .astype(np.int32)
+    state = eng._admit_rows(state, [0], {0: donor}, dp, tp)  # registers
+    times = []
+    for it in range(5):
+        prompt = np.concatenate(
+            [shared, rng.integers(1, VOCAB, size=PREFIX_ADMIT_SUF)]) \
+            .astype(np.int32)
+        t0 = time.perf_counter()
+        state = eng._admit_rows(state, [1], {1: prompt}, dp, tp)
+        jax.block_until_ready(jax.tree.leaves(
+            (state.target_cache, state.draft_cache)))
+        if it > 0:               # first call pays tracing/alloc warmup
+            times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def prefix_scenario(draft, target, dp, tp):
+    """(csv_rows, json_section): refcounted prefix caching on vs off.
+
+    Admission microbench: sharing must be >= 2x cheaper at a >= 75%
+    shared prefix (the chunk shrinks from the full prompt to the unique
+    suffix).  Serve burst: the accepted-token stream must be IDENTICAL
+    on vs off — sharing changes admission cost, never outputs."""
+    rows, section = [], {}
+    us = {tag: _prefix_admission_us(draft, target, dp, tp, on)
+          for tag, on in (("shared_on", True), ("shared_off", False))}
+    speedup = us["shared_off"] / max(us["shared_on"], 1e-9)
+    frac = PREFIX_ADMIT_SHARED / (PREFIX_ADMIT_SHARED + PREFIX_ADMIT_SUF)
+    assert speedup >= 2.0, \
+        f"prefix sharing speedup {speedup:.2f}x < 2x at {frac:.0%} shared"
+    serve = {}
+    for tag, on in (("on", True), ("off", False)):
+        eng = GoodSpeedEngine(draft_model=draft, target_model=target,
+                              n_servers=N, C=12, s_max=6, cache_len=256,
+                              paged_kv=True, kv_block_size=16,
+                              prefix_cache=on)
+        t0 = time.perf_counter()
+        rep = eng.serve_requests(jax.random.PRNGKey(15), _prefix_workload(),
+                                 dp, tp, rounds=PREFIX_ROUNDS)
+        wall = time.perf_counter() - t0
+        s = rep["summary"]
+        total_tokens, per_server, _, p95 = _drain_metrics(rep)
+        ix = eng._prefix_index["target"] if on else None
+        serve[tag] = {
+            "prefix_cache": on,
+            "total_accepted_tokens": total_tokens,
+            "completed": s["completed"],
+            "of_requests": PREFIX_K,
+            "jain_fairness": round(jain(per_server), 4),
+            "p95_queue_wait_rounds": round(p95, 1),
+            "round_latency_us": round(wall * 1e6 / max(1, s["rounds_run"]),
+                                      1),
+            "rounds_run": s["rounds_run"],
+            "index_hit_rate": round(ix.hits / max(1, ix.hits + ix.misses),
+                                    3) if on else None,
+        }
+        rows.append((f"prefix_{tag}_total_accepted_tokens",
+                     round(wall * 1e6 / max(1, s["rounds_run"]), 0),
+                     total_tokens))
+    # equivalence, not just non-regression: identical token stream
+    assert serve["on"]["total_accepted_tokens"] \
+        == serve["off"]["total_accepted_tokens"], serve
+    assert serve["on"]["completed"] == serve["off"]["completed"], serve
+    assert serve["on"]["jain_fairness"] == serve["off"]["jain_fairness"], \
+        serve
+    assert serve["on"]["index_hit_rate"] > 0.5, serve
+    rows.append(("prefix_admit_shared_on_us",
+                 round(us["shared_on"], 0), 0))
+    rows.append(("prefix_admit_shared_off_us",
+                 round(us["shared_off"], 0), 0))
+    rows.append(("prefix_admission_speedup_x", 0.0, round(speedup, 2)))
+    section.update({
+        "shared_fraction": round(frac, 3),
+        "admission_us": {"shared_on": round(us["shared_on"], 1),
+                         "shared_off": round(us["shared_off"], 1),
+                         "speedup_x": round(speedup, 2)},
+        "serve": serve,
+    })
     return rows, section
 
 
@@ -541,6 +675,8 @@ def run():
     rows.extend(heavy_rows)
     ov_rows, ov_json = overlap_scenario(draft, target, dp, tp)
     rows.extend(ov_rows)
+    prefix_rows, prefix_json = prefix_scenario(draft, target, dp, tp)
+    rows.extend(prefix_rows)
     churn_rows, churn_json = churn_scenario(draft, target, dp, tp)
     rows.extend(churn_rows)
     _merge_bench_json({
@@ -549,6 +685,7 @@ def run():
         "placement_skewed": skew_json,
         "lanes_heavy": heavy_json,
         "overlap": ov_json,
+        "prefix_shared": prefix_json,
         "churn": churn_json,
         "paged_decode_microbench": {
             f"capacity_{cap}": r for cap, r in microbench.items()
@@ -560,12 +697,14 @@ def run():
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--scenario",
-                    choices=("all", "skewed", "heavy", "overlap", "churn"),
+                    choices=("all", "skewed", "heavy", "overlap", "prefix",
+                             "churn"),
                     default="all",
                     help="'skewed' runs only the placement-policy sweep, "
                     "'heavy' only the draft-lane sweep, 'overlap' only "
-                    "the round-graph overlap comparison, 'churn' only the "
-                    "fault-injection mitigated-vs-baseline comparison; "
+                    "the round-graph overlap comparison, 'prefix' only "
+                    "the prefix-caching on/off comparison, 'churn' only "
+                    "the fault-injection mitigated-vs-baseline comparison; "
                     "each merges its section into BENCH_serve.json")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
@@ -578,6 +717,9 @@ def main(argv=None) -> None:
     elif args.scenario == "overlap":
         rows, section = overlap_scenario(*_models())
         _merge_bench_json({"overlap": section})
+    elif args.scenario == "prefix":
+        rows, section = prefix_scenario(*_models())
+        _merge_bench_json({"prefix_shared": section})
     elif args.scenario == "churn":
         rows, section = churn_scenario(*_models())
         _merge_bench_json({"churn": section})

@@ -141,7 +141,9 @@ class Model:
                 prefix_embeds: Optional[Array] = None,
                 enc_out: Optional[Array] = None,
                 cross_kv=None,
-                remat: bool = False) -> ForwardOutput:
+                remat: bool = False,
+                shared_blocks: Optional[Array] = None,
+                shared_lens: Optional[Array] = None) -> ForwardOutput:
         """tokens: i32[B, S].  mode: train | prefill | decode.
 
         prefix_embeds: [B, P, D] VLM patch embeddings, prepended (train and
@@ -181,7 +183,8 @@ class Model:
         x, cache, aux = apply_stack(
             params["stack"], cfg, x, positions, cache, mode,
             chunk_valid=chunk_valid, remat=remat, enc_out=enc_out,
-            cross_params=cross, cross_kv=cross_kv)
+            cross_params=cross, cross_kv=cross_kv,
+            shared_blocks=shared_blocks, shared_lens=shared_lens)
         x = apply_norm(params["final_norm"], x, cfg.norm_type)
         if cfg.tie_embeddings:
             logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["embedding"])

@@ -137,8 +137,13 @@ def _window_for(kind: str, cfg: ModelConfig) -> int:
 
 
 def _attend(params, kind, cfg: ModelConfig, x_norm, positions, cache, mode,
-            chunk_valid, causal=True):
-    """Attention sublayer in all modes; returns (ctx_out, new_cache)."""
+            chunk_valid, causal=True, shared_blocks=None, shared_lens=None):
+    """Attention sublayer in all modes; returns (ctx_out, new_cache).
+
+    ``shared_blocks``/``shared_lens`` (prefill + paged cache only) attach
+    an already-cached shared prompt prefix per row; the chunk then holds
+    only each row's unique suffix and ``positions`` carries the suffix's
+    absolute positions (see ``paged_write_prefill``)."""
     window = _window_for(kind, cfg)
     ring = _is_ring(kind, cfg)
     b, s, _ = x_norm.shape
@@ -157,7 +162,8 @@ def _attend(params, kind, cfg: ModelConfig, x_norm, positions, cache, mode,
             lengths = chunk_valid.sum(-1).astype(jnp.int32) if chunk_valid \
                 is not None else jnp.full((b,), s, jnp.int32)
             cache = write_prefill(cache, (chunk.c_kv, chunk.k_pe), lengths,
-                                  ring=ring)
+                                  ring=ring, shared_blocks=shared_blocks,
+                                  shared_lens=shared_lens)
         else:
             cache = write_chunk(cache, (chunk.c_kv, chunk.k_pe), chunk_valid,
                                 ring=ring)
@@ -182,9 +188,14 @@ def _attend(params, kind, cfg: ModelConfig, x_norm, positions, cache, mode,
     if mode == "prefill":
         lengths = chunk_valid.sum(-1).astype(jnp.int32) if chunk_valid \
             is not None else jnp.full((b,), s, jnp.int32)
-        cache = write_prefill(cache, (k, v), lengths, ring=ring)
+        cache = write_prefill(cache, (k, v), lengths, ring=ring,
+                              shared_blocks=shared_blocks,
+                              shared_lens=shared_lens)
         if cfg.attn_backend == "kernel" and not ring \
-                and cfg.logit_softcap == 0.0:
+                and cfg.logit_softcap == 0.0 and shared_blocks is None:
+            # (with an attached shared prefix the keys a query needs are
+            # NOT all inside the chunk, so the chunk-only kernel is
+            # wrong; shared prefill reads the just-written cache instead)
             # kernel prefill: chunk-causal self-attention over (q, k, v)
             # directly.  Valid rows are left-aligned prefixes, so every
             # key a valid query may attend (kv_pos <= q_pos) is inside
@@ -207,14 +218,17 @@ def _attend(params, kind, cfg: ModelConfig, x_norm, positions, cache, mode,
 def apply_block(params, kind: str, cfg: ModelConfig, x: Array,
                 positions: Array, cache, mode: str,
                 chunk_valid: Optional[Array] = None, causal: bool = True,
-                xattn_params=None, enc_out=None, cross_kv=None):
+                xattn_params=None, enc_out=None, cross_kv=None,
+                shared_blocks=None, shared_lens=None):
     """Returns (x_out, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = apply_norm(params["norm1"], x, cfg.norm_type)
 
     if kind in ATTN_KINDS:
         attn_out, cache = _attend(params, kind, cfg, h, positions, cache,
-                                  mode, chunk_valid, causal=causal)
+                                  mode, chunk_valid, causal=causal,
+                                  shared_blocks=shared_blocks,
+                                  shared_lens=shared_lens)
         if cfg.parallel_block and cfg.d_ff > 0:
             mlp_out = apply_mlp(params["mlp"], h, cfg.mlp_act) \
                 if "mlp" in params else 0.0
@@ -313,9 +327,13 @@ def init_stack_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
 def apply_stack(params, cfg: ModelConfig, x: Array, positions: Array,
                 cache, mode: str, chunk_valid: Optional[Array] = None,
                 remat: bool = False, causal: bool = True, enc_out=None,
-                cross_params=None, cross_kv=None):
+                cross_params=None, cross_kv=None, shared_blocks=None,
+                shared_lens=None):
     """Run the whole stack.  cache may be None (train).  Returns
-    (x, new_cache, total_aux)."""
+    (x, new_cache, total_aux).  ``shared_blocks``/``shared_lens`` are
+    loop-invariant (like ``chunk_valid``): the deterministic first-free
+    allocator gives every layer the identical block table, so one set of
+    shared physical block ids is valid for all layers."""
     pattern, groups, rest = stack_layout(cfg)
     aux_total = jnp.zeros((), jnp.float32)
 
@@ -330,7 +348,9 @@ def apply_stack(params, cfg: ModelConfig, x: Array, positions: Array,
             x, c_out, a = apply_block(slot_params[f"slot{i}"], kind, cfg, x,
                                       positions, c_in, mode, chunk_valid,
                                       causal=causal, xattn_params=xp,
-                                      enc_out=enc_out, cross_kv=ckv)
+                                      enc_out=enc_out, cross_kv=ckv,
+                                      shared_blocks=shared_blocks,
+                                      shared_lens=shared_lens)
             new_caches[f"slot{i}"] = c_out
             aux = aux + a
         return (x, aux), (new_caches if slot_caches is not None else 0)
@@ -370,7 +390,9 @@ def apply_stack(params, cfg: ModelConfig, x: Array, positions: Array,
         x, c_out, a = apply_block(params["rest"][f"layer{j}"], kind, cfg, x,
                                   positions, c_in, mode, chunk_valid,
                                   causal=causal, xattn_params=xp,
-                                  enc_out=enc_out, cross_kv=ckv)
+                                  enc_out=enc_out, cross_kv=ckv,
+                                  shared_blocks=shared_blocks,
+                                  shared_lens=shared_lens)
         new_rest[f"layer{j}"] = c_out
         aux_total = aux_total + a
 

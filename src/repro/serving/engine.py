@@ -88,13 +88,15 @@ from repro.core.speculative import verify
 from repro.core.utility import UtilitySpec
 from repro.models import Model
 from repro.serving.faults import FaultPlan, HealthTracker, RoundFaults
-from repro.serving.kv_cache import (AttnCache, MLACache, PAGED_TYPES,
-                                    PoolExhaustedError, blocks_for,
-                                    discard_tail, paged_merge_rows,
-                                    paged_over_groups, paged_reset_rows,
-                                    paged_select_rows, reset_rows, rollback,
-                                    snapshot_alloc_flag)
+from repro.serving.kv_cache import (AttnCache, CacheOverflowError, MLACache,
+                                    PAGED_TYPES, PoolExhaustedError,
+                                    StickyFlags, blocks_for, discard_tail,
+                                    paged_merge_rows, paged_over_groups,
+                                    paged_reset_rows, paged_select_rows,
+                                    reset_rows, rollback,
+                                    snapshot_sticky_flags)
 from repro.serving.placement import PlacementView, make_placement
+from repro.serving.prefix import PrefixIndex
 from repro.serving.request import Request, RequestManager
 
 Array = jnp.ndarray
@@ -122,30 +124,32 @@ def _cache_rollback(cache, keep_pos: Array):
                         is_leaf=lambda c: isinstance(c, _ROLLBACK_TYPES))
 
 
-def _stack_alloc_flag(cache) -> Array:
-    """Traced ``alloc_failed`` snapshot of a stack cache's (first) paged
-    leaf — the draft-tail snapshot the one-round-late discard restores
-    (``kv_cache.snapshot_alloc_flag``).  All paged leaves share one
-    allocator trajectory; False scalar for static caches (nothing
-    sticky to restore)."""
+def _stack_sticky_flags(cache) -> StickyFlags:
+    """Traced sticky-flag snapshot (``alloc_failed`` + per-row
+    ``overflowed``) of a stack cache's first attention leaf — the
+    draft-tail snapshot the one-round-late discard restores
+    (``kv_cache.snapshot_sticky_flags``).  One leaf is representative:
+    overlap mode asserts pure-attention stacks, where every leaf follows
+    the identical write trajectory."""
     for leaf in jax.tree.leaves(
-            cache, is_leaf=lambda c: isinstance(c, PAGED_TYPES)):
-        if isinstance(leaf, PAGED_TYPES):
-            return snapshot_alloc_flag(leaf)
-    return jnp.zeros((), bool)
+            cache, is_leaf=lambda c: isinstance(c, _ROLLBACK_TYPES)):
+        if isinstance(leaf, _ROLLBACK_TYPES):
+            return snapshot_sticky_flags(leaf)
+    return StickyFlags(alloc_failed=None, overflowed=jnp.zeros((0,), bool))
 
 
-def _cache_discard_tail(cache, keep_pos: Array, alloc_failed: Array):
+def _cache_discard_tail(cache, keep_pos: Array, flags: StickyFlags):
     """One-round-late rollback of the whole stack cache: every attention
-    leaf discards slots >= keep_pos (``kv_cache.discard_tail``) and paged
-    leaves additionally restore the pre-ahead ``alloc_failed`` snapshot —
-    a pool exhaustion caused only by discarded ahead-writes must not
-    poison the sticky health flag."""
+    leaf discards slots >= keep_pos (``kv_cache.discard_tail``) and
+    restores the pre-ahead sticky snapshots — a pool exhaustion or row
+    overflow caused only by discarded ahead-writes must not poison the
+    sticky health flags."""
     def fix(c):
         if isinstance(c, PAGED_TYPES):
-            return discard_tail(c, keep_pos, alloc_failed)
+            return discard_tail(c, keep_pos, flags.alloc_failed,
+                                flags.overflowed)
         if isinstance(c, _ROLLBACK_TYPES):
-            return discard_tail(c, keep_pos)
+            return discard_tail(c, keep_pos, overflowed=flags.overflowed)
         return c
     return jax.tree.map(fix, cache,
                         is_leaf=lambda c: isinstance(c, _ROLLBACK_TYPES))
@@ -180,6 +184,41 @@ def _paged_alloc_state(cache):
             return (bs, leaf.free[0] if stacked else leaf.free,
                     leaf.alloc_failed[0] if stacked else leaf.alloc_failed)
     return None
+
+
+def _paged_host_fields(cache):
+    """Host (numpy) copies of the first paged leaf's small per-row fields:
+    ``(block_size, table i32[B, M], refcount i32[P], overflowed bool[B])``
+    — never the pool buffers.  Backs every-round block accounting, the
+    overflow health check and the prefix-index bookkeeping.  None if the
+    stack is unpaged."""
+    for leaf in jax.tree.leaves(
+            cache, is_leaf=lambda c: isinstance(c, PAGED_TYPES)):
+        if isinstance(leaf, PAGED_TYPES):
+            stacked = leaf.next_pos.ndim == 2
+            pool = leaf.kpool if hasattr(leaf, "kpool") else leaf.ckv_pool
+            bs = pool.shape[2] if stacked else pool.shape[1]
+            sel = (lambda a: a[0]) if stacked else (lambda a: a)
+            return (bs, np.asarray(sel(leaf.table)),
+                    np.asarray(sel(leaf.refcount)),
+                    np.asarray(sel(leaf.overflowed)))
+    return None
+
+
+def _stack_overflow_rows(cache):
+    """bool[B] OR of every attention leaf's sticky ``overflowed`` flag (a
+    ring leaf never sets it; full-attention leaves share one trajectory,
+    but OR-ing is correct for any mix).  None when the stack has no
+    attention caches."""
+    acc = None
+    for leaf in jax.tree.leaves(
+            cache, is_leaf=lambda c: isinstance(c, _ROLLBACK_TYPES)):
+        if isinstance(leaf, _ROLLBACK_TYPES):
+            o = leaf.overflowed
+            if o.ndim == 2:                 # scan-group stacking [G, B]
+                o = o.any(axis=0)
+            acc = o if acc is None else acc | o
+    return None if acc is None else np.asarray(acc)
 
 
 
@@ -336,6 +375,17 @@ class GoodSpeedEngine:
     # / rng — which makes request migration byte-equivalent to an
     # uninterrupted run (the churn property tests pin this).
     greedy: bool = False
+    # vLLM-style prefix caching (requires paged_kv + pure-attention
+    # stacks): a host-side per-model content index maps each FULL
+    # block_size-token prompt-prefix block to the live pool block already
+    # holding its K/V, so admission ATTACHES the shared prefix (refcount
+    # bump, zero prefill compute) and prefills only each request's unique
+    # suffix — admission cost scales with the unique-suffix length
+    # instead of the full prompt.  Accepted tokens are identical to
+    # prefix_cache=False (the shared blocks hold bitwise the same K/V the
+    # row's own prefill would have written); OFF by default so every
+    # recorded golden trace stays byte-identical.
+    prefix_cache: bool = False
 
     def __post_init__(self):
         # serving-surface validation: misconfigurations fail HERE with a
@@ -400,6 +450,40 @@ class GoodSpeedEngine:
                            _make_prefill(self.target_model))
         object.__setattr__(self, "_prefill_fn_draft",
                            _make_prefill(self.draft_model))
+        # prefix caching: shared-suffix admission prefill — the chunk
+        # holds only each row's unique suffix at explicit absolute
+        # positions, with the shared prompt prefix attached by physical
+        # block id (kv_cache.paged_write_prefill).  Separate jits from
+        # the plain prefill so the feature-off path never retraces.
+        if self.prefix_cache:
+            if not self.paged_kv:
+                raise ValueError("prefix_cache=True requires paged_kv=True"
+                                 " (sharing lives in the block pool)")
+            if not (_is_rollbackable(self.draft_model.cfg)
+                    and _is_rollbackable(self.target_model.cfg)):
+                raise ValueError(
+                    "prefix_cache=True requires pure-attention stacks for "
+                    "both models: ring/recurrent layers hold state outside "
+                    "the paged pool, so an attached prefix would be "
+                    "invisible to them")
+
+        def _make_prefill_shared(model):
+            def f(params, toks, cache, chunk_valid, positions,
+                  shared_blocks, shared_lens):
+                return model.forward(params, toks, mode="prefill",
+                                     cache=cache, chunk_valid=chunk_valid,
+                                     positions=positions,
+                                     shared_blocks=shared_blocks,
+                                     shared_lens=shared_lens)
+            return jax.jit(f, donate_argnums=(2,))
+        object.__setattr__(self, "_prefill_shared_fn_target",
+                           _make_prefill_shared(self.target_model))
+        object.__setattr__(self, "_prefill_shared_fn_draft",
+                           _make_prefill_shared(self.draft_model))
+        # host-side content index per MODEL (draft and target pools hold
+        # different K/V and follow different allocation trajectories)
+        object.__setattr__(self, "_prefix_index",
+                           {"target": PrefixIndex(), "draft": PrefixIndex()})
 
     @property
     def n_rows(self) -> int:
@@ -474,6 +558,8 @@ class GoodSpeedEngine:
         ``serve_requests`` starts here: every row is masked out until its
         first admission re-prefills it, so prefilling dummy prompts would
         be wasted compute."""
+        for index in self._prefix_index.values():
+            index.clear()                  # fresh pools: no live blocks
         b = self.n_rows
         return EngineState(
             target_cache=self._fresh_cache(self.target_model, b),
@@ -580,11 +666,14 @@ class GoodSpeedEngine:
                                      is_leaf=leaf)}
 
     def _check_pool_health(self, state: EngineState) -> None:
-        """Raise if a decode/verify write was silently dropped because the
-        pool ran dry mid-round (sticky ``alloc_failed``) — the cache is
-        missing K/V and generation is no longer trustworthy.  Only
-        meaningful for oversubscribed pools; the default sizing can never
-        trip it."""
+        """Raise if a round silently dropped cache writes: pool
+        exhaustion mid-round (sticky ``alloc_failed``, paged only) or a
+        row running past its logical capacity (sticky per-row
+        ``overflowed``, any attention cache) — either way the cache is
+        missing K/V and those rows' generation is no longer trustworthy.
+        The admission-time capacity guard makes overflow unreachable in
+        ``serve_requests``; the fixed-round ``serve`` loop has no budget
+        bound and relies on this check."""
         for name, cache in (("target", state.target_cache),
                             ("draft", state.draft_cache)):
             alloc = _paged_alloc_state(cache)
@@ -593,6 +682,15 @@ class GoodSpeedEngine:
                     f"{name} KV pool exhausted during a serving round: a "
                     f"decode/verify write needed a block with none free — "
                     f"grow kv_num_blocks or admit less concurrent work")
+            over = _stack_overflow_rows(cache)
+            if over is not None and over.any():
+                bad = np.nonzero(over)[0].tolist()
+                raise CacheOverflowError(
+                    f"{name} cache row(s) {bad} ran past logical capacity "
+                    f"(cache_len={self.cache_len}): a chunk write past the "
+                    f"last slot was dropped, so those rows' K/V is "
+                    f"incomplete — grow cache_len or bound the request "
+                    f"with a generation budget")
 
     def _release_rows(self, state: EngineState, rows: list[int]
                       ) -> EngineState:
@@ -600,10 +698,30 @@ class GoodSpeedEngine:
         queued) so admissions on OTHER servers can claim them — without
         this, an undersized pool could refuse an admission while an idle
         row sits on freed-able blocks.  Paged leaves only; static caches
-        need no release (masking already hides stale rows)."""
+        need no release (masking already hides stale rows).
+
+        Prefix-index upkeep: a released block whose refcount drops to 0
+        may be reallocated by any later write, so its index entry is
+        evicted HERE — the single chokepoint for non-admission frees
+        (rollback can never free a registered full-prompt block: it only
+        drops blocks past the write frontier)."""
         mask = np.zeros((self.n_rows,), bool)
         mask[list(rows)] = True
         mask_j = jnp.asarray(mask)
+        if self.prefix_cache:
+            for name, cache in (("target", state.target_cache),
+                                ("draft", state.draft_cache)):
+                fields = _paged_host_fields(cache)
+                if fields is None:
+                    continue
+                _, table, ref, _ = fields
+                dec: dict[int, int] = {}
+                for i in rows:
+                    for blk in table[i]:
+                        if blk >= 0:
+                            dec[int(blk)] = dec.get(int(blk), 0) + 1
+                self._prefix_index[name].evict_blocks(
+                    [blk for blk, d in dec.items() if ref[blk] - d <= 0])
 
         def fix(c):
             if isinstance(c, PAGED_TYPES):
@@ -621,23 +739,89 @@ class GoodSpeedEngine:
         for the new prompts, and prefill a batch of ONLY the admitted rows
         into the shared pools.  Raises ``PoolExhaustedError`` when the free
         list cannot hold the new prompts (clean admission error instead of
-        silently dropped writes)."""
+        silently dropped writes).
+
+        With ``prefix_cache`` the per-model host index is consulted
+        first: each row's longest already-cached full-block prompt prefix
+        (capped at the min across the two models, so ONE suffix chunk
+        serves both prefills) is ATTACHED by physical block id — refcount
+        bump, no prefill compute — and only the unique suffix is fed
+        through the model at its true absolute positions.  Index
+        staleness is handled here for admission-triggered frees: entries
+        whose blocks this admission's row resets would free are evicted
+        unless the same admission re-attaches them (attach happens before
+        any suffix allocation inside ``paged_write_prefill``, so a
+        re-pinned block is never reallocated)."""
         rows = sorted(rows)
         k = len(rows)
         row_prompts = [np.asarray(prompts[i], np.int32) for i in rows]
-        maxlen = max(len(p) for p in row_prompts)
-        toks = np.zeros((k, maxlen), np.int32)
-        valid = np.zeros((k, maxlen), bool)
-        for j, p in enumerate(row_prompts):
-            toks[j, :len(p)] = p
-            valid[j, :len(p)] = True
-        toks_j = jnp.asarray(toks)
-        lengths = jnp.asarray([len(p) for p in row_prompts], jnp.int32)
-        pend_idx = jnp.maximum(lengths - 1, 0)
-        feed_valid = jnp.asarray(valid) \
-            & (jnp.arange(maxlen)[None, :] < pend_idx[:, None])
         idx = jnp.asarray(rows, jnp.int32)
         feed_lens = [max(0, len(p) - 1) for p in row_prompts]
+        feeds = [p[:fl] for p, fl in zip(row_prompts, feed_lens)]
+        bs_cfg = self.kv_block_size
+
+        # ---- prefix lookup + index upkeep (host side) -------------------
+        shared_counts = [0] * k
+        matches: dict = {}
+        if self.prefix_cache:
+            raw = {}
+            host = {}
+            for name, cache in (("target", state.target_cache),
+                                ("draft", state.draft_cache)):
+                fields = _paged_host_fields(cache)
+                host[name] = fields
+                index = self._prefix_index[name]
+                # free blocks may have been reallocated by any later
+                # write — their entries are stale the moment they freed
+                index.evict_free(fields[2])
+                raw[name] = [index.match(f, bs_cfg) for f in feeds]
+            shared_counts = [min(len(raw["target"][j]), len(raw["draft"][j]))
+                             for j in range(k)]
+            for name in ("target", "draft"):
+                _, table, ref, _ = host[name]
+                # simulate this admission's own row resets: an entry whose
+                # block they free dies UNLESS this admission re-attaches it
+                ref_after = ref.astype(np.int64).copy()
+                for i in rows:
+                    for blk in table[i]:
+                        if blk >= 0:
+                            ref_after[blk] -= 1
+                attached = {b for j in range(k)
+                            for b in raw[name][j][:shared_counts[j]]}
+                matches[name] = ([raw[name][j][:shared_counts[j]]
+                                  for j in range(k)], ref_after, attached)
+                self._prefix_index[name].evict_blocks(
+                    [b for b in list(self._prefix_index[name].by_block)
+                     if ref_after[b] <= 0 and b not in attached])
+        shared_lens_np = np.asarray([c * bs_cfg for c in shared_counts],
+                                    np.int32)
+        use_shared = any(shared_counts)
+
+        # ---- feed chunk: full prompts, or unique suffixes under sharing
+        lengths = jnp.asarray([len(p) for p in row_prompts], jnp.int32)
+        pend_idx = jnp.maximum(lengths - 1, 0)
+        if not use_shared:
+            maxlen = max(len(p) for p in row_prompts)
+            toks = np.zeros((k, maxlen), np.int32)
+            valid = np.zeros((k, maxlen), bool)
+            for j, p in enumerate(row_prompts):
+                toks[j, :len(p)] = p
+                valid[j, :len(p)] = True
+            toks_j = jnp.asarray(toks)
+            feed_valid = jnp.asarray(valid) \
+                & (jnp.arange(maxlen)[None, :] < pend_idx[:, None])
+        else:
+            suf_lens = [fl - sl for fl, sl in zip(feed_lens, shared_lens_np)]
+            maxlen = max(1, max(suf_lens))   # all-shared rows: 1 dead token
+            toks = np.zeros((k, maxlen), np.int32)
+            valid = np.zeros((k, maxlen), bool)
+            for j, (f, sl) in enumerate(zip(feeds, shared_lens_np)):
+                toks[j, :suf_lens[j]] = f[sl:]
+                valid[j, :suf_lens[j]] = True
+            toks_j = jnp.asarray(toks)
+            feed_valid = jnp.asarray(valid)
+            shared_lens_j = jnp.asarray(shared_lens_np)
+            positions_j = shared_lens_j[:, None] + jnp.arange(maxlen)[None, :]
 
         # Validate BOTH pools before any prefill runs: the prefill donates
         # the sub-cache, whose pool buffers alias the live state, so a
@@ -656,7 +840,16 @@ class GoodSpeedEngine:
                         f"{name} KV pool: a write was dropped in an "
                         f"earlier round (sticky alloc_failed); the cache "
                         f"is not trustworthy — grow kv_num_blocks")
-                need = sum(blocks_for(fl, bs) for fl in feed_lens)
+                if use_shared:
+                    # per row: blocks_for(feed) - shared = blocks_for(suffix)
+                    # (sharing is whole-block), plus one consumed free
+                    # block per DISTINCT attached block that this
+                    # admission's own resets left free (re-pin)
+                    _, ref_after, attached = matches[name]
+                    need = sum(blocks_for(sl_, bs) for sl_ in suf_lens) \
+                        + sum(1 for b in attached if ref_after[b] <= 0)
+                else:
+                    need = sum(blocks_for(fl, bs) for fl in feed_lens)
                 have = int(free.sum())
                 if need > have:
                     raise PoolExhaustedError(
@@ -666,21 +859,39 @@ class GoodSpeedEngine:
             subs[name] = sub
 
         new_caches = {}
-        for name, cache, params, prefill_fn in (
+        for name, cache, params, prefill_fn, shared_fn in (
                 ("target", state.target_cache, target_params,
-                 self._prefill_fn_target),
+                 self._prefill_fn_target, self._prefill_shared_fn_target),
                 ("draft", state.draft_cache, draft_params,
-                 self._prefill_fn_draft)):
-            out = prefill_fn(params, toks_j, subs[name], feed_valid)
+                 self._prefill_fn_draft, self._prefill_shared_fn_draft)):
+            if use_shared:
+                mrows = matches[name][0]
+                ms = max(1, max(len(mr) for mr in mrows))
+                sb = np.full((k, ms), -1, np.int32)
+                for j, mr in enumerate(mrows):
+                    sb[j, :len(mr)] = mr
+                out = shared_fn(params, toks_j, subs[name], feed_valid,
+                                positions_j, jnp.asarray(sb), shared_lens_j)
+            else:
+                out = prefill_fn(params, toks_j, subs[name], feed_valid)
             alloc = _paged_alloc_state(out.cache)
             # defensive only: the pre-checks above make this unreachable
             # (prefill allocates exactly the pre-counted prompt blocks)
             assert alloc is None or not bool(alloc[2]), \
                 f"{name} pool allocation failed despite free-count check"
+            if self.prefix_cache:
+                # register every FULL feed block of the fresh rows so the
+                # next admission can share them (first writer wins)
+                fields = _paged_host_fields(out.cache)
+                for j, f in enumerate(feeds):
+                    nfull = len(f) // bs_cfg
+                    if nfull:
+                        self._prefix_index[name].register(
+                            f, fields[1][j, :nfull], bs_cfg)
             new_caches[name] = self._merge_admit(cache, out.cache, idx)
 
-        pending = jnp.take_along_axis(toks_j, pend_idx[:, None],
-                                      axis=1)[:, 0]
+        pending = jnp.asarray([int(p[-1]) if len(p) else 0
+                               for p in row_prompts], jnp.int32)
         return state._replace(
             target_cache=new_caches["target"],
             draft_cache=new_caches["draft"],
@@ -845,7 +1056,7 @@ class GoodSpeedEngine:
         accepted; its value is the modeled distributed-timing win
         (LatencyModel.overlapped_round_time) and keeping the device busy
         while the host reconciles.  Returns (polluted cache, ahead
-        budgets, pre-ahead alloc_failed snapshot)."""
+        budgets, pre-ahead sticky-flag snapshot)."""
         # mirror the NEXT round's key split so the ahead consumes the
         # same draft/sched streams the real round t+1 will draw
         _, k_draft, _, k_sched, _ = jax.random.split(key, 5)
@@ -857,9 +1068,10 @@ class GoodSpeedEngine:
                                lane_cap.reshape(n, lanes), self.s_max,
                                key=k_sched)
         S_ahead = jnp.where(live, jnp.minimum(S_ahead, self.s_bucket), 0)
-        # draft-tail snapshot: the sticky pool flag the deferred discard
-        # restores (ahead-writes may exhaust a pool the real round won't)
-        flag = _stack_alloc_flag(dcache)
+        # draft-tail snapshot: the sticky flags the deferred discard
+        # restores (ahead-writes may exhaust a pool, or run a row past
+        # capacity, in ways the real round won't)
+        flag = _stack_sticky_flags(dcache)
         root = jnp.take_along_axis(
             toks, jnp.maximum(S - 1, 0)[:, None], axis=1)[:, 0]
         vmask_d = self._vocab_mask(self.draft_model.cfg)
@@ -873,7 +1085,7 @@ class GoodSpeedEngine:
                          pending: Array, length: Array, prev_S: Array,
                          toks: Array, S: Array, active: Array, v: VerifyOut,
                          k_jit: Array, key: Array, deferred: bool,
-                         saved_flag: Optional[Array] = None,
+                         saved_flag: Optional[StickyFlags] = None,
                          faults: Optional[RoundFaults] = None):
         """``reconcile``: round-graph phase 3 — apply acceptance/rollback
         to both caches, update the estimators (Eqs. 3-4), price the round
@@ -1126,6 +1338,29 @@ class GoodSpeedEngine:
         return out.cache
 
     # ------------------------------------------------------------------
+    def _refresh_kv_blocks(self, state: EngineState,
+                           mgr: RequestManager) -> None:
+        """Recompute every seated request's ``kv_blocks`` from the LIVE
+        block table (bugfix: the old admission-time snapshot never moved
+        as verify chunks allocated blocks and rollback/retirement freed
+        them, so ``stats()['kv_blocks_active']`` drifted from the true
+        free list).  Under prefix sharing a block referenced r times
+        contributes 1/r to each holder — attributed shares sum exactly to
+        the allocated block count, so at the call point (right after
+        admissions, when every allocated block belongs to a seated
+        request) ``kv_blocks_active == P - free_count`` holds."""
+        fields = _paged_host_fields(state.target_cache)
+        if fields is None:
+            return
+        _, table, ref, _ = fields
+        for i in range(self.n_rows):
+            req = mgr.active[i]
+            if req is None:
+                continue
+            req.kv_blocks = float(sum(1.0 / ref[b] for b in table[i]
+                                      if b >= 0 and ref[b] > 0))
+
+    # ------------------------------------------------------------------
     def _placement_view(self, state: EngineState, mgr: RequestManager
                         ) -> PlacementView:
         """Live per-server view the placement policy decides against:
@@ -1190,6 +1425,10 @@ class GoodSpeedEngine:
         history = []
         for _ in range(rounds):
             state, stats = self.run_round(state, draft_params, target_params)
+            # unlike serve_requests, nothing bounds a row's growth here —
+            # a row that outruns cache_len must fail loudly, not decode on
+            # silently truncated K/V
+            self._check_pool_health(state)
             history.append(stats)
         return history
 
@@ -1329,12 +1568,12 @@ class GoodSpeedEngine:
                     state, fresh, {i: ctx(mgr.active[i]) for i in fresh},
                     draft_params, target_params,
                     budgets={i: mgr.active[i].remaining for i in fresh})
-                if self.paged_kv:
-                    # per-request block accounting: blocks the admission
-                    # prefill allocated (context minus the pending token)
-                    for i in fresh:
-                        mgr.active[i].kv_blocks = blocks_for(
-                            len(ctx(mgr.active[i])) - 1, self.kv_block_size)
+            if self.paged_kv:
+                # per-request block accounting from the live table — at
+                # this point (post-release, post-admission) every
+                # allocated block belongs to a seated request, so the
+                # attributed shares sum to exactly P - free_count
+                self._refresh_kv_blocks(state, mgr)
             if mgr.idle() and next_arrival >= len(sched):
                 break                      # workload drained
             caps = mgr.remaining_caps()

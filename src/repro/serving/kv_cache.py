@@ -15,13 +15,21 @@ cache to write one token.
 
 Paged caches (``PagedAttnCache`` / ``PagedMLACache``) replace the per-row
 [L, ...] storage with a shared block pool ``[P, block_size, ...]`` plus a
-per-row block table ``i32[B, M]`` and a free mask ``bool[P]``: retiring a
-request frees its blocks; admitting a new one allocates only the blocks
-its prompt needs, so admission cost is independent of the batch size.
-Writes allocate blocks from the free list in-graph (deterministic
-first-free order) and scatter into the pool; attention gathers a logical
-[B, M*block_size, ...] view through the table.  The free-list invariants
-are documented (and property-tested) in docs/KV_CACHE.md.
+per-row block table ``i32[B, M]`` and a per-block reference count
+``i32[P]`` (free ⟺ refcount 0): retiring a request decrements its blocks'
+refcounts; admitting a new one allocates only the blocks its prompt
+needs, so admission cost is independent of the batch size.  Writes
+allocate blocks from the free list in-graph (deterministic first-free
+order) and scatter into the pool; attention gathers a logical
+[B, M*block_size, ...] view through the table.
+
+Refcounts > 1 are how PREFIX SHARING works: several rows' tables point at
+one physical block holding their common prompt prefix
+(``paged_write_prefill``'s ``shared_blocks`` argument attaches existing
+blocks instead of allocating), and a write landing in a shared block
+copy-on-writes it first (``paged_write_chunk``) so no row can clobber
+another row's K/V.  The refcount/COW invariants are documented (and
+property-tested) in docs/KV_CACHE.md.
 """
 from __future__ import annotations
 
@@ -38,6 +46,7 @@ class AttnCache(NamedTuple):
     v: Array         # [B, L, KV, hd]
     pos_arr: Array   # i32[B, L] absolute position stored in each slot, -1 empty
     next_pos: Array  # i32[B] next absolute position to write
+    overflowed: Array  # bool[B] sticky: a write past slot L was dropped
 
 
 class MLACache(NamedTuple):
@@ -45,6 +54,7 @@ class MLACache(NamedTuple):
     kpe: Array       # [B, L, rope]  decoupled rope key
     pos_arr: Array
     next_pos: Array
+    overflowed: Array
 
 
 class PagedAttnCache(NamedTuple):
@@ -52,18 +62,28 @@ class PagedAttnCache(NamedTuple):
 
     Logical slot l of row b lives at physical pool slot
     ``table[b, l // bs] * bs + l % bs`` (bs = block_size = kpool.shape[1]).
-    ``table`` entries are -1 until a block is allocated; ``free[p]`` marks
-    pool block p as unallocated.  ``alloc_failed`` is a sticky scalar set
-    when a write needed a block and the pool was exhausted (the write is
-    dropped); hosts check it after admission/prefill.
+    ``table`` entries are -1 until a block is allocated; ``refcount[p]``
+    counts the table cells referencing pool block p (0 = free; > 1 = the
+    block is SHARED between rows via prefix caching and is copy-on-write).
+    ``alloc_failed`` is a sticky scalar set when a write needed a block
+    and the pool was exhausted (the write is dropped); ``overflowed`` is
+    the per-row analogue for writes past the row's logical capacity.
+    Hosts check both after admission/prefill and every serving round.
     """
     kpool: Array         # [P, bs, KV, hd]
     vpool: Array         # [P, bs, KV, hd]
     table: Array         # i32[B, M]  physical block per logical block, -1
-    free: Array          # bool[P]    block unallocated
+    refcount: Array      # i32[P]     table cells referencing each block
     pos_arr: Array       # i32[B, M*bs] absolute position per slot, -1 empty
     next_pos: Array      # i32[B]
     alloc_failed: Array  # bool[]     sticky pool-exhaustion flag
+    overflowed: Array    # bool[B]    sticky row-capacity-overflow flag
+
+    @property
+    def free(self) -> Array:
+        """bool[P] free mask (refcount 0) — the allocator's search order
+        and every host-side free count read this view."""
+        return self.refcount == 0
 
 
 class PagedMLACache(NamedTuple):
@@ -72,10 +92,15 @@ class PagedMLACache(NamedTuple):
     ckv_pool: Array      # [P, bs, r]
     kpe_pool: Array      # [P, bs, rope]
     table: Array
-    free: Array
+    refcount: Array
     pos_arr: Array
     next_pos: Array
     alloc_failed: Array
+    overflowed: Array
+
+    @property
+    def free(self) -> Array:
+        return self.refcount == 0
 
 
 PAGED_TYPES = (PagedAttnCache, PagedMLACache)
@@ -86,6 +111,12 @@ class PoolExhaustedError(RuntimeError):
     prompt — a clean host-level error instead of silent dropped writes."""
 
 
+class CacheOverflowError(RuntimeError):
+    """Raised by the serving loop when a row's sticky ``overflowed`` flag
+    is set: a chunk write ran past the row's logical capacity and was
+    dropped — the row's generation is missing K/V and cannot continue."""
+
+
 def init_attn_cache(batch: int, length: int, kv_heads: int, head_dim: int,
                     dtype) -> AttnCache:
     return AttnCache(
@@ -93,6 +124,7 @@ def init_attn_cache(batch: int, length: int, kv_heads: int, head_dim: int,
         v=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
         pos_arr=jnp.full((batch, length), -1, jnp.int32),
         next_pos=jnp.zeros((batch,), jnp.int32),
+        overflowed=jnp.zeros((batch,), bool),
     )
 
 
@@ -103,6 +135,7 @@ def init_mla_cache(batch: int, length: int, rank: int, rope_dim: int,
         kpe=jnp.zeros((batch, length, rope_dim), dtype),
         pos_arr=jnp.full((batch, length), -1, jnp.int32),
         next_pos=jnp.zeros((batch,), jnp.int32),
+        overflowed=jnp.zeros((batch,), bool),
     )
 
 
@@ -120,10 +153,11 @@ def init_paged_attn_cache(batch: int, length: int, kv_heads: int,
         kpool=jnp.zeros((p, block_size, kv_heads, head_dim), dtype),
         vpool=jnp.zeros((p, block_size, kv_heads, head_dim), dtype),
         table=jnp.full((batch, m), -1, jnp.int32),
-        free=jnp.ones((p,), bool),
+        refcount=jnp.zeros((p,), jnp.int32),
         pos_arr=jnp.full((batch, m * block_size), -1, jnp.int32),
         next_pos=jnp.zeros((batch,), jnp.int32),
         alloc_failed=jnp.zeros((), bool),
+        overflowed=jnp.zeros((batch,), bool),
     )
 
 
@@ -136,10 +170,11 @@ def init_paged_mla_cache(batch: int, length: int, rank: int, rope_dim: int,
         ckv_pool=jnp.zeros((p, block_size, rank), dtype),
         kpe_pool=jnp.zeros((p, block_size, rope_dim), dtype),
         table=jnp.full((batch, m), -1, jnp.int32),
-        free=jnp.ones((p,), bool),
+        refcount=jnp.zeros((p,), jnp.int32),
         pos_arr=jnp.full((batch, m * block_size), -1, jnp.int32),
         next_pos=jnp.zeros((batch,), jnp.int32),
         alloc_failed=jnp.zeros((), bool),
+        overflowed=jnp.zeros((batch,), bool),
     )
 
 
@@ -197,7 +232,18 @@ def paged_write_chunk(cache, new_values: tuple, chunk_valid: Array | None):
     """Append an S-token chunk, allocating pool blocks as rows cross block
     boundaries.  Same semantics as the static ``write_chunk`` (invalid
     steps don't advance); a row that needs a block when the pool is empty
-    drops the write and sets ``alloc_failed``."""
+    drops the write and sets ``alloc_failed``; a row whose counter reached
+    the logical capacity drops the write and sets its sticky
+    ``overflowed`` flag (the write is NEVER clamped onto the last slot —
+    that silently destroyed the previous token's K/V).
+
+    Copy-on-write: a write landing in a block with refcount > 1 (prefix
+    sharing) first copies that block to a fresh one, repoints this row's
+    table at the copy and decrements the shared block — the other rows'
+    K/V is immutable.  The engine's full-block-only sharing means COW
+    never fires in normal serving (shared prompt blocks are complete and
+    behind every write frontier); it is the safety net that makes the
+    primitive correct for ANY caller."""
     pools = _paged_pools(cache)
     bs = pools[0].shape[1]
     p = pools[0].shape[0]
@@ -206,22 +252,34 @@ def paged_write_chunk(cache, new_values: tuple, chunk_valid: Array | None):
     s = new_values[0].shape[1]
 
     def body(t, carry):
-        pools, table, free, pos_arr, next_pos, failed = carry
+        pools, table, refcount, pos_arr, next_pos, failed, over = carry
         ok = chunk_valid[:, t] if chunk_valid is not None \
             else jnp.ones((b,), bool)
+        over = over | (ok & (next_pos >= l))
+        ok = ok & (next_pos < l)
         slot = jnp.minimum(next_pos, l - 1)
         blk, off = slot // bs, slot % bs
         cur = jnp.take_along_axis(table, blk[:, None], axis=1)[:, 0]
-        needs = ok & (cur < 0)
+        shared = ok & (cur >= 0) & (refcount[jnp.maximum(cur, 0)] > 1)
+        needs = ok & ((cur < 0) | shared)
         rank = jnp.cumsum(needs.astype(jnp.int32)) - 1
-        cand = _nth_free(free, rank)
+        cand = _nth_free(refcount == 0, rank)
         got = needs & (cand < p)
         failed = failed | jnp.any(needs & (cand >= p))
-        free = free.at[jnp.where(got, cand, p)].set(False, mode="drop")
+        refcount = refcount.at[jnp.where(got, cand, p)].add(1, mode="drop")
+        # COW: copy the shared block's contents into the fresh block and
+        # drop this row's reference to the original
+        cow = shared & got
+        refcount = refcount.at[jnp.where(cow, cur, p)].add(-1, mode="drop")
+        src = jnp.maximum(cur, 0)
+        dst = jnp.where(cow, cand, p)
+        pools = [pool.at[dst].set(pool[src], mode="drop") for pool in pools]
         table = table.at[jnp.arange(b), blk].set(
             jnp.where(got, cand, cur))
         phys_blk = jnp.where(got, cand, cur)
-        can = ok & (phys_blk >= 0)
+        # a shared block whose COW allocation failed must NOT be written:
+        # the dropped write may not corrupt the other rows' K/V
+        can = ok & (phys_blk >= 0) & ~(shared & ~got)
         flat = jnp.where(can, phys_blk * bs + off, p * bs)
         pools = _scatter_tokens(pools, [nv[:, t][:, None] for nv in
                                         new_values], flat[:, None])
@@ -229,21 +287,37 @@ def paged_write_chunk(cache, new_values: tuple, chunk_valid: Array | None):
                              jnp.where(can, slot, l)].set(
             next_pos, mode="drop")
         next_pos = jnp.where(can, next_pos + 1, next_pos)
-        return pools, table, free, pos_arr, next_pos, failed
+        return pools, table, refcount, pos_arr, next_pos, failed, over
 
-    pools, table, free, pos_arr, next_pos, failed = jax.lax.fori_loop(
-        0, s, body, (pools, cache.table, cache.free, cache.pos_arr,
-                     cache.next_pos, cache.alloc_failed))
-    return _paged_replace(cache, pools, table=table, free=free,
+    (pools, table, refcount, pos_arr, next_pos, failed,
+     over) = jax.lax.fori_loop(
+        0, s, body, (pools, cache.table, cache.refcount, cache.pos_arr,
+                     cache.next_pos, cache.alloc_failed, cache.overflowed))
+    return _paged_replace(cache, pools, table=table, refcount=refcount,
                           pos_arr=pos_arr, next_pos=next_pos,
-                          alloc_failed=failed)
+                          alloc_failed=failed, overflowed=over)
 
 
-def paged_write_prefill(cache, new_values: tuple, lengths: Array):
+def paged_write_prefill(cache, new_values: tuple, lengths: Array,
+                        shared_blocks: Array | None = None,
+                        shared_lens: Array | None = None):
     """Bulk-fill the rows of this cache view from a left-aligned prefill
-    chunk, allocating exactly ceil(lengths / block_size) blocks per row.
-    Any blocks the rows previously held are freed first (re-prefilling a
-    live row cannot leak)."""
+    chunk.  Any blocks the rows previously held are released first
+    (re-prefilling a live row cannot leak).
+
+    Without sharing: allocates exactly ceil(lengths / block_size) blocks
+    per row and scatters token j to logical slot j.
+
+    With prefix sharing (``shared_blocks``: i32[B, Ms] existing physical
+    block ids, -1 padded; ``shared_lens``: i32[B] tokens those blocks
+    already hold — a whole-block multiple): row b's table slots
+    0..count_b-1 ATTACH to the given blocks (refcount bump, no compute,
+    no writes — the blocks' K/V is immutable while shared) and the chunk
+    holds only the UNIQUE SUFFIX: token j scatters to logical slot
+    shared_lens[b] + j, allocating only the suffix's blocks.  Attachment
+    happens BEFORE suffix allocation, so a shared block just released by
+    this call's own row reset (its content still intact) is re-pinned
+    rather than reallocated."""
     cache = paged_reset_rows(cache, jnp.ones(cache.table.shape[:1], bool))
     pools = _paged_pools(cache)
     bs = pools[0].shape[1]
@@ -251,19 +325,38 @@ def paged_write_prefill(cache, new_values: tuple, lengths: Array):
     b, m = cache.table.shape
     l = cache.pos_arr.shape[1]
     s = new_values[0].shape[1]
-    # block j of row b is needed iff it holds any position < lengths[b]
-    needs = (jnp.arange(m)[None, :] * bs) < lengths[:, None]     # [B, M]
+    refcount, table = cache.refcount, cache.table    # rows all reset (-1)
+    if shared_blocks is None:
+        start = jnp.zeros((b,), jnp.int32)
+    else:
+        start = shared_lens.astype(jnp.int32)
+        ms = shared_blocks.shape[1]
+        attach = shared_blocks >= 0                               # [B, Ms]
+        refcount = refcount.at[
+            jnp.where(attach, shared_blocks, p).reshape(-1)].add(
+            1, mode="drop")
+        head = jnp.where(attach, shared_blocks, -1)
+        table = jnp.concatenate(
+            [head, jnp.full((b, m - ms), -1, jnp.int32)], axis=1) \
+            if m > ms else head
+    total = start + lengths.astype(jnp.int32)
+    # block j of row b is needed iff it holds any position < total[b]
+    # and is not already attached
+    needs = ((jnp.arange(m)[None, :] * bs) < total[:, None]) \
+        & (table < 0)                                             # [B, M]
     rank = (jnp.cumsum(needs.reshape(-1).astype(jnp.int32)) - 1).reshape(b, m)
-    cand = _nth_free(cache.free, rank)
+    cand = _nth_free(refcount == 0, rank)
     got = needs & (cand < p)
     failed = cache.alloc_failed | jnp.any(needs & (cand >= p))
-    free = cache.free.at[jnp.where(got, cand, p).reshape(-1)].set(
-        False, mode="drop")
-    table = jnp.where(got, cand, -1)
-    # scatter the S chunk tokens (logical slot == absolute position)
-    tok_slot = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
-    phys_blk = jnp.take_along_axis(table, tok_slot // bs, axis=1)
-    can = (tok_slot < lengths[:, None]) & (phys_blk >= 0)
+    refcount = refcount.at[jnp.where(got, cand, p).reshape(-1)].add(
+        1, mode="drop")
+    table = jnp.where(got, cand, table)
+    # scatter the S suffix tokens (logical slot == absolute position)
+    tok_slot = start[:, None] + jnp.arange(s)[None, :]
+    phys_blk = jnp.take_along_axis(table,
+                                   jnp.minimum(tok_slot // bs, m - 1), axis=1)
+    can = (jnp.arange(s)[None, :] < lengths[:, None]) & (phys_blk >= 0) \
+        & (tok_slot < l)
     flat = jnp.where(can, phys_blk * bs + tok_slot % bs, p * bs)
     pools = _scatter_tokens(pools, list(new_values), flat)
     idx = jnp.arange(l)[None, :]
@@ -271,44 +364,48 @@ def paged_write_prefill(cache, new_values: tuple, lengths: Array):
     # unbacked-but-valid slot would gather block 0 (another request's
     # K/V) through paged_view's safe indexing
     backed = jnp.take_along_axis(table, idx // bs, axis=1) >= 0
-    pos_arr = jnp.where((idx < lengths[:, None]) & backed, idx, -1)
-    return _paged_replace(cache, pools, table=table, free=free,
-                          pos_arr=pos_arr,
-                          next_pos=lengths.astype(jnp.int32),
-                          alloc_failed=failed)
+    pos_arr = jnp.where((idx < total[:, None]) & backed, idx, -1)
+    return _paged_replace(cache, pools, table=table, refcount=refcount,
+                          pos_arr=pos_arr, next_pos=total,
+                          alloc_failed=failed,
+                          overflowed=cache.overflowed | (total > l))
 
 
 def paged_rollback(cache, keep_pos: Array):
-    """Invalidate slots holding positions >= keep_pos AND return the
-    speculative-tail blocks (logical blocks past ceil(keep_pos / bs)) to
-    the pool — the next chunk re-allocates as it grows."""
+    """Invalidate slots holding positions >= keep_pos AND release the
+    speculative-tail blocks (logical blocks past ceil(keep_pos / bs)):
+    each dropped table entry decrements its block's refcount, and the
+    block returns to the pool only when the count reaches 0 (another row
+    may still share it)."""
     bs = paged_block_size(cache)
     m = cache.table.shape[1]
     keep_blocks = -(-keep_pos // bs)                              # ceil
     drop = (jnp.arange(m)[None, :] >= keep_blocks[:, None]) \
         & (cache.table >= 0)
-    p = cache.free.shape[0]
-    free = cache.free.at[jnp.where(drop, cache.table, p).reshape(-1)].set(
-        True, mode="drop")
+    p = cache.refcount.shape[0]
+    refcount = cache.refcount.at[
+        jnp.where(drop, cache.table, p).reshape(-1)].add(-1, mode="drop")
     return cache._replace(
-        table=jnp.where(drop, -1, cache.table), free=free,
+        table=jnp.where(drop, -1, cache.table), refcount=refcount,
         pos_arr=jnp.where(cache.pos_arr >= keep_pos[:, None], -1,
                           cache.pos_arr),
         next_pos=jnp.minimum(cache.next_pos, keep_pos))
 
 
 def paged_reset_rows(cache, rows: Array):
-    """Free ALL blocks of the selected rows (bool[B]) — request retirement.
-    Unlike the static ``reset_rows``, the freed memory is immediately
-    reusable by any other row."""
-    p = cache.free.shape[0]
+    """Release ALL blocks of the selected rows (bool[B]) — request
+    retirement.  Each table entry decrements its block's refcount (free
+    at 0; shared blocks survive until their last reference drops), and
+    the rows' sticky ``overflowed`` flags clear with the rows."""
+    p = cache.refcount.shape[0]
     sel = rows[:, None] & (cache.table >= 0)
-    free = cache.free.at[jnp.where(sel, cache.table, p).reshape(-1)].set(
-        True, mode="drop")
+    refcount = cache.refcount.at[
+        jnp.where(sel, cache.table, p).reshape(-1)].add(-1, mode="drop")
     return cache._replace(
-        table=jnp.where(rows[:, None], -1, cache.table), free=free,
+        table=jnp.where(rows[:, None], -1, cache.table), refcount=refcount,
         pos_arr=jnp.where(rows[:, None], -1, cache.pos_arr),
-        next_pos=jnp.where(rows, 0, cache.next_pos))
+        next_pos=jnp.where(rows, 0, cache.next_pos),
+        overflowed=jnp.where(rows, False, cache.overflowed))
 
 
 def paged_view(cache):
@@ -331,21 +428,23 @@ def paged_select_rows(cache, idx: Array):
     same physical memory.  Inverse: ``paged_merge_rows``."""
     return cache._replace(table=cache.table[idx],
                           pos_arr=cache.pos_arr[idx],
-                          next_pos=cache.next_pos[idx])
+                          next_pos=cache.next_pos[idx],
+                          overflowed=cache.overflowed[idx])
 
 
 def paged_merge_rows(full, sub, idx: Array):
     """Merge a row-slice back: per-row state scatters into ``idx``; pool,
-    free list and alloc flag come from the slice (they are the shared,
+    refcounts and alloc flag come from the slice (they are the shared,
     already-updated allocator state)."""
     pools = _paged_pools(sub)
     return _paged_replace(
         full, pools,
         table=full.table.at[idx].set(sub.table),
-        free=sub.free,
+        refcount=sub.refcount,
         pos_arr=full.pos_arr.at[idx].set(sub.pos_arr),
         next_pos=full.next_pos.at[idx].set(sub.next_pos),
-        alloc_failed=sub.alloc_failed)
+        alloc_failed=sub.alloc_failed,
+        overflowed=full.overflowed.at[idx].set(sub.overflowed))
 
 
 def paged_free_count(cache) -> Array:
@@ -362,16 +461,25 @@ def _write_one(values, pos_arr, next_pos, new_slices, ring):
     """Write one token (time index t of the chunk) into each value array.
 
     values: list of [B, L, ...]; new_slices: list of [B, ...] (no L axis).
+    Non-ring rows at capacity (next_pos >= L) DROP the write and freeze
+    their counter (never clamp onto slot L-1 — that destroyed the last
+    token's K/V); the returned bool[B] flags those rows.  Ring caches
+    wrap by design and never overflow.
     """
     l = pos_arr.shape[1]
-    slot = next_pos % l if ring else jnp.minimum(next_pos, l - 1)
-    hit = jnp.arange(l)[None, :] == slot[:, None]            # [B, L]
+    if ring:
+        over = jnp.zeros(next_pos.shape, bool)
+        slot = next_pos % l
+    else:
+        over = next_pos >= l
+        slot = jnp.minimum(next_pos, l - 1)
+    hit = (jnp.arange(l)[None, :] == slot[:, None]) & ~over[:, None]
     out = []
     for val, new in zip(values, new_slices):
         mask = hit.reshape(hit.shape + (1,) * (val.ndim - 2))
         out.append(jnp.where(mask, new[:, None].astype(val.dtype), val))
     pos_arr = jnp.where(hit, next_pos[:, None], pos_arr)
-    return out, pos_arr, next_pos + 1
+    return out, pos_arr, jnp.where(over, next_pos, next_pos + 1), over
 
 
 def write_chunk(cache, new_values: tuple, chunk_valid: Array | None = None,
@@ -390,9 +498,9 @@ def write_chunk(cache, new_values: tuple, chunk_valid: Array | None = None,
     s = new_values[0].shape[1]
 
     def body(t, carry):
-        vals, pos_arr, next_pos = carry
+        vals, pos_arr, next_pos, over = carry
         slices = [nv[:, t] for nv in new_values]
-        new_vals, new_pos_arr, new_next = _write_one(
+        new_vals, new_pos_arr, new_next, over_t = _write_one(
             vals, pos_arr, next_pos, slices, ring)
         if chunk_valid is not None:
             ok = chunk_valid[:, t]
@@ -400,27 +508,35 @@ def write_chunk(cache, new_values: tuple, chunk_valid: Array | None = None,
                         for nv, v in zip(new_vals, vals)]
             new_pos_arr = jnp.where(ok[:, None], new_pos_arr, pos_arr)
             new_next = jnp.where(ok, new_next, next_pos)
-        return new_vals, new_pos_arr, new_next
+            over_t = over_t & ok
+        return new_vals, new_pos_arr, new_next, over | over_t
 
-    vals, pos_arr, next_pos = jax.lax.fori_loop(
-        0, s, body, (vals, cache.pos_arr, cache.next_pos))
+    vals, pos_arr, next_pos, over = jax.lax.fori_loop(
+        0, s, body, (vals, cache.pos_arr, cache.next_pos, cache.overflowed))
     if is_mla:
         return cache._replace(ckv=vals[0], kpe=vals[1], pos_arr=pos_arr,
-                              next_pos=next_pos)
+                              next_pos=next_pos, overflowed=over)
     return cache._replace(k=vals[0], v=vals[1], pos_arr=pos_arr,
-                          next_pos=next_pos)
+                          next_pos=next_pos, overflowed=over)
 
 
 def write_prefill(cache, new_values: tuple, lengths: Array,
-                  ring: bool = False):
+                  ring: bool = False,
+                  shared_blocks: Array | None = None,
+                  shared_lens: Array | None = None):
     """Bulk-fill an empty cache from a left-aligned prefill chunk.
 
     new_values: tuple of [B, S, ...] with S <= L; lengths: i32[B] valid
     prefix length per row.  For ring caches S may exceed the window — only
     the last ``window`` positions land (computed with a shifted write).
+    ``shared_blocks``/``shared_lens`` (paged only) attach an existing
+    shared prompt prefix per row — see ``paged_write_prefill``.
     """
     if isinstance(cache, PAGED_TYPES):
-        return paged_write_prefill(cache, new_values, lengths)
+        return paged_write_prefill(cache, new_values, lengths,
+                                   shared_blocks=shared_blocks,
+                                   shared_lens=shared_lens)
+    assert shared_blocks is None, "prefix sharing requires a paged cache"
     is_mla = isinstance(cache, MLACache)
     vals = [cache.ckv, cache.kpe] if is_mla else [cache.k, cache.v]
     b, l = cache.pos_arr.shape
@@ -449,11 +565,13 @@ def write_prefill(cache, new_values: tuple, lengths: Array,
                 valid.reshape(b, l, *(1,) * (val.ndim - 2)), gathered, val))
         pos_arr = jnp.where(valid, candidate, -1)
     next_pos = lengths.astype(jnp.int32)
+    over = jnp.zeros(cache.overflowed.shape, bool)   # rows fully replaced
     if is_mla:
         return cache._replace(ckv=out_vals[0], kpe=out_vals[1],
-                              pos_arr=pos_arr, next_pos=next_pos)
+                              pos_arr=pos_arr, next_pos=next_pos,
+                              overflowed=over)
     return cache._replace(k=out_vals[0], v=out_vals[1], pos_arr=pos_arr,
-                          next_pos=next_pos)
+                          next_pos=next_pos, overflowed=over)
 
 
 def rollback(cache, keep_pos: Array):
@@ -485,25 +603,56 @@ def snapshot_alloc_flag(cache) -> Array | None:
     return None
 
 
-def discard_tail(cache, keep_pos: Array, alloc_failed: Array | None = None):
+class StickyFlags(NamedTuple):
+    """Pre-ahead snapshot of every sticky error flag a speculative
+    draft-ahead can transiently set (see ``snapshot_sticky_flags``)."""
+    alloc_failed: Array | None   # bool[]  (None for static caches)
+    overflowed: Array            # bool[B]
+
+
+def snapshot_sticky_flags(cache) -> StickyFlags:
+    """Snapshot BOTH sticky flags before a speculative draft-ahead:
+    ``alloc_failed`` (paged; see ``snapshot_alloc_flag``) and the per-row
+    ``overflowed`` flag (all cache kinds) — an ahead-write that ran past
+    capacity but is then discarded must not poison either.  Refcounts
+    need no snapshot: ``discard_tail``'s decrements mirror the ahead
+    writes' increments exactly (full-block-only sharing means COW never
+    fires on the fresh tail blocks an ahead-chunk allocates)."""
+    over = cache.overflowed
+    if over.ndim == 2:                      # stacked scan-group leaves:
+        over = over[0]                      # one shared write trajectory
+    return StickyFlags(alloc_failed=snapshot_alloc_flag(cache),
+                       overflowed=over)
+
+
+def discard_tail(cache, keep_pos: Array, alloc_failed: Array | None = None,
+                 overflowed: Array | None = None):
     """One-round-late rollback of a speculative draft-ahead (overlap
     mode): identical to ``rollback`` — the ahead-tail's slots invalidate
     and its paged blocks return to the pool — except the sticky
-    ``alloc_failed`` flag is restored to its pre-ahead snapshot
-    (``snapshot_alloc_flag``).  With ``keep_pos = length +
-    min(accepted+1, S)`` this lands the cache bit-exactly on the state a
-    synchronous round would have produced: the deferred discard differs
-    from the sync rollback only when the whole chunk was accepted, where
-    it additionally drops the ahead-root's write at position length+S —
-    a slot the synchronous round never wrote."""
+    ``alloc_failed`` / ``overflowed`` flags are restored to their
+    pre-ahead snapshots (``snapshot_sticky_flags``).  With ``keep_pos =
+    length + min(accepted+1, S)`` this lands the cache bit-exactly on the
+    state a synchronous round would have produced: the deferred discard
+    differs from the sync rollback only when the whole chunk was
+    accepted, where it additionally drops the ahead-root's write at
+    position length+S — a slot the synchronous round never wrote."""
     if isinstance(cache, PAGED_TYPES):
         def f(c):
             r = paged_rollback(c, keep_pos)
             if alloc_failed is not None:
                 r = r._replace(alloc_failed=alloc_failed)
+            if overflowed is not None:
+                r = r._replace(overflowed=overflowed)
             return r
         return paged_over_groups(f, cache)
-    return rollback(cache, keep_pos)
+    out = rollback(cache, keep_pos)
+    if overflowed is not None:
+        over = overflowed
+        if out.overflowed.ndim == 2:        # stacked scan-group leaves
+            over = jnp.broadcast_to(over[None], out.overflowed.shape)
+        out = out._replace(overflowed=over)
+    return out
 
 
 def reset_rows(cache, rows: Array):
@@ -516,7 +665,8 @@ def reset_rows(cache, rows: Array):
                                  cache)
     return cache._replace(
         pos_arr=jnp.where(rows[:, None], -1, cache.pos_arr),
-        next_pos=jnp.where(rows, 0, cache.next_pos))
+        next_pos=jnp.where(rows, 0, cache.next_pos),
+        overflowed=jnp.where(rows, False, cache.overflowed))
 
 
 def prefill_rows(cache, new_values: tuple, lengths: Array, rows: Array,

@@ -1,0 +1,97 @@
+"""Host-side content-addressed prefix index for paged-cache sharing.
+
+Maps each FULL ``block_size``-token prompt-prefix block to the physical
+pool block that already holds its K/V, so admission can attach a new
+request's shared prompt prefix (refcount bump, zero prefill compute) and
+prefill only the unique suffix.  See docs/KV_CACHE.md for the contract.
+
+Keying: entry j of a prompt chains on the ENTIRE prefix
+``tokens[: (j+1) * block_size]`` (a tuple — exact, collision-free), not
+on block j's tokens alone: block j's K/V depends on every earlier token
+through attention, so two prompts may share block j's physical block
+only if they agree on all of its prefix.  One index per MODEL (draft and
+target caches hold different K/V); the deterministic first-free
+allocator gives every layer and scan group of one model the identical
+block-table trajectory, so a single physical block id per (model, chain
+key) covers the whole stack.
+
+Staleness: the index only ever points at blocks whose content is the
+keyed prefix.  Registered blocks are full prompt blocks behind every
+write frontier — rollback never frees them (it only drops blocks past
+``ceil(keep_pos / bs)`` >= the prompt's block count for live rows) and
+COW never rewrites them in place — so an entry goes stale only when its
+block is FREED (row release / re-admission reset).  The engine evicts at
+both chokepoints: ``_release_rows`` calls ``evict_blocks`` host-side,
+and admission calls ``evict_free`` + simulates its own row resets before
+consulting the index.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class PrefixIndex:
+    """Chain-key → physical block id map for one model's paged pool."""
+    by_key: dict = field(default_factory=dict)    # tuple[int,...] -> block id
+    by_block: dict = field(default_factory=dict)  # block id -> chain key
+    hits: int = 0
+    misses: int = 0
+
+    def match(self, tokens, block_size: int) -> list[int]:
+        """Longest chain of full-block prefixes of ``tokens`` present in
+        the index; returns their physical block ids in logical order.
+        Stops at the first miss (block j+1 is only shareable when block
+        j is)."""
+        out = []
+        n = len(tokens) // block_size
+        toks = [int(t) for t in tokens]
+        for j in range(n):
+            blk = self.by_key.get(tuple(toks[: (j + 1) * block_size]))
+            if blk is None:
+                break
+            out.append(blk)
+        if out:
+            self.hits += 1
+        elif n:
+            self.misses += 1
+        return out
+
+    def register(self, tokens, blocks, block_size: int) -> None:
+        """Register every full block of ``tokens`` (physical ids
+        ``blocks``, logical order).  First writer wins: an existing entry
+        for a chain key is kept — its block already holds that prefix and
+        may be shared by other rows."""
+        n = min(len(tokens) // block_size, len(blocks))
+        toks = [int(t) for t in tokens]
+        for j in range(n):
+            key = tuple(toks[: (j + 1) * block_size])
+            blk = int(blocks[j])
+            if blk < 0:
+                break
+            if key not in self.by_key:
+                # a stale mapping for this block (freed + reallocated)
+                # would have been evicted already; guard anyway
+                old = self.by_block.pop(blk, None)
+                if old is not None:
+                    self.by_key.pop(old, None)
+                self.by_key[key] = blk
+                self.by_block[blk] = key
+
+    def evict_blocks(self, blocks) -> None:
+        """Drop entries for specific physical blocks (they were freed or
+        are about to be reused)."""
+        for blk in blocks:
+            key = self.by_block.pop(int(blk), None)
+            if key is not None:
+                self.by_key.pop(key, None)
+
+    def evict_free(self, refcount) -> None:
+        """Drop every entry whose block's refcount is 0 — the allocator
+        may hand those blocks to anyone at any time."""
+        dead = [blk for blk in self.by_block if refcount[blk] == 0]
+        self.evict_blocks(dead)
+
+    def clear(self) -> None:
+        self.by_key.clear()
+        self.by_block.clear()

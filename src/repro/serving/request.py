@@ -58,9 +58,12 @@ class Request:                      # queue entries, and the generated
     # every round-clock advance while the request is still queued, so wait
     # metrics are honest for requests that have not been admitted yet
     queue_wait: int = 0
-    # paged-KV accounting: blocks the admission prefill allocated for this
-    # request (0 under static caches); set by the engine at admission
-    kv_blocks: int = 0
+    # paged-KV accounting: blocks this request's row currently holds,
+    # recomputed from the live block table every round by the engine
+    # (``_refresh_kv_blocks``); 0 under static caches.  Under prefix
+    # sharing a block referenced r times counts 1/r per holder (a float),
+    # so kv_blocks summed over seated requests equals allocated blocks.
+    kv_blocks: float = 0
     # churn bookkeeping: times this request was migrated off a DOWN server
     # (returned to the global queue with its committed tokens preserved),
     # and the unmitigated-crash fate — a ``lost`` request's server died

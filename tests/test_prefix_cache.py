@@ -1,0 +1,568 @@
+"""Refcounted prefix caching with copy-on-write sharing in the paged KV
+pool — plus the paged/static chunk-write overflow regression.
+
+Covers (see docs/KV_CACHE.md for the invariants):
+  * ``serving.prefix.PrefixIndex`` — chain keying, first-writer-wins
+    registration, eviction semantics.
+  * kv_cache primitives — prefix attach (refcount bump, no copy),
+    attach-before-allocate re-pinning, copy-on-write when a chunk write
+    lands in a block with refcount > 1, and the sticky ``overflowed``
+    flag replacing the old silent clamp-onto-the-last-slot bug.
+  * engine admission — pre-check == actual allocation (property sweep
+    over 1-token prompts, block boundaries and mixed batches), refcount
+    conservation, exhaustion raised BEFORE any mutation, 1/refcount
+    block attribution summing to exactly P - free_count.
+  * shared-prefix serving equivalence — ``prefix_cache=True`` emits the
+    IDENTICAL accepted-token sequences as the baseline engine across
+    jnp x kernel backends, sync x overlap rounds, and lanes {1, 2}.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import conftest
+from repro.serving import kv_cache as kc
+from repro.serving.engine import GoodSpeedEngine, _paged_alloc_state
+from repro.serving.prefix import PrefixIndex
+from repro.serving.request import Request, RequestManager
+from tests.proptest import sweep
+
+
+def _paged_leaves(cache):
+    """All paged leaves of a stack cache, scan-group stacks unstacked."""
+    leaf = lambda c: isinstance(c, kc.PAGED_TYPES)
+    out = []
+    for c in jax.tree.leaves(cache, is_leaf=leaf):
+        if not isinstance(c, kc.PAGED_TYPES):
+            continue
+        if c.table.ndim == 3:                        # [G, B, M] scan stack
+            out.extend(jax.tree.map(lambda x, i=i: x[i], c)
+                       for i in range(c.table.shape[0]))
+        else:
+            out.append(c)
+    return out
+
+
+def _assert_conserved(leaf):
+    """refcount[p] == number of table cells referencing block p, so free
+    (refcount 0) blocks are never referenced and nothing leaks."""
+    tbl = np.asarray(leaf.table)
+    ref = np.asarray(leaf.refcount)
+    counts = np.zeros_like(ref)
+    np.add.at(counts, tbl[tbl >= 0], 1)
+    np.testing.assert_array_equal(counts, ref,
+                                  "refcount drifted from the block tables")
+
+
+def _assert_state_conserved(state):
+    for cache in (state.target_cache, state.draft_cache):
+        for leaf in _paged_leaves(cache):
+            _assert_conserved(leaf)
+
+
+def _free_count(cache) -> int:
+    return int(np.asarray(_paged_alloc_state(cache)[1]).sum())
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex: the host-side content map
+# ---------------------------------------------------------------------------
+
+class TestPrefixIndex:
+    def test_match_longest_chain_and_counters(self):
+        ix = PrefixIndex()
+        toks = np.arange(24, dtype=np.int32)      # np ints must normalize
+        ix.register(toks, [5, 9, 11], 8)
+        assert ix.match(list(range(24)), 8) == [5, 9, 11]
+        assert ix.match(toks[:17], 8) == [5, 9]   # 2 full blocks only
+        assert ix.match(list(toks[:8]) + [99] * 8, 8) == [5]
+        assert ix.match([99] * 8, 8) == []
+        assert ix.match([1, 2, 3], 8) == []       # no full block: no miss
+        assert ix.hits == 3 and ix.misses == 1
+
+    def test_chain_key_is_full_prefix_not_block_content(self):
+        """Block 1's K/V depends on block 0's tokens through attention:
+        identical block-1 CONTENT under a different prefix must miss."""
+        ix = PrefixIndex()
+        ix.register([1] * 8 + [2] * 8, [3, 4], 8)
+        assert ix.match([9] * 8 + [2] * 8, 8) == []
+
+    def test_first_writer_wins_and_eviction(self):
+        ix = PrefixIndex()
+        toks = list(range(16))
+        ix.register(toks, [0, 1], 8)
+        ix.register(toks, [7, 8], 8)              # later writer ignored
+        assert ix.match(toks, 8) == [0, 1]
+        ix.evict_blocks([1])
+        assert ix.match(toks, 8) == [0]
+        ix.evict_free(np.asarray([0, 3]))         # refcount[block 0] == 0
+        assert ix.match(toks, 8) == []
+        assert not ix.by_key and not ix.by_block
+
+
+# ---------------------------------------------------------------------------
+# kv_cache primitives: attach / re-pin / COW / overflow
+# ---------------------------------------------------------------------------
+
+class TestSharedPagedPrimitives:
+    B, L, KV, HD, BS = 3, 32, 2, 4, 8
+
+    def _cache(self, num_blocks=0):
+        return kc.init_paged_attn_cache(self.B, self.L, self.KV, self.HD,
+                                        jnp.float32, self.BS,
+                                        num_blocks=num_blocks)
+
+    def _kv(self, rng, s):
+        return (jnp.asarray(rng.normal(size=(self.B, s, self.KV, self.HD)),
+                            jnp.float32),
+                jnp.asarray(rng.normal(size=(self.B, s, self.KV, self.HD)),
+                            jnp.float32))
+
+    def test_attach_shares_donor_blocks_without_copy(self):
+        """Attaching a 2-block prefix bumps refcounts and reuses the
+        donor's physical blocks; only the suffix allocates new ones, and
+        the shared region reads back the DONOR's K/V."""
+        rng = np.random.default_rng(0)
+        cache = self._cache()
+        kv_a = self._kv(rng, 16)
+        cache = kc.write_prefill(cache, kv_a, jnp.asarray([16, 0, 0]))
+        blocks = np.asarray(cache.table)[0, :2]
+        assert np.all(blocks >= 0)
+
+        idx = jnp.asarray([1, 2])
+        sub = kc.paged_select_rows(cache, idx)
+        kv_s = tuple(v[idx] for v in self._kv(rng, 4))
+        sub = kc.paged_write_prefill(
+            sub, kv_s, jnp.asarray([4, 0]),
+            shared_blocks=jnp.asarray([blocks, blocks]),
+            shared_lens=jnp.asarray([16, 16]))
+        cache = kc.paged_merge_rows(cache, sub, idx)
+
+        ref = np.asarray(cache.refcount)
+        tbl = np.asarray(cache.table)
+        assert ref[blocks[0]] == 3 and ref[blocks[1]] == 3
+        np.testing.assert_array_equal(tbl[1, :2], blocks)
+        np.testing.assert_array_equal(tbl[2, :2], blocks)
+        _assert_conserved(cache)
+        # exactly ONE new block (row 1's 4-token suffix); row 2 has none
+        assert int(np.asarray(cache.free).sum()) == ref.shape[0] - 3
+        k_view, v_view = [np.asarray(v) for v in kc.paged_view(cache)]
+        for row in (1, 2):
+            np.testing.assert_array_equal(k_view[row, :16],
+                                          np.asarray(kv_a[0])[0])
+        np.testing.assert_array_equal(k_view[1, 16:20],
+                                      np.asarray(kv_s[0])[0])
+        np.testing.assert_array_equal(np.asarray(cache.next_pos),
+                                      [16, 20, 16])
+        assert not bool(cache.alloc_failed)
+
+    def test_attach_repins_blocks_freed_by_own_reset(self):
+        """Re-admitting the donor row in the SAME prefill that attaches
+        its old blocks: attachment happens before suffix allocation, so
+        the dying blocks are re-pinned (content intact) and the donor's
+        new prompt lands in OTHER blocks."""
+        rng = np.random.default_rng(1)
+        cache = self._cache()
+        kv_a = self._kv(rng, 16)
+        cache = kc.write_prefill(cache, kv_a, jnp.asarray([16, 0, 0]))
+        blocks = np.asarray(cache.table)[0, :2]
+
+        kv_b = self._kv(rng, 16)
+        shared = jnp.asarray([[-1, -1], blocks, blocks])
+        cache = kc.write_prefill(cache, kv_b, jnp.asarray([16, 4, 4]),
+                                 shared_blocks=shared,
+                                 shared_lens=jnp.asarray([0, 16, 16]))
+        tbl = np.asarray(cache.table)
+        ref = np.asarray(cache.refcount)
+        assert ref[blocks[0]] == 2 and ref[blocks[1]] == 2
+        assert not set(tbl[0, :2].tolist()) & set(blocks.tolist())
+        _assert_conserved(cache)
+        k_view, _ = [np.asarray(v) for v in kc.paged_view(cache)]
+        # rows 1, 2 read the ORIGINAL donor K/V, not row 0's new prefill
+        np.testing.assert_array_equal(k_view[1, :16], np.asarray(kv_a[0])[0])
+        np.testing.assert_array_equal(k_view[0, :16], np.asarray(kv_b[0])[0])
+        assert not bool(cache.alloc_failed)
+
+    def test_cow_chunk_write_preserves_the_other_sharer(self):
+        """A chunk write landing inside a block with refcount > 1 copies
+        it first: the writer gets a private block, the other holder's
+        view is untouched, and the refcount splits."""
+        rng = np.random.default_rng(2)
+        cache = self._cache()
+        kv_a = self._kv(rng, 8)
+        cache = kc.write_prefill(cache, kv_a, jnp.asarray([8, 0, 0]))
+        b0 = int(np.asarray(cache.table)[0, 0])
+
+        idx = jnp.asarray([1])
+        sub = kc.paged_select_rows(cache, idx)
+        z = jnp.zeros((1, 1, self.KV, self.HD), jnp.float32)
+        sub = kc.paged_write_prefill(sub, (z, z), jnp.asarray([0]),
+                                     shared_blocks=jnp.asarray([[b0]]),
+                                     shared_lens=jnp.asarray([8]))
+        cache = kc.paged_merge_rows(cache, sub, idx)
+        assert int(np.asarray(cache.refcount)[b0]) == 2
+
+        # roll row 1 back INTO the shared block, then write over it
+        cache = kc.paged_rollback(cache, jnp.asarray([8, 6, 0]))
+        kv_c = self._kv(rng, 3)
+        valid = jnp.asarray([[False] * 3, [True] * 3, [False] * 3])
+        cache = kc.paged_write_chunk(cache, kv_c, valid)
+
+        tbl = np.asarray(cache.table)
+        ref = np.asarray(cache.refcount)
+        assert tbl[0, 0] == b0 and ref[b0] == 1   # donor keeps the block
+        assert tbl[1, 0] != b0                    # writer got a COW copy
+        _assert_conserved(cache)
+        k_view, _ = [np.asarray(v) for v in kc.paged_view(cache)]
+        np.testing.assert_array_equal(k_view[0, :8], np.asarray(kv_a[0])[0])
+        np.testing.assert_array_equal(k_view[1, :6],
+                                      np.asarray(kv_a[0])[0, :6])
+        np.testing.assert_array_equal(k_view[1, 6:9], np.asarray(kv_c[0])[1])
+        assert int(np.asarray(cache.next_pos)[1]) == 9
+        assert not bool(cache.alloc_failed)
+
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_chunk_overflow_drops_write_and_sets_sticky_flag(self, paged):
+        """REGRESSION: a chunk write past cache_len used to clamp onto
+        slot L-1, silently destroying the last committed token's K/V.
+        It must now DROP the write, freeze the counter, and set the
+        sticky per-row ``overflowed`` flag."""
+        rng = np.random.default_rng(3)
+        cache = self._cache() if paged else kc.init_attn_cache(
+            self.B, self.L, self.KV, self.HD, jnp.float32)
+        kv_p = self._kv(rng, 30)
+        cache = kc.write_prefill(cache, kv_p, jnp.asarray([30, 5, 0]))
+        kv_c = self._kv(rng, 4)
+        cache = kc.write_chunk(cache, kv_c, None)
+
+        np.testing.assert_array_equal(np.asarray(cache.overflowed),
+                                      [True, False, False])
+        np.testing.assert_array_equal(np.asarray(cache.next_pos),
+                                      [32, 9, 4])
+        k_view = np.asarray(kc.paged_view(cache)[0] if paged else cache.k)
+        # slot 31 holds the token that BELONGS there (chunk token 1),
+        # not the clamped 4th token of the old bug
+        np.testing.assert_array_equal(k_view[0, 31], np.asarray(kv_c[0])[0, 1])
+        assert int(np.asarray(cache.pos_arr)[0, 31]) == 31
+        # the flag is sticky across rollback, cleared by row reset
+        cache = kc.rollback(cache, jnp.minimum(cache.next_pos, 20))
+        assert bool(np.asarray(cache.overflowed)[0])
+        cache = kc.reset_rows(cache, jnp.asarray([True, False, False]))
+        assert not np.asarray(cache.overflowed).any()
+
+    def test_discard_tail_restores_overflow_snapshot(self):
+        """Overlap reconciliation: discarding the speculative tail must
+        also restore the pre-ahead sticky flags (an ahead-write overflow
+        that got discarded never happened)."""
+        rng = np.random.default_rng(4)
+        cache = self._cache()
+        cache = kc.write_prefill(cache, self._kv(rng, 30),
+                                 jnp.asarray([30, 30, 30]))
+        flags = kc.snapshot_sticky_flags(cache)
+        keep = cache.next_pos
+        cache = kc.write_chunk(cache, self._kv(rng, 4), None)
+        assert np.asarray(cache.overflowed).all()
+        cache = kc.discard_tail(cache, keep, flags.alloc_failed,
+                                flags.overflowed)
+        assert not np.asarray(cache.overflowed).any()
+        _assert_conserved(cache)
+
+
+# ---------------------------------------------------------------------------
+# Engine admission: pre-check accuracy, conservation, accounting
+# ---------------------------------------------------------------------------
+
+BS = 8
+
+
+@pytest.fixture(scope="module")
+def prefix_eng(serve_pair):
+    """One shared prefix-caching engine (4 rows, block size 8) so the
+    admission-shape jit cache is reused across the tests below."""
+    dm, tm, dp, tp = serve_pair
+    eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=4,
+                          C=8, s_max=4, cache_len=64, paged_kv=True,
+                          kv_block_size=BS, prefix_cache=True)
+    return eng, dp, tp
+
+
+def _prompt(rng, n):
+    return rng.integers(1, conftest.MIXED_TRACE_VOCAB,
+                        size=n).astype(np.int32)
+
+
+class TestPrefixAdmission:
+    def test_validation_requires_paged_pure_attention(self, serve_pair):
+        from repro.configs import get_reduced
+        from repro.models import Model
+        dm, tm, _, _ = serve_pair
+        with pytest.raises(ValueError, match="paged_kv"):
+            GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=2,
+                            C=8, s_max=4, cache_len=64, prefix_cache=True)
+        ring = Model(get_reduced("h2o-danube-3-4b", num_layers=2,
+                                 d_model=64, num_heads=2, num_kv_heads=2,
+                                 head_dim=32, d_ff=128,
+                                 vocab_size=conftest.MIXED_TRACE_VOCAB))
+        with pytest.raises(ValueError, match="pure-attention"):
+            GoodSpeedEngine(draft_model=ring, target_model=tm, n_servers=2,
+                            C=8, s_max=4, cache_len=64, paged_kv=True,
+                            prefix_cache=True)
+
+    def test_second_admission_attaches_donor_blocks(self, prefix_eng):
+        """A later arrival sharing the donor's 2-block prompt prefix
+        attaches those physical blocks (refcount 2) and allocates only
+        its 1-block unique suffix."""
+        eng, dp, tp = prefix_eng
+        rng = np.random.default_rng(10)
+        state = eng.cold_start(jax.random.PRNGKey(0))
+        p0 = _prompt(rng, 17)                              # feed 16: 2 blocks
+        state = eng._admit_rows(state, [0], {0: p0}, dp, tp)
+        free0 = _free_count(state.target_cache)
+        p1 = np.concatenate([p0[:16], _prompt(rng, 4)])    # feed 19
+        state = eng._admit_rows(state, [1], {1: p1}, dp, tp)
+
+        assert _free_count(state.target_cache) == free0 - 1
+        for cache in (state.target_cache, state.draft_cache):
+            for leaf in _paged_leaves(cache):
+                tbl = np.asarray(leaf.table)
+                ref = np.asarray(leaf.refcount)
+                np.testing.assert_array_equal(tbl[1, :2], tbl[0, :2])
+                assert np.all(ref[tbl[0, :2]] == 2)
+                assert tbl[1, 2] >= 0 and tbl[1, 2] not in tbl[0, :2]
+                _assert_conserved(leaf)
+        for name in ("target", "draft"):
+            assert eng._prefix_index[name].hits == 1
+
+    def test_precheck_matches_actual_allocation(self, prefix_eng):
+        """Property: the admission pre-check's block count is EXACT —
+        the free-list delta of every admission equals the predicted
+        suffix blocks, over 1-token prompts, block-boundary lengths and
+        mixed shared/unshared batches; refcounts stay conserved."""
+        eng, dp, tp = prefix_eng
+
+        @sweep(cases=5, seed=7)
+        def prop(draw):
+            self._precheck_case(eng, dp, tp, draw)
+        prop()
+
+    def _precheck_case(self, eng, dp, tp, draw):
+        rng = np.random.default_rng(draw.integers(0, 10_000))
+        state = eng.cold_start(jax.random.PRNGKey(1))
+
+        len0 = draw.choice([2, 9, 17, 24])                 # feed 1|8|16|23
+        feed0 = len0 - 1
+        p0 = _prompt(rng, len0)
+        free_before = _free_count(state.target_cache)
+        state = eng._admit_rows(state, [0], {0: p0}, dp, tp)
+        delta = free_before - _free_count(state.target_cache)
+        assert delta == kc.blocks_for(feed0, BS)
+        _assert_state_conserved(state)
+
+        # mixed batch of sharers: common prefix 0 | 1 | 2 full blocks
+        rows = list(range(1, 1 + draw.integers(1, 3)))
+        chain = (feed0 // BS) * BS
+        prompts, expect, commons = {}, 0, []
+        for i in rows:
+            common = min(draw.choice([0, BS, 2 * BS]), chain)
+            suffix = draw.choice([1, 2, BS, BS + 1])
+            prompts[i] = np.concatenate([p0[:common], _prompt(rng, suffix)])
+            expect += kc.blocks_for(len(prompts[i]) - 1 - common, BS)
+            commons.append(common)
+        free_before = _free_count(state.target_cache)
+        state = eng._admit_rows(state, rows, prompts, dp, tp)
+        assert free_before - _free_count(state.target_cache) == expect
+        _assert_state_conserved(state)
+
+        # re-admit the donor: its shared blocks survive via the sharers'
+        # refcounts, its private blocks free, the new prompt allocates
+        maxcommon = max(commons)
+        new_len = draw.choice([2, 9, 17])
+        pn = _prompt(rng, new_len)
+        free_before = _free_count(state.target_cache)
+        state = eng._admit_rows(state, [0], {0: pn}, dp, tp)
+        freed = kc.blocks_for(feed0, BS) - maxcommon // BS
+        assert _free_count(state.target_cache) \
+            == free_before + freed - kc.blocks_for(new_len - 1, BS)
+        _assert_state_conserved(state)
+
+    def test_exhaustion_raised_before_any_mutation(self, serve_pair):
+        """Sharing makes an admission fit that would exhaust the pool
+        unshared; a genuinely over-budget admission still raises
+        PoolExhaustedError with the pool state untouched."""
+        dm, tm, dp, tp = serve_pair
+        kw = dict(draft_model=dm, target_model=tm, n_servers=3, C=8,
+                  s_max=4, cache_len=32, paged_kv=True, kv_block_size=BS,
+                  kv_num_blocks=3)
+        rng = np.random.default_rng(11)
+        p0 = _prompt(rng, 17)                      # feed 16: 2 of 3 blocks
+        p1 = np.concatenate([p0[:16], _prompt(rng, 2)])    # feed 17
+
+        plain = GoodSpeedEngine(**kw)
+        state = plain.cold_start(jax.random.PRNGKey(2))
+        state = plain._admit_rows(state, [0], {0: p0}, dp, tp)
+        with pytest.raises(kc.PoolExhaustedError, match="exhausted"):
+            plain._admit_rows(state, [1], {1: p1}, dp, tp)
+
+        eng = GoodSpeedEngine(**kw, prefix_cache=True)
+        state = eng.cold_start(jax.random.PRNGKey(2))
+        state = eng._admit_rows(state, [0], {0: p0}, dp, tp)
+        state = eng._admit_rows(state, [1], {1: p1}, dp, tp)   # 1 block
+        assert _free_count(state.target_cache) == 0
+        free = _free_count(state.target_cache)
+        ref_before = np.asarray(
+            _paged_leaves(state.target_cache)[0].refcount).copy()
+        p2 = np.concatenate([p0[:16], _prompt(rng, 10)])   # needs 2 more
+        with pytest.raises(kc.PoolExhaustedError, match="exhausted"):
+            eng._admit_rows(state, [2], {2: p2}, dp, tp)
+        assert _free_count(state.target_cache) == free
+        np.testing.assert_array_equal(
+            np.asarray(_paged_leaves(state.target_cache)[0].refcount),
+            ref_before)
+
+    def test_kv_blocks_are_refcount_attributed_shares(self, prefix_eng):
+        """REGRESSION (stale accounting): ``kv_blocks`` is recomputed
+        from the live table with 1/refcount shares, so the per-request
+        attributions sum to EXACTLY the allocated block count and
+        ``kv_blocks_active == P - free_count``."""
+        eng, dp, tp = prefix_eng
+        rng = np.random.default_rng(12)
+        state = eng.cold_start(jax.random.PRNGKey(3))
+        mgr = RequestManager(4)
+        p0 = _prompt(rng, 17)                              # 2 blocks
+        p1 = np.concatenate([p0[:16], _prompt(rng, 4)])    # 2 shared + 1
+        mgr.submit(0, Request(prompt=p0, max_new_tokens=4))
+        fresh = mgr.admit()
+        state = eng._admit_rows(state, fresh,
+                                {i: mgr.active[i].prompt for i in fresh},
+                                dp, tp)
+        mgr.submit(1, Request(prompt=p1, max_new_tokens=4))
+        fresh = mgr.admit()
+        state = eng._admit_rows(state, fresh,
+                                {i: mgr.active[i].prompt for i in fresh},
+                                dp, tp)
+        eng._refresh_kv_blocks(state, mgr)
+
+        rows = [mgr.active[i] for i in range(4) if mgr.active[i] is not None]
+        assert len(rows) == 2
+        assert rows[0].kv_blocks == pytest.approx(1.0)     # 2 * 1/2
+        assert rows[1].kv_blocks == pytest.approx(2.0)     # 2 * 1/2 + 1
+        leaf = _paged_leaves(state.target_cache)[0]
+        allocated = leaf.refcount.shape[0] - _free_count(state.target_cache)
+        assert mgr.stats()["kv_blocks_active"] == pytest.approx(allocated)
+        assert allocated == 3
+
+    def test_release_evicts_only_last_holder_blocks(self, prefix_eng):
+        """Releasing one sharer keeps the index entries alive (the other
+        holder still pins the blocks); releasing the last holder evicts
+        them, and a fresh admission gets NO stale match."""
+        eng, dp, tp = prefix_eng
+        rng = np.random.default_rng(13)
+        state = eng.cold_start(jax.random.PRNGKey(4))
+        p0 = _prompt(rng, 17)
+        p1 = np.concatenate([p0[:16], _prompt(rng, 4)])
+        state = eng._admit_rows(state, [0], {0: p0}, dp, tp)
+        state = eng._admit_rows(state, [1], {1: p1}, dp, tp)
+        assert len(eng._prefix_index["target"].by_block) >= 2
+        state = eng._release_rows(state, [0])
+        # row 1 still holds the shared chain: entries survive
+        assert len(eng._prefix_index["target"].by_block) >= 2
+        state = eng._release_rows(state, [1])
+        assert not eng._prefix_index["target"].by_block
+        assert not eng._prefix_index["draft"].by_block
+        _assert_state_conserved(state)
+        p2 = np.concatenate([p0[:16], _prompt(rng, 2)])
+        free_before = _free_count(state.target_cache)
+        state = eng._admit_rows(state, [2], {2: p2}, dp, tp)
+        # full re-prefill: nothing stale to attach
+        assert free_before - _free_count(state.target_cache) \
+            == kc.blocks_for(len(p2) - 1, BS)
+
+
+# ---------------------------------------------------------------------------
+# serve(): the overflow health check (fixed-round path has no budget bound)
+# ---------------------------------------------------------------------------
+
+class TestServeOverflowCheck:
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_serve_raises_on_capacity_overrun(self, serve_pair, paged):
+        """REGRESSION: a fixed-round serve whose rows outrun cache_len
+        used to decode on against silently truncated K/V; it must now
+        fail loudly, naming the overrun rows."""
+        dm, tm, dp, tp = serve_pair
+        eng = GoodSpeedEngine(draft_model=dm, target_model=tm, n_servers=1,
+                              C=4, s_max=4, cache_len=24, paged_kv=paged,
+                              kv_block_size=BS)
+        rng = np.random.default_rng(14)
+        with pytest.raises(kc.CacheOverflowError, match=r"row\(s\) \[0\]"):
+            eng.serve(jax.random.PRNGKey(5), [_prompt(rng, 8)], dp, tp,
+                      rounds=30)
+
+
+# ---------------------------------------------------------------------------
+# Serving equivalence: prefix_cache=True emits IDENTICAL accepted tokens
+# ---------------------------------------------------------------------------
+
+def _shared_prefix_requests(k=6, prefix_len=33, max_new=5, seed=21):
+    """Arrival workload with a long common system-prompt prefix (2 full
+    16-token blocks) and short unique suffixes — EOS on odd indices like
+    the acceptance mixed trace."""
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, conftest.MIXED_TRACE_VOCAB, size=prefix_len)
+    reqs = []
+    for i in range(k):
+        suffix = rng.integers(1, conftest.MIXED_TRACE_VOCAB, size=1 + i % 4)
+        reqs.append(Request(
+            prompt=np.concatenate([prefix, suffix]).astype(np.int32),
+            max_new_tokens=max_new, eos_token=(4 if i % 2 else -1)))
+    return reqs
+
+
+def _run_shared(serve_pair, **engine_kw):
+    dm, tm, dp, tp = serve_pair
+    kw = dict(draft_model=dm, target_model=tm, n_servers=2, C=8, s_max=4,
+              cache_len=128, paged_kv=True, kv_block_size=16)
+    kw.update(engine_kw)
+    eng = GoodSpeedEngine(**kw)
+    rep = eng.serve_requests(jax.random.PRNGKey(0),
+                             _shared_prefix_requests(), dp, tp, rounds=60)
+    assert rep["summary"]["completed"] == 6
+    return eng, rep
+
+
+@pytest.mark.slow
+class TestPrefixEquivalenceTrace:
+    """``prefix_cache=True`` must emit the IDENTICAL accepted-token
+    sequences as the baseline paged engine on a shared-prefix workload:
+    the attached blocks hold bitwise the same K/V the row's own prefill
+    would have written."""
+
+    @pytest.fixture(scope="class")
+    def baseline(self, serve_pair):
+        cache = {}
+
+        def get(lanes):
+            if lanes not in cache:
+                _, rep = _run_shared(serve_pair, lanes=lanes)
+                cache[lanes] = conftest.generated_seqs(rep)
+            return cache[lanes]
+        return get
+
+    @pytest.mark.parametrize("backend,overlap", [
+        ("jnp", False), ("kernel", False), ("jnp", True), ("kernel", True)])
+    def test_sharing_matches_baseline(self, serve_pair, baseline, backend,
+                                      overlap):
+        eng, rep = _run_shared(serve_pair, prefix_cache=True,
+                               attn_backend=backend, overlap=overlap)
+        assert conftest.generated_seqs(rep) == baseline(1)
+        # sharing actually happened: later arrivals hit the index
+        assert eng._prefix_index["target"].hits > 0
+        assert eng._prefix_index["draft"].hits > 0
+
+    @pytest.mark.parametrize("overlap", [False, True])
+    def test_sharing_matches_baseline_lanes2(self, serve_pair, baseline,
+                                             overlap):
+        eng, rep = _run_shared(serve_pair, lanes=2, prefix_cache=True,
+                               overlap=overlap)
+        assert conftest.generated_seqs(rep) == baseline(2)
+        assert eng._prefix_index["target"].hits > 0
