@@ -45,8 +45,15 @@ overlap-check:
 prefix-check:
 	PYTHONPATH=src python -m pytest -x -q tests/test_prefix_cache.py
 
+# jit-discipline layer: jaxlint self-hosted over src/ at zero findings
+# (the CI gate), the linter's own fixture suite, and the runtime
+# guards (retrace budget + transfer fence)
+lint-check:
+	PYTHONPATH=src python -m repro.analysis.jaxlint src
+	PYTHONPATH=src python -m pytest -x -q tests/test_jaxlint.py tests/test_trace_guard.py
+
 bench:
 	PYTHONPATH=src python -m benchmarks.run
 
 .PHONY: test docs-check kernels-check placement-check lanes-check \
-	churn-check overlap-check prefix-check bench
+	churn-check overlap-check prefix-check lint-check bench

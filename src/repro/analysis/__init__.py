@@ -1,0 +1,2 @@
+"""Repo-native static analysis (`repro.analysis.jaxlint`): machine-checked
+jit discipline for the serving hot path."""

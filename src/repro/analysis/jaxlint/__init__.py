@@ -1,0 +1,37 @@
+"""jaxlint — repo-native static analysis for jit discipline.
+
+The GoodSpeed serving round only stays fast (and correct) while three
+invariants hold: donated buffers are never read after the dispatch that
+consumed them, the round graph never retraces in steady state, and no
+host sync sneaks into the jit-traced call tree.  Docstrings state these
+rules; jaxlint enforces them over ``src/`` as a tier-1 test and CI gate
+(``make lint-check``).
+
+Rule families (see docs/STATIC_ANALYSIS.md for the full table):
+
+  JL001  donation-after-use     read of a binding after it was passed in
+                                a ``donate_argnums`` position
+  JL002  jit-in-hot-scope       ``jax.jit`` created inside a per-round
+                                function or loop (retrace hazard)
+  JL003  unhashable-static-arg  dict/list/set literal passed in a jit
+                                static position (retrace hazard)
+  JL004  traced-python-branch   ``if``/``while``/``assert`` on a traced
+                                value inside the jit call tree
+  JL005  host-sync-in-jit       ``.item()``, ``int()/float()/bool()``,
+                                ``np.asarray``, f-string interpolation
+                                of a traced value inside the jit call
+                                tree
+  JL006  sticky-flag-overwrite  in-graph sticky error flags
+                                (``alloc_failed``/``overflowed``)
+                                plainly assigned instead of accumulated
+
+Suppression: append ``# jaxlint: disable=JLxxx`` (comma-separate several
+codes) on the flagged line or the line directly above it, with a comment
+saying why.
+
+Run: ``python -m repro.analysis.jaxlint src`` (or ``make lint-check``).
+"""
+from repro.analysis.jaxlint.core import (Finding, RULES, lint_file,
+                                         lint_paths, lint_source)
+
+__all__ = ["Finding", "RULES", "lint_file", "lint_paths", "lint_source"]

@@ -1,0 +1,7 @@
+"""``python -m repro.analysis.jaxlint src`` — the lint-check entry."""
+import sys
+
+from repro.analysis.jaxlint.core import main
+
+if __name__ == "__main__":
+    sys.exit(main())

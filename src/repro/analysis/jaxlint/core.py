@@ -1,0 +1,117 @@
+"""jaxlint driver: Finding type, per-file runner, CLI.
+
+``lint_source`` builds one ``ModuleModel`` (pure ``ast`` — linted code
+is never imported) and runs every registered rule over it; findings on
+a line carrying (or directly under) a ``# jaxlint: disable=JLxxx``
+comment are dropped.  ``lint_paths`` walks directories for ``*.py``.
+
+CLI: ``python -m repro.analysis.jaxlint src`` — prints
+``path:line:col: CODE message`` per finding, exit status 1 when any
+survive (the ``make lint-check`` / CI gate contract).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import sys
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} " \
+               f"{self.message}"
+
+
+# rule registry: code prefix -> check(model) -> list[Finding].  Imported
+# lazily at the bottom (the rule modules import Finding from here).
+RULES: dict = {}
+
+
+def lint_source(source: str, path: str = "<string>",
+                codes=None) -> list:
+    """Lint one module's source; returns suppression-filtered findings
+    sorted by position.  ``codes``: optional iterable restricting which
+    rule families run (prefix match on the finding code)."""
+    from repro.analysis.jaxlint.model import ModuleModel
+    try:
+        model = ModuleModel(source, path)
+    except SyntaxError as e:
+        return [Finding(code="JL000", path=path, line=e.lineno or 0,
+                        col=e.offset or 0,
+                        message=f"syntax error: {e.msg}")]
+    findings: list = []
+    for check in RULES.values():
+        findings.extend(check(model))
+    findings = [f for f in findings
+                if not model.suppressed(f.code, f.line)]
+    if codes is not None:
+        findings = [f for f in findings
+                    if any(f.code.startswith(c) for c in codes)]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.code))
+
+
+def lint_file(path, codes=None) -> list:
+    p = pathlib.Path(path)
+    return lint_source(p.read_text(), str(p), codes=codes)
+
+
+def lint_paths(paths, codes=None) -> list:
+    """Lint files and/or directories (recursed for ``*.py``)."""
+    files: list[pathlib.Path] = []
+    for raw in paths:
+        p = pathlib.Path(raw)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    findings: list = []
+    for f in files:
+        findings.extend(lint_file(f, codes=codes))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="jaxlint",
+        description="repo-native static analysis for jit discipline "
+                    "(see docs/STATIC_ANALYSIS.md)")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to lint")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule codes to run "
+                         "(e.g. JL001,JL005); default: all")
+    args = ap.parse_args(argv)
+    codes = [c.strip().upper() for c in args.select.split(",")] \
+        if args.select else None
+    findings = lint_paths(args.paths, codes=codes)
+    for f in findings:
+        print(f.format())
+    n_files = sum(1 for raw in args.paths for _ in (
+        pathlib.Path(raw).rglob("*.py")
+        if pathlib.Path(raw).is_dir() else [raw]))
+    if findings:
+        print(f"jaxlint: {len(findings)} finding(s) in {n_files} "
+              f"file(s)", file=sys.stderr)
+        return 1
+    print(f"jaxlint: {n_files} file(s) clean")
+    return 0
+
+
+# -- rule registration (after Finding exists; rules import it from here)
+from repro.analysis.jaxlint import rules_donation  # noqa: E402
+from repro.analysis.jaxlint import rules_hostsync  # noqa: E402
+from repro.analysis.jaxlint import rules_retrace  # noqa: E402
+from repro.analysis.jaxlint import rules_sticky  # noqa: E402
+
+RULES["JL001"] = rules_donation.check
+RULES["JL002-JL004"] = rules_retrace.check
+RULES["JL005"] = rules_hostsync.check
+RULES["JL006"] = rules_sticky.check

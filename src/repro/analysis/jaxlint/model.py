@@ -1,0 +1,583 @@
+"""Per-module semantic model backing the jaxlint rules.
+
+One ``ModuleModel`` is built per linted file (pure ``ast``, no imports of
+the linted code).  It answers the questions every rule family needs:
+
+  * which functions are JIT ROOTS — decorated ``@jax.jit`` /
+    ``@functools.partial(jax.jit, ...)``, or passed to a ``jax.jit(...)``
+    call anywhere in the module (the engine's
+    ``object.__setattr__(self, "_round_fn", jax.jit(self._round_core,
+    donate_argnums=(0,)))`` idiom resolves the method by name);
+  * which functions are JIT-REACHABLE — the same-module call-graph
+    closure over the roots, following ``f(...)``, ``self.f(...)`` and
+    bare-name function arguments (closures handed to ``jax.lax.scan`` /
+    ``jax.tree.map`` run in-graph too).  Cross-module reachability is
+    deliberately out of scope: each module is linted against its own
+    roots, so in-graph helper modules get their own roots or stay
+    host-annotated;
+  * which call-site bindings DONATE which argument positions — direct
+    ``jax.jit(..., donate_argnums=...)`` bindings, factory functions
+    returning such a jit, and the TRANSITIVE closure (a function that
+    forwards its own parameter into a donated position donates that
+    parameter to its callers, which is how ``run_round``'s donation of
+    ``state`` is discovered from ``_round_fn``'s);
+  * which local names hold TRACED values inside a function — parameters
+    annotated with an array type (``Array`` / ``jnp.ndarray`` /
+    ``jax.Array``), every non-static parameter of a jit ROOT, and names
+    assigned from ``jnp.* / jax.lax.* / jax.random.*`` expressions or
+    from other traced names.  Reads of static metadata
+    (``.shape/.ndim/.dtype/.size``, ``len()``) do not propagate
+    tracedness.
+
+Suppressions: ``# jaxlint: disable=JL001[,JL002...]`` on the finding's
+line or the line directly above suppresses those codes (``all`` matches
+every code).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Optional
+
+# parameter annotations treated as "this is a traced array"
+ARRAY_ANNOTATIONS = {"Array", "ndarray", "jnp.ndarray", "jax.Array",
+                     "jnp.array", "chex.Array"}
+# attribute reads that yield static (trace-time) metadata, not traced data
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "weak_type"}
+# call roots whose results are traced arrays
+TRACED_CALL_ROOTS = {"jnp", "lax", "random", "nn"}
+INIT_SCOPES = {"__init__", "__post_init__", "__new__", "__init_subclass__"}
+
+_SUPPRESS_RE = re.compile(r"#\s*jaxlint:\s*disable=([A-Za-z0-9_,\s]+)")
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    name: str
+    qualname: str
+    node: ast.AST                     # FunctionDef | AsyncFunctionDef
+    params: list                      # ordered parameter names (incl. self)
+    annotations: dict                 # param -> annotation source (or None)
+    defaults: set                     # params that carry a default value
+    default_nodes: dict               # param -> default value AST node
+    is_method: bool                   # defined in a class body, self/cls 1st
+    lexical_chain: tuple              # enclosing def names, outermost first
+    in_class: Optional[str]
+    jit_root: bool = False
+    static_names: frozenset = frozenset()   # static_argnames of its jit
+    static_nums: tuple = ()                 # static_argnums of its jit
+    calls: set = dataclasses.field(default_factory=set)  # callee names
+
+    @property
+    def callable_params(self):
+        """Parameters as seen from a call site (self/cls stripped)."""
+        if self.is_method and self.params and self.params[0] in ("self",
+                                                                "cls"):
+            return self.params[1:]
+        return self.params
+
+
+def _ann_source(node) -> Optional[str]:
+    if node is None:
+        return None
+    try:
+        return ast.unparse(node)
+    except Exception:                                  # pragma: no cover
+        return None
+
+
+def dotted_path(node) -> Optional[str]:
+    """``state.draft_cache`` -> "state.draft_cache"; None when the chain
+    is not a pure Name/Attribute spine (calls, subscripts...)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def is_jax_jit(node) -> bool:
+    """True for the callable expression ``jax.jit`` or bare ``jit``."""
+    if isinstance(node, ast.Attribute) and node.attr == "jit":
+        return isinstance(node.value, ast.Name) and node.value.id == "jax"
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def jit_call(node) -> Optional[ast.Call]:
+    """The ``jax.jit(...)`` call inside ``node``, unwrapping one level of
+    ``functools.partial(jax.jit, ...)`` (decorator idiom).  For partial,
+    the partial call itself is returned (its keywords carry the jit
+    options)."""
+    if not isinstance(node, ast.Call):
+        return None
+    if is_jax_jit(node.func):
+        return node
+    # functools.partial(jax.jit, static_argnames=...) / partial(jax.jit,..)
+    f = node.func
+    is_partial = (isinstance(f, ast.Name) and f.id == "partial") or \
+        (isinstance(f, ast.Attribute) and f.attr == "partial")
+    if is_partial and node.args and is_jax_jit(node.args[0]):
+        return node
+    return None
+
+
+def _literal_tuple(node) -> tuple:
+    """Best-effort literal extraction of static_argnums/names values."""
+    try:
+        v = ast.literal_eval(node)
+    except Exception:
+        return ()
+    if isinstance(v, (str, int)):
+        return (v,)
+    if isinstance(v, (tuple, list, set)):
+        return tuple(v)
+    return ()
+
+
+def jit_options(call: ast.Call) -> dict:
+    """donate_argnums / static_argnums / static_argnames of a jit (or
+    partial-of-jit) call, as literal tuples."""
+    out = {"donate_argnums": (), "static_argnums": (), "static_argnames": ()}
+    for kw in call.keywords:
+        if kw.arg in out:
+            out[kw.arg] = _literal_tuple(kw.value)
+    return out
+
+
+class _FunctionCollector(ast.NodeVisitor):
+    """First pass: every function with its lexical position and calls."""
+
+    def __init__(self):
+        self.functions: list[FunctionInfo] = []
+        self._class_stack: list[str] = []
+        self._def_stack: list[str] = []
+
+    def _visit_def(self, node):
+        args = node.args
+        params = [a.arg for a in
+                  args.posonlyargs + args.args + args.kwonlyargs]
+        annotations = {a.arg: _ann_source(a.annotation)
+                       for a in args.posonlyargs + args.args + args.kwonlyargs}
+        ndef = len(args.defaults)
+        pos = args.posonlyargs + args.args
+        default_nodes = dict(zip([a.arg for a in pos[-ndef:]],
+                                 args.defaults)) if ndef else {}
+        default_nodes.update({a.arg: d for a, d in
+                              zip(args.kwonlyargs, args.kw_defaults)
+                              if d is not None})
+        defaults = set(default_nodes)
+        in_class = self._class_stack[-1] if self._class_stack and \
+            not self._def_stack else None
+        info = FunctionInfo(
+            name=node.name,
+            qualname=".".join(self._class_stack + self._def_stack
+                              + [node.name]),
+            node=node, params=params, annotations=annotations,
+            defaults=defaults, default_nodes=default_nodes,
+            is_method=in_class is not None and bool(params)
+            and params[0] in ("self", "cls"),
+            lexical_chain=tuple(self._def_stack),
+            in_class=in_class)
+        self.functions.append(info)
+        self._def_stack.append(node.name)
+        self.generic_visit(node)
+        self._def_stack.pop()
+
+    visit_FunctionDef = visit_AsyncFunctionDef = _visit_def
+
+    def visit_ClassDef(self, node):
+        self._class_stack.append(node.name)
+        self.generic_visit(node)
+        self._class_stack.pop()
+
+
+class ModuleModel:
+    def __init__(self, source: str, path: str = "<string>"):
+        self.source = source
+        self.path = path
+        self.tree = ast.parse(source)
+        self.lines = source.splitlines()
+        self.suppressions = self._collect_suppressions()
+
+        col = _FunctionCollector()
+        col.visit(self.tree)
+        self.functions = col.functions
+        self.by_name: dict[str, list[FunctionInfo]] = {}
+        for f in self.functions:
+            self.by_name.setdefault(f.name, []).append(f)
+        # function body ownership: innermost enclosing FunctionInfo per node
+        self._owner = {}
+        for f in self.functions:
+            for sub in ast.walk(f.node):
+                self._owner[sub] = f        # later (inner) defs overwrite
+        for f in self.functions:
+            self._owner[f.node] = f
+
+        self._mark_jit_roots()
+        self._collect_calls()
+        self.donators = self._collect_donators()
+        self.reachable = self._reachable_set()
+        self._prop: dict[int, set] = {}
+        self._propagate_call_tracedness()
+
+    # -- suppressions --------------------------------------------------
+    def _collect_suppressions(self) -> dict[int, set]:
+        sup: dict[int, set] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                sup[i] = {c.strip().upper()
+                          for c in m.group(1).split(",") if c.strip()}
+        return sup
+
+    def suppressed(self, code: str, line: int) -> bool:
+        for ln in (line, line - 1):
+            codes = self.suppressions.get(ln)
+            if codes and (code.upper() in codes or "ALL" in codes):
+                return True
+        return False
+
+    # -- jit roots -----------------------------------------------------
+    def _apply_jit_mark(self, fn: FunctionInfo, opts: dict):
+        fn.jit_root = True
+        fn.static_names = fn.static_names | frozenset(
+            a for a in opts["static_argnames"] if isinstance(a, str))
+        nums = tuple(a for a in opts["static_argnums"] if isinstance(a, int))
+        fn.static_nums = tuple(sorted(set(fn.static_nums + nums)))
+        # static_argnums index call-site positions; map them onto names
+        cp = fn.callable_params
+        fn.static_names = fn.static_names | frozenset(
+            cp[i] for i in nums if i < len(cp))
+
+    def _mark_jit_roots(self):
+        # decorators
+        for f in self.functions:
+            for dec in f.node.decorator_list:
+                if is_jax_jit(dec):
+                    self._apply_jit_mark(f, jit_options(
+                        ast.Call(func=dec, args=[], keywords=[])))
+                else:
+                    call = jit_call(dec)
+                    if call is not None:
+                        self._apply_jit_mark(f, jit_options(call))
+        # jax.jit(X) call sites anywhere in the module
+        for node in ast.walk(self.tree):
+            call = jit_call(node)
+            if call is None or call is not node:
+                continue
+            if not is_jax_jit(call.func):   # partial(jax.jit, ...) decorator
+                continue                    # already handled above
+            if not call.args:
+                continue
+            target = call.args[0]
+            opts = jit_options(call)
+            name = None
+            if isinstance(target, ast.Name):
+                name = target.id
+            elif isinstance(target, ast.Attribute) and \
+                    isinstance(target.value, ast.Name) and \
+                    target.value.id in ("self", "cls"):
+                name = target.attr
+            if name is not None:
+                for f in self.by_name.get(name, ()):
+                    self._apply_jit_mark(f, opts)
+
+    # -- call graph ----------------------------------------------------
+    def _callee_name(self, call: ast.Call) -> Optional[str]:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return f.id
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id in ("self", "cls"):
+            return f.attr
+        return None
+
+    def _collect_calls(self):
+        for f in self.functions:
+            own = set()
+            for node in ast.walk(f.node):
+                if self._owner.get(node) is not f:
+                    continue
+                if isinstance(node, ast.Call):
+                    name = self._callee_name(node)
+                    if name and name in self.by_name:
+                        own.add(name)
+                    # bare-name function arguments (closures handed to
+                    # scan / tree.map / fori_loop run in-graph)
+                    for a in node.args:
+                        if isinstance(a, ast.Name) and a.id in self.by_name:
+                            own.add(a.id)
+            f.calls = own
+        # nested defs are callable from their parent even if only
+        # referenced via Name loads outside calls
+        for f in self.functions:
+            if f.lexical_chain:
+                parent = f.lexical_chain[-1]
+                for p in self.by_name.get(parent, ()):
+                    for node in ast.walk(p.node):
+                        if isinstance(node, ast.Name) and node.id == f.name \
+                                and isinstance(node.ctx, ast.Load) \
+                                and self._owner.get(node) is p:
+                            p.calls.add(f.name)
+                            break
+
+    def _reachable_set(self) -> set:
+        seen: set[int] = set()
+        frontier = [f for f in self.functions if f.jit_root]
+        reach = set()
+        while frontier:
+            f = frontier.pop()
+            if id(f) in seen:
+                continue
+            seen.add(id(f))
+            reach.add(f.qualname)
+            for name in f.calls:
+                frontier.extend(self.by_name.get(name, ()))
+        return reach
+
+    def is_hot(self, fn: FunctionInfo) -> bool:
+        """Jit root, or reachable from one within this module."""
+        return fn.jit_root or fn.qualname in self.reachable
+
+    # -- donation registry ---------------------------------------------
+    def _donating_expr(self, node, factories: dict) -> Optional[tuple]:
+        """Donated call-site positions of the callable produced by
+        ``node``: a ``jax.jit(target, donate_argnums=...)`` call, or a
+        call to a factory whose return is one."""
+        call = jit_call(node)
+        if call is not None and is_jax_jit(call.func):
+            donate = jit_options(call)["donate_argnums"]
+            if donate:
+                return tuple(int(d) for d in donate)
+            return None
+        if isinstance(node, ast.Call):
+            name = self._callee_name(node)
+            if name in factories:
+                return factories[name]
+        return None
+
+    def _collect_donators(self) -> dict[str, tuple]:
+        # factories: functions whose return value is a donating jit
+        factories: dict[str, tuple] = {}
+        for f in self.functions:
+            for node in ast.walk(f.node):
+                if isinstance(node, ast.Return) and node.value is not None:
+                    call = jit_call(node.value)
+                    if call is not None and is_jax_jit(call.func):
+                        donate = jit_options(call)["donate_argnums"]
+                        if donate:
+                            factories[f.name] = tuple(
+                                int(d) for d in donate)
+        donators: dict[str, tuple] = {}
+        for node in ast.walk(self.tree):
+            # N = jax.jit(..., donate_argnums=...) / N = factory(...)
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                pos = self._donating_expr(node.value, factories)
+                if pos:
+                    tgt = dotted_path(node.targets[0])
+                    if tgt:
+                        donators[tgt.split(".")[-1]] = pos
+            # object.__setattr__(self, "N", <donating expr>)
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "__setattr__" and len(node.args) == 3:
+                pos = self._donating_expr(node.args[2], factories)
+                if pos and isinstance(node.args[1], ast.Constant) and \
+                        isinstance(node.args[1].value, str):
+                    donators[node.args[1].value] = pos
+        # decorated defs: @partial(jax.jit, donate_argnums=...)
+        for f in self.functions:
+            for dec in f.node.decorator_list:
+                call = jit_call(dec)
+                if call is not None:
+                    donate = jit_options(call)["donate_argnums"]
+                    if donate:
+                        donators[f.name] = tuple(int(d) for d in donate)
+        # transitive closure: a function forwarding its own parameter into
+        # a donated position donates that parameter to its callers
+        for _ in range(len(self.functions) + 1):
+            grew = False
+            for f in self.functions:
+                mine = set(donators.get(f.name, ()))
+                for node in ast.walk(f.node):
+                    if not isinstance(node, ast.Call) or \
+                            self._owner.get(node) is not f:
+                        continue
+                    key = self._donation_key(node)
+                    if key is None or key not in donators:
+                        continue
+                    for p in donators[key]:
+                        if p < len(node.args) and \
+                                isinstance(node.args[p], ast.Name):
+                            pname = node.args[p].id
+                            cp = f.callable_params
+                            if pname in cp:
+                                mine.add(cp.index(pname))
+                if mine and tuple(sorted(mine)) != donators.get(f.name, ()):
+                    donators[f.name] = tuple(sorted(mine))
+                    grew = True
+            if not grew:
+                break
+        return donators
+
+    def _donation_key(self, call: ast.Call) -> Optional[str]:
+        """Registry key for a call expression: the bound name for
+        ``f(...)``, ``self.f(...)`` and ``self._round_fn(...)`` alike."""
+        f = call.func
+        if isinstance(f, ast.Name):
+            return f.id
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id in ("self", "cls"):
+            return f.attr
+        return None
+
+    # -- traced-name inference -----------------------------------------
+    def traced_params(self, fn: FunctionInfo) -> set:
+        traced = set(self._prop.get(id(fn), ()))
+        for p in fn.params:
+            if p in ("self", "cls") or p in fn.static_names:
+                continue
+            ann = fn.annotations.get(p)
+            if ann in ARRAY_ANNOTATIONS:
+                traced.add(p)
+            elif fn.jit_root and ann is None and p not in fn.defaults:
+                # jit ROOT: unannotated, defaultless, non-static params
+                # are traced operands by construction
+                traced.add(p)
+        return traced - fn.static_names
+
+    def _propagate_call_tracedness(self):
+        """Call-site propagation: a HOT caller passing a traced value at
+        parameter position i of a same-module callee marks that callee
+        parameter traced (``helper(x)`` inside a jit root hands the
+        tracer straight through).  Annotated non-Array params keep
+        their annotation's word — ``deferred: bool`` style host flags
+        are not promoted.  Module-wide fixpoint."""
+        for _ in range(len(self.functions) + 1):
+            grew = False
+            for f in self.functions:
+                if not self.is_hot(f):
+                    continue
+                traced = self.traced_names(f)
+                if not traced:
+                    continue
+                for node in self.iter_function_nodes(f):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    name = self._callee_name(node)
+                    if not name or name not in self.by_name:
+                        continue
+                    for callee in self.by_name[name]:
+                        cp = callee.callable_params
+                        slot = self._prop.setdefault(id(callee), set())
+                        hits = []
+                        for i, a in enumerate(node.args):
+                            if i < len(cp) and \
+                                    self.mentions_traced(a, traced):
+                                hits.append(cp[i])
+                        for kw in node.keywords:
+                            if kw.arg and kw.arg in cp and \
+                                    self.mentions_traced(kw.value, traced):
+                                hits.append(kw.arg)
+                        for p in hits:
+                            ann = callee.annotations.get(p)
+                            if ann is not None and \
+                                    ann not in ARRAY_ANNOTATIONS:
+                                continue    # annotated host param
+                            if p not in slot:
+                                slot.add(p)
+                                grew = True
+            if not grew:
+                break
+
+    def mentions_traced(self, expr, traced: set) -> Optional[str]:
+        """First traced name read by ``expr`` for its VALUE — reads of
+        static metadata (``x.shape``, ``len(x)``, ``x.ndim``...) do not
+        count.  Returns the name, or None."""
+        hit: list[str] = []
+
+        def visit(node) -> None:
+            if hit:
+                return
+            if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+                return                      # x.shape / x.ndim: static
+            if isinstance(node, ast.Call):
+                fname = node.func
+                if isinstance(fname, ast.Name) and fname.id in ("len",
+                                                                "isinstance",
+                                                                "type"):
+                    return                  # static metadata
+                for child in list(node.args) + [k.value
+                                                for k in node.keywords]:
+                    visit(child)
+                visit(node.func)
+                return
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                if node.id in traced:
+                    hit.append(node.id)
+                return
+            for child in ast.iter_child_nodes(node):
+                visit(child)
+
+        visit(expr)
+        return hit[0] if hit else None
+
+    def traced_names(self, fn: FunctionInfo) -> set:
+        """Traced parameters plus names assigned from traced/jnp
+        expressions, to a local fixpoint."""
+        traced = self.traced_params(fn)
+        assigns = []
+        for node in ast.walk(fn.node):
+            if self._owner.get(node) is not fn:
+                continue
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                assigns.append(node)
+        for _ in range(len(assigns) + 1):
+            grew = False
+            for node in assigns:
+                value = node.value
+                if value is None:
+                    continue
+                src = self.mentions_traced(value, traced) or \
+                    self._jnp_producer(value)
+                if not src:
+                    continue
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    for leaf in ast.walk(t):
+                        if isinstance(leaf, ast.Name) and \
+                                leaf.id not in traced:
+                            traced.add(leaf.id)
+                            grew = True
+            if not grew:
+                break
+        return traced
+
+    def _jnp_producer(self, expr) -> Optional[str]:
+        """Does ``expr`` contain a call rooted at jnp/jax.lax/jax.random
+        (producing a traced array regardless of its inputs)?"""
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                path = dotted_path(node.func)
+                if path:
+                    root = path.split(".")[0]
+                    if root in TRACED_CALL_ROOTS or \
+                            path.startswith(("jax.lax.", "jax.random.",
+                                             "jax.nn.", "jnp.")):
+                        return path
+        return None
+
+    # -- misc ----------------------------------------------------------
+    def owner(self, node) -> Optional[FunctionInfo]:
+        return self._owner.get(node)
+
+    def iter_function_nodes(self, fn: FunctionInfo):
+        """Nodes belonging to ``fn``'s own body (nested defs excluded)."""
+        for node in ast.walk(fn.node):
+            if self._owner.get(node) is fn:
+                yield node

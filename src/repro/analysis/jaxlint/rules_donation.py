@@ -1,0 +1,198 @@
+"""JL001 — donation-after-use.
+
+The engine's jit entry points donate their state/cache operands
+(``donate_argnums``): after the dispatch, the argument's buffers are
+DELETED and only the returned value is alive (engine.py: "state is
+donated to the compiled phases — use the returned state, not the
+argument").  Reading the donated binding afterwards either crashes with
+a deleted-buffer error on device or, worse, silently disables donation
+and doubles peak memory.
+
+The checker walks each function's statements in order with a small
+abstract environment of donated dotted paths:
+
+  * a call to a donating binding (``self._round_fn``, ``run_round``, a
+    ``jax.jit(..., donate_argnums=...)`` result — see
+    ``ModuleModel.donators``, which includes the transitive closure)
+    marks the argument at each donated position, when it is a plain
+    ``name`` or dotted ``name.attr`` path;
+  * any later read of that path (or a sub-path of it) is a finding;
+  * rebinding the name (``state, stats = self.run_round(state, ...)``)
+    clears it — the donate-and-rebind idiom is the sanctioned pattern;
+  * ``if``/``else`` branches analyze independently and merge; a branch
+    that TERMINATES (return/raise/break/continue) contributes nothing
+    to the fall-through state, so the early-return dispatch idiom
+    (``if sync: return self._round_fn(state, ...)`` followed by
+    overlap-phase reads of ``state``) is clean; loop bodies run twice
+    so a donation at the bottom of a round loop flags the read at the
+    top of the next iteration.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.jaxlint.core import Finding
+from repro.analysis.jaxlint.model import ModuleModel, dotted_path
+
+CODE = "JL001"
+
+
+def _load_paths(expr):
+    """Maximal dotted paths read (Load context) inside ``expr``."""
+    out = []
+
+    def visit(node):
+        p = dotted_path(node)
+        if p is not None and isinstance(node, (ast.Name, ast.Attribute)):
+            ctx = getattr(node, "ctx", None)
+            if isinstance(ctx, ast.Load):
+                out.append((p, node))
+                return                      # maximal path: stop descending
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    if expr is not None:
+        visit(expr)
+    return out
+
+
+def _kill(donated: dict, path: str):
+    """Rebinding ``path`` clears every donated entry rooted at it."""
+    for k in list(donated):
+        if k == path or k.startswith(path + "."):
+            del donated[k]
+
+
+def _stmt_exprs(st):
+    """The expressions a statement evaluates at its own level (compound
+    bodies are recursed into separately)."""
+    if isinstance(st, (ast.If, ast.While)):
+        return [st.test]
+    if isinstance(st, ast.For):
+        return [st.iter]
+    if isinstance(st, (ast.With, ast.AsyncWith)):
+        return [i.context_expr for i in st.items]
+    if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        return []
+    return [st]
+
+
+def _terminates(stmts) -> bool:
+    """Does this block unconditionally leave the enclosing code path?
+    (Its donation state then never reaches the statements after the
+    ``if``.)"""
+    for st in stmts:
+        if isinstance(st, (ast.Return, ast.Raise, ast.Break, ast.Continue)):
+            return True
+        if isinstance(st, ast.If) and st.orelse \
+                and _terminates(st.body) and _terminates(st.orelse):
+            return True
+    return False
+
+
+def _kills(st):
+    """Paths rebound by this statement (assignment/for targets)."""
+    targets = []
+    if isinstance(st, ast.Assign):
+        targets = st.targets
+    elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+        targets = [st.target]
+    elif isinstance(st, ast.For):
+        targets = [st.target]
+    elif isinstance(st, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in st.items if i.optional_vars]
+    out = []
+    for t in targets:
+        for node in ast.walk(t):
+            p = dotted_path(node)
+            if p is not None and isinstance(node, (ast.Name, ast.Attribute)):
+                out.append(p)
+    return out
+
+
+class _FnChecker:
+    def __init__(self, model: ModuleModel, fn):
+        self.model = model
+        self.fn = fn
+        self.findings: dict = {}            # dedup key -> Finding
+
+    def run(self):
+        body = getattr(self.fn.node, "body", [])
+        self._block(body, {})
+        return list(self.findings.values())
+
+    # -- statement walk ------------------------------------------------
+    def _block(self, stmts, donated: dict):
+        for st in stmts:
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+                continue                     # separate scope
+            for expr in _stmt_exprs(st):
+                self._flag_reads(expr, donated)
+                self._record_donations(expr, donated)
+            for path in _kills(st):
+                _kill(donated, path)
+            if isinstance(st, ast.If):
+                d_then, d_else = dict(donated), dict(donated)
+                self._block(st.body, d_then)
+                self._block(st.orelse, d_else)
+                donated.clear()
+                if not _terminates(st.body):
+                    donated.update(d_then)
+                if not _terminates(st.orelse):
+                    donated.update(d_else)
+            elif isinstance(st, (ast.For, ast.While)):
+                d_loop = dict(donated)
+                for _ in range(2):           # 2nd pass: wraparound reads
+                    self._block(st.body, d_loop)
+                    for expr in _stmt_exprs(st):
+                        self._flag_reads(expr, d_loop)
+                        self._record_donations(expr, d_loop)
+                self._block(st.orelse, d_loop)
+                donated.update(d_loop)       # union: loop may run 0 times
+            elif isinstance(st, (ast.With, ast.AsyncWith)):
+                self._block(st.body, donated)
+            elif isinstance(st, ast.Try):
+                self._block(st.body, donated)
+                for h in st.handlers:
+                    self._block(h.body, donated)
+                self._block(st.orelse, donated)
+                self._block(st.finalbody, donated)
+
+    # -- reads / donations ---------------------------------------------
+    def _flag_reads(self, expr, donated: dict):
+        if not donated:
+            return
+        for path, node in _load_paths(expr):
+            for dpath, (dline, dcallee) in donated.items():
+                if path == dpath or path.startswith(dpath + "."):
+                    key = (node.lineno, node.col_offset, path)
+                    self.findings.setdefault(key, Finding(
+                        code=CODE, path=self.model.path,
+                        line=node.lineno, col=node.col_offset,
+                        message=(f"`{path}` is read after being donated "
+                                 f"to `{dcallee}` (line {dline}); its "
+                                 f"buffers are deleted — use the "
+                                 f"returned value instead")))
+
+    def _record_donations(self, expr, donated: dict):
+        if expr is None:
+            return
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            key = self.model._donation_key(node)
+            if key is None or key not in self.model.donators:
+                continue
+            for pos in self.model.donators[key]:
+                if pos < len(node.args):
+                    p = dotted_path(node.args[pos])
+                    if p is not None:
+                        donated[p] = (node.lineno, key)
+
+
+def check(model: ModuleModel):
+    findings = []
+    for fn in model.functions:
+        findings.extend(_FnChecker(model, fn).run())
+    return findings

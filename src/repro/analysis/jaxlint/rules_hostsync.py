@@ -1,0 +1,97 @@
+"""JL005 — host sync in the jit call tree.
+
+Inside the round graph every value is a traced array (or, between
+dispatches, an on-device buffer the host must not touch).  An operation
+that needs the CONCRETE value — ``.item()``, ``int()/float()/bool()``,
+``np.asarray``, interpolating an array into an f-string — either fails
+under trace or, in the dispatch gap of the overlap pipeline, silently
+blocks the host on the device stream, serializing the four phase
+dispatches the async round exists to overlap.
+
+Flagged inside jit roots and functions reachable from them (same-module
+call-graph closure — ``ModuleModel.is_hot``):
+
+  * ``x.item()`` / ``x.tolist()`` / ``x.block_until_ready()`` — always
+    a device sync, flagged unconditionally;
+  * ``np.<anything>(...)`` whose arguments read a traced value — numpy
+    forces a device->host transfer of its inputs (trace-time numpy on
+    static shapes/metadata is fine and not flagged);
+  * ``int(x)`` / ``float(x)`` / ``bool(x)`` / ``complex(x)`` on a
+    traced value — concretization;
+  * f-strings interpolating a traced value — formatting concretizes.
+
+Host-side orchestration (admission, placement views, health tracking,
+stats materialization) lives OUTSIDE the jit call tree and is never
+flagged; the runtime complement is the transfer-guard regression test
+(tests/test_trace_guard.py) which proves the steady-state round
+performs no implicit transfers at all.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.jaxlint.core import Finding
+from repro.analysis.jaxlint.model import ModuleModel, dotted_path
+
+CODE = "JL005"
+
+SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+NP_ROOTS = {"np", "numpy", "onp"}
+CONCRETIZERS = {"int", "float", "bool", "complex"}
+
+
+def check(model: ModuleModel):
+    findings = []
+
+    def flag(node, msg):
+        findings.append(Finding(code=CODE, path=model.path,
+                                line=node.lineno, col=node.col_offset,
+                                message=msg))
+
+    for fn in model.functions:
+        if not model.is_hot(fn):
+            continue
+        traced = model.traced_names(fn)
+        for node in model.iter_function_nodes(fn):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Attribute) and \
+                        f.attr in SYNC_METHODS and not node.args:
+                    flag(node, f"`.{f.attr}()` inside the jit call tree "
+                               f"of `{fn.name}` — forces a device sync "
+                               f"in the hot path; keep the value on "
+                               f"device or move the read outside the "
+                               f"round graph")
+                    continue
+                path = dotted_path(f)
+                if path and path.split(".")[0] in NP_ROOTS and traced:
+                    name = next((n for a in node.args
+                                 for n in [model.mentions_traced(a, traced)]
+                                 if n), None)
+                    if name:
+                        flag(node, f"`{path}` applied to traced value "
+                                   f"`{name}` inside the jit call tree "
+                                   f"of `{fn.name}` — numpy forces a "
+                                   f"device->host transfer; use jnp")
+                    continue
+                if isinstance(f, ast.Name) and f.id in CONCRETIZERS \
+                        and len(node.args) == 1 and traced:
+                    name = model.mentions_traced(node.args[0], traced)
+                    if name:
+                        flag(node, f"`{f.id}()` concretizes traced value "
+                                   f"`{name}` inside the jit call tree "
+                                   f"of `{fn.name}` — a host sync (and a "
+                                   f"trace error under jit)")
+            elif isinstance(node, ast.JoinedStr) and traced:
+                for part in node.values:
+                    if isinstance(part, ast.FormattedValue):
+                        name = model.mentions_traced(part.value, traced)
+                        if name:
+                            flag(node, f"f-string interpolates traced "
+                                       f"value `{name}` inside the jit "
+                                       f"call tree of `{fn.name}` — "
+                                       f"formatting concretizes; use "
+                                       f"jax.debug.print or move the "
+                                       f"format outside the round graph")
+                            break
+    return findings

@@ -1,0 +1,236 @@
+"""JL002 / JL003 / JL004 — retrace hazards.
+
+A GoodSpeed serving run must never retrace a round phase more than once
+per bucket (engine.py's ``round_trace_counts`` contract): a retrace in
+the round loop stalls every server for a full XLA compile.  Three ways
+code acquires that hazard, three rules:
+
+JL002  jit-in-hot-scope.  ``jax.jit`` (or ``functools.partial(jax.jit,
+       ...)``) evaluated inside an ordinary function creates a FRESH
+       compilation cache per call — in a per-round function that is a
+       guaranteed retrace.  Allowed scopes: module/class level and
+       construction-time scopes (``__init__`` / ``__post_init__`` /
+       ``__new__`` / ``__init_subclass__``), including factories nested
+       inside them (the engine's ``_make_prefill`` idiom).  A
+       launch-time jit in a run-once entry point is legitimate —
+       suppress it with a justification comment.
+
+JL003  unhashable-static-arg.  A dict/list/set literal passed in a jit
+       static position (``static_argnums`` / ``static_argnames``)
+       either raises ``unhashable type`` or — wrapped in a custom
+       hashable — silently keys the compilation cache on identity,
+       retracing every call.
+
+JL004  traced-python-branch.  ``if`` / ``while`` / ``assert`` (or a
+       conditional expression) whose test reads a TRACED value inside
+       the jit call tree: under trace this raises
+       ``ConcretizationTypeError`` at best, and when the value is
+       accidentally concrete (e.g. a host fallback path) it silently
+       bakes the branch into the compiled graph — a per-value retrace
+       or a wrong graph.  ``x is None`` / ``x is not None`` tests are
+       exempt (structure checks, resolved at trace time), as are
+       parameters named in ``static_argnames`` and reads of static
+       metadata (``.shape`` / ``.ndim`` / ``len()``).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.jaxlint.core import Finding
+from repro.analysis.jaxlint.model import (INIT_SCOPES, ModuleModel,
+                                          dotted_path, is_jax_jit, jit_call,
+                                          jit_options)
+
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                    ast.SetComp, ast.GeneratorExp)
+
+
+def _scope_allowed(chain) -> bool:
+    """A jit creation is fine at module/class level or anywhere lexically
+    inside a construction-time scope."""
+    return not chain or any(name in INIT_SCOPES for name in chain)
+
+
+def check_jit_scope(model: ModuleModel):
+    """JL002: jax.jit evaluated in a per-call scope."""
+    findings = []
+    # decorators execute in the scope ENCLOSING the decorated def
+    decorator_nodes = set()
+    for fn in model.functions:
+        for dec in fn.node.decorator_list:
+            for sub in ast.walk(dec):
+                decorator_nodes.add(id(sub))
+            if is_jax_jit(dec) or jit_call(dec) is not None:
+                if not _scope_allowed(fn.lexical_chain):
+                    findings.append(Finding(
+                        code="JL002", path=model.path, line=dec.lineno,
+                        col=dec.col_offset,
+                        message=(f"jit decorator on `{fn.name}` is "
+                                 f"evaluated inside "
+                                 f"`{fn.lexical_chain[-1]}` — a fresh "
+                                 f"compile cache per call; build the jit "
+                                 f"once at module or construction time")))
+    for node in ast.walk(model.tree):
+        call = jit_call(node)
+        if call is not node or id(node) in decorator_nodes:
+            continue
+        owner = model.owner(node)
+        if owner is None:
+            continue                         # module/class level: allowed
+        chain = owner.lexical_chain + (owner.name,)
+        if _scope_allowed(chain):
+            continue
+        findings.append(Finding(
+            code="JL002", path=model.path, line=node.lineno,
+            col=node.col_offset,
+            message=(f"jax.jit created inside `{owner.name}` — a fresh "
+                     f"compile cache per call (retrace hazard in any "
+                     f"per-round path); build the jit once at module or "
+                     f"construction time, or suppress with a "
+                     f"justification if this provably runs once")))
+    return findings
+
+
+def _static_bindings(model: ModuleModel) -> dict:
+    """Call-site binding name -> (static positional indices, static
+    keyword names)."""
+    bindings: dict[str, tuple] = {}
+
+    def from_call(call):
+        opts = jit_options(call)
+        nums = tuple(i for i in opts["static_argnums"]
+                     if isinstance(i, int))
+        names = tuple(a for a in opts["static_argnames"]
+                      if isinstance(a, str))
+        return (nums, names) if (nums or names) else None
+
+    for node in ast.walk(model.tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            call = jit_call(node.value)
+            if call is not None and is_jax_jit(call.func):
+                st = from_call(call)
+                tgt = dotted_path(node.targets[0])
+                if st and tgt:
+                    bindings[tgt.split(".")[-1]] = st
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "__setattr__" and len(node.args) == 3:
+            call = jit_call(node.args[2])
+            if call is not None and is_jax_jit(call.func):
+                st = from_call(call)
+                if st and isinstance(node.args[1], ast.Constant) and \
+                        isinstance(node.args[1].value, str):
+                    bindings[node.args[1].value] = st
+    for fn in model.functions:
+        if fn.jit_root and (fn.static_nums or fn.static_names):
+            bindings.setdefault(
+                fn.name, (fn.static_nums, tuple(fn.static_names)))
+    return bindings
+
+
+def check_static_args(model: ModuleModel):
+    """JL003: unhashable literals in jit static positions."""
+    findings = []
+    bindings = _static_bindings(model)
+
+    def flag(node, key, what):
+        findings.append(Finding(
+            code="JL003", path=model.path, line=node.lineno,
+            col=node.col_offset,
+            message=(f"unhashable {what} passed as a static argument of "
+                     f"jit-compiled `{key}` — static args key the "
+                     f"compile cache and must be hashable (use a tuple "
+                     f"/ frozenset / frozen dataclass)")))
+
+    kind = {ast.List: "list literal", ast.Dict: "dict literal",
+            ast.Set: "set literal", ast.ListComp: "list comprehension",
+            ast.DictComp: "dict comprehension",
+            ast.SetComp: "set comprehension",
+            ast.GeneratorExp: "generator expression"}
+    for node in ast.walk(model.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        key = model._donation_key(node)
+        if key is None or key not in bindings:
+            continue
+        nums, names = bindings[key]
+        for i in nums:
+            if i < len(node.args) and isinstance(node.args[i],
+                                                 MUTABLE_LITERALS):
+                flag(node.args[i], key, kind[type(node.args[i])])
+        for kw in node.keywords:
+            if kw.arg in names and isinstance(kw.value, MUTABLE_LITERALS):
+                flag(kw.value, key, kind[type(kw.value)])
+    # def-site: a static parameter with a mutable default
+    for fn in model.functions:
+        if not fn.jit_root:
+            continue
+        for p, default in fn.default_nodes.items():
+            if p in fn.static_names and isinstance(default,
+                                                   MUTABLE_LITERALS):
+                findings.append(Finding(
+                    code="JL003", path=model.path, line=default.lineno,
+                    col=default.col_offset,
+                    message=(f"static parameter `{p}` of jit-compiled "
+                             f"`{fn.name}` has an unhashable default")))
+    return findings
+
+
+def _prune_is_none(test):
+    """Subexpressions of a test that still need the traced-value check:
+    ``x is None`` / ``x is not None`` comparisons and ``"key" in x``
+    membership tests (pytree STRUCTURE — dict keys, not array values)
+    are resolved at trace time and drop out entirely."""
+    if isinstance(test, ast.Compare) and \
+            all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+        return []
+    if isinstance(test, ast.Compare) and \
+            all(isinstance(op, (ast.In, ast.NotIn)) for op in test.ops) \
+            and isinstance(test.left, ast.Constant) \
+            and isinstance(test.left.value, str):
+        return []
+    if isinstance(test, ast.BoolOp):
+        out = []
+        for v in test.values:
+            out.extend(_prune_is_none(v))
+        return out
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _prune_is_none(test.operand)
+    return [test]
+
+
+def check_traced_branch(model: ModuleModel):
+    """JL004: Python control flow on a traced value in the jit tree."""
+    findings = []
+    for fn in model.functions:
+        if not model.is_hot(fn):
+            continue
+        traced = model.traced_names(fn)
+        if not traced:
+            continue
+        for node in model.iter_function_nodes(fn):
+            if isinstance(node, (ast.If, ast.While, ast.Assert, ast.IfExp)):
+                test = node.test
+                stmt = {ast.If: "if", ast.While: "while",
+                        ast.Assert: "assert",
+                        ast.IfExp: "conditional expression"}[type(node)]
+            else:
+                continue
+            for sub in _prune_is_none(test):
+                name = model.mentions_traced(sub, traced)
+                if name:
+                    findings.append(Finding(
+                        code="JL004", path=model.path, line=node.lineno,
+                        col=node.col_offset,
+                        message=(f"`{stmt}` on traced value `{name}` "
+                                 f"inside the jit call tree of "
+                                 f"`{fn.name}` — trace-time Python "
+                                 f"branching on device data; use "
+                                 f"jnp.where / lax.cond / lax.select")))
+                    break
+    return findings
+
+
+def check(model: ModuleModel):
+    return (check_jit_scope(model) + check_static_args(model)
+            + check_traced_branch(model))

@@ -1,0 +1,140 @@
+"""JL006 — sticky-flag discipline.
+
+The paged KV caches carry in-graph error flags — the pool-exhaustion
+scalar ``alloc_failed`` and the per-row capacity flag ``overflowed`` —
+that are STICKY by contract (docs/KV_CACHE.md): once a write is dropped
+the flag must survive every later cache operation until the host reads
+it (``_check_pool_health``) or a sanctioned reset clears it.  A plain
+assignment (``_replace(alloc_failed=this_write_failed)``) silently
+un-sets an earlier round's failure and the serving loop keeps decoding
+on a cache that is missing K/V.
+
+The rule: every write to a sticky flag — a ``_replace(alloc_failed=…)``
+/ ``dataclasses.replace(x, overflowed=…)`` keyword or a plain attribute
+assignment — must derive from the PREVIOUS flag value:
+
+  * OK: ``cache._replace(alloc_failed=cache.alloc_failed | failed)``
+    (accumulation), directly or through local names whose defining
+    expression reads a sticky flag (fori_loop carries included);
+  * OK: explicit initialization to ``None`` / ``False`` /
+    ``jnp.zeros(...)`` — fresh-cache constructors and sanctioned row
+    resets (``jnp.where(rows, False, cache.overflowed)`` reads the old
+    flag and therefore also passes as accumulation-shaped);
+  * OK: ``x.overflowed |= ...`` augmented assignment;
+  * FLAGGED: any other assignment — the write is not provably monotone.
+
+Constructor calls (``PagedAttnCache(...)``, ``StickyFlags(...)``) build
+NEW objects and are exempt; the rule targets updates of an existing
+cache.  A deliberate non-monotone restore (snapshot/rollback) should
+name the restored value after the flag — the engine's ``discard_tail``
+restore passes because its parameters are literally ``alloc_failed`` /
+``overflowed`` — or carry a ``# jaxlint: disable=JL006`` justification.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.jaxlint.core import Finding
+from repro.analysis.jaxlint.model import ModuleModel, dotted_path
+
+CODE = "JL006"
+STICKY = {"alloc_failed", "overflowed"}
+ZERO_CALLS = {"jnp.zeros", "jnp.zeros_like", "np.zeros", "jnp.full",
+              "jnp.broadcast_to"}
+
+
+def _reads_sticky(expr, derived: set) -> bool:
+    """Does ``expr`` read a sticky flag — an ``.alloc_failed`` /
+    ``.overflowed`` attribute, a bare name matching a flag, or a local
+    name derived from one?"""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in STICKY:
+            return True
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                and (node.id in STICKY or node.id in derived):
+            return True
+    return False
+
+
+def _allowed(expr, derived: set) -> bool:
+    if isinstance(expr, ast.Constant) and expr.value in (None, False):
+        return True
+    if isinstance(expr, ast.Call):
+        path = dotted_path(expr.func)
+        if path in ZERO_CALLS:
+            # jnp.zeros(cache.overflowed.shape) style inits are resets
+            # by construction; a zeros-of-shape also reads the old flag
+            return True
+    return _reads_sticky(expr, derived)
+
+
+def _derived_names(model: ModuleModel, fn) -> set:
+    """Local names whose defining statement reads a sticky flag,
+    transitively (covers ``failed = cache.alloc_failed | ...`` and
+    fori_loop carry unpacks seeded with the flag)."""
+    derived: set = set()
+    nodes = list(model.iter_function_nodes(fn)) if fn is not None \
+        else [n for n in ast.walk(model.tree) if model.owner(n) is None]
+    assigns = [n for n in nodes
+               if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign))]
+    for p in fn.params if fn is not None else ():
+        if p in STICKY:
+            derived.add(p)
+    for _ in range(len(assigns) + 1):
+        grew = False
+        for node in assigns:
+            if node.value is None or not _reads_sticky(node.value, derived):
+                continue
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                for leaf in ast.walk(t):
+                    if isinstance(leaf, ast.Name) and leaf.id not in derived:
+                        derived.add(leaf.id)
+                        grew = True
+        if not grew:
+            break
+    return derived
+
+
+def check(model: ModuleModel):
+    findings = []
+
+    def flag(node, what, name):
+        findings.append(Finding(
+            code=CODE, path=model.path, line=node.lineno,
+            col=node.col_offset,
+            message=(f"sticky flag `{name}` is plainly assigned ({what}) "
+                     f"— sticky flags must accumulate from their "
+                     f"previous value (`old | new`, logical_or); a "
+                     f"deliberate snapshot restore needs a "
+                     f"`# jaxlint: disable=JL006` justification")))
+
+    scopes = [None] + list(model.functions)
+    for fn in scopes:
+        derived = _derived_names(model, fn)
+        nodes = list(model.iter_function_nodes(fn)) if fn is not None \
+            else [n for n in ast.walk(model.tree) if model.owner(n) is None]
+        for node in nodes:
+            if isinstance(node, ast.Call):
+                f = node.func
+                is_replace = (isinstance(f, ast.Attribute)
+                              and f.attr == "_replace")
+                path = dotted_path(f)
+                is_dc_replace = path in ("dataclasses.replace", "replace")
+                if not (is_replace or is_dc_replace):
+                    continue
+                for kw in node.keywords:
+                    if kw.arg in STICKY and not _allowed(kw.value, derived):
+                        flag(kw.value, "_replace keyword", kw.arg)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute) and t.attr in STICKY \
+                            and not _allowed(node.value, derived):
+                        flag(node, "attribute assignment", t.attr)
+            elif isinstance(node, ast.AugAssign):
+                if isinstance(node.target, ast.Attribute) and \
+                        node.target.attr in STICKY and \
+                        not isinstance(node.op, ast.BitOr):
+                    flag(node, "augmented assignment", node.target.attr)
+    return findings

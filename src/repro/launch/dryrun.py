@@ -113,6 +113,7 @@ def build_train(cfg, ctx: ShardingContext):
     batch_shardings = {
         k: ctx.sharding(BATCH_AXES.get(k, ("batch",) + (None,) * (
             len(v.shape) - 1)), v.shape) for k, v in specs.items()}
+    # jaxlint: disable=JL002 — launch-time builder, runs once per shape
     fn = jax.jit(step_fn, in_shardings=(state_shardings, batch_shardings))
     return fn, (state_shape, specs)
 
@@ -141,6 +142,7 @@ def build_prefill(cfg, ctx: ShardingContext):
     batch_shardings = {
         k: ctx.sharding(BATCH_AXES.get(k, ("batch",) + (None,) * (
             len(v.shape) - 1)), v.shape) for k, v in specs.items()}
+    # jaxlint: disable=JL002 — launch-time builder, runs once per shape
     fn = jax.jit(prefill, in_shardings=(p_sh, batch_shardings))
     return fn, (params_shape, specs)
 
@@ -176,6 +178,7 @@ def build_decode(cfg, shape_name, ctx: ShardingContext):
             ckv_shape)
         args.append(ckv_sh)
         call_specs.append(ckv_shape)
+    # jaxlint: disable=JL002 — launch-time builder, runs once per shape
     fn = jax.jit(serve_step, in_shardings=tuple(args))
     return fn, call_specs
 

@@ -44,6 +44,7 @@ def main():
     opt = AdamW(learning_rate=args.lr, warmup_steps=min(20, args.steps // 5),
                 total_steps=args.steps)
     state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    # jaxlint: disable=JL002 — CLI entry point, built once per process
     step = jax.jit(make_train_step(model, opt, remat=args.full))
 
     t0 = time.time()

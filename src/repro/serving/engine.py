@@ -88,6 +88,7 @@ from repro.core.speculative import verify
 from repro.core.utility import UtilitySpec
 from repro.models import Model
 from repro.serving.faults import FaultPlan, HealthTracker, RoundFaults
+from repro.serving.guards import TraceGuard
 from repro.serving.kv_cache import (AttnCache, CacheOverflowError, MLACache,
                                     PAGED_TYPES, PoolExhaustedError,
                                     StickyFlags, blocks_for, discard_tail,
@@ -1250,6 +1251,54 @@ class GoodSpeedEngine:
                          s_bucket=self.s_bucket, overlap=self.overlap,
                          admitted=tuple(admitted))
 
+    def dispatch_round(self, state: EngineState, draft_params,
+                       target_params,
+                       caps: Optional[np.ndarray] = None,
+                       plan: Optional[RoundPlan] = None,
+                       faults: Optional[RoundFaults] = None):
+        """Device dispatch of one round: enqueue the phase jits and
+        return ``(new_state, raw_stats, ahead_S)`` with every leaf still
+        an on-device buffer — NO host sync.  ``ahead_S`` is None in sync
+        mode.  All host inputs (caps, fault arrays) are converted
+        EXPLICITLY here (``jnp.asarray``), so a steady-state dispatch is
+        clean under ``jax.transfer_guard("disallow")`` — the transfer
+        fence (serving.guards, tests/test_trace_guard.py) wraps exactly
+        this call.  ``run_round`` adds the host materialization of
+        ``RoundStats``, the round's one sanctioned sync point."""
+        if plan is None:
+            plan = self.plan_round(caps)
+        # dtype-normalize on HOST first: jnp.asarray of an array whose
+        # dtype already matches is an EXPLICIT transfer (clean under
+        # transfer_guard("disallow")), while a converting jnp.asarray —
+        # or a bare numpy/python scalar like the fault deadline — moves
+        # implicitly and trips the fence
+        caps_j = jnp.asarray(np.asarray(plan.caps, np.int32))
+        if faults is not None:
+            faults = RoundFaults(
+                slow=jnp.asarray(np.asarray(faults.slow, np.float32)),
+                uplink=jnp.asarray(np.asarray(faults.uplink, np.float32)),
+                dropped=jnp.asarray(np.asarray(faults.dropped, bool)),
+                deadline=jnp.asarray(np.asarray(faults.deadline,
+                                                np.float32)))
+        if not plan.overlap:
+            new_state, raw = self._round_fn(
+                state, draft_params, target_params, caps_j, faults)
+            return new_state, raw, None
+        d = self._draft_fn(draft_params, state.draft_cache,
+                           state.pending, state.length, state.est,
+                           state.key, caps_j)
+        v = self._verify_fn(target_params, state.target_cache,
+                            state.pending, state.length, d.toks,
+                            d.qlogits, d.S, d.active, d.k_verify)
+        ahead_cache, ahead_S_j, flag = self._ahead_fn(
+            draft_params, d.cache, d.toks, d.S, d.active,
+            state.length, state.est, caps_j, d.key)
+        new_state, raw = self._reconcile_fn(
+            draft_params, target_params, ahead_cache, v.cache,
+            state.est, state.pending, state.length, state.S, d.toks,
+            d.S, d.active, v, d.k_jit, d.key, flag, faults)
+        return new_state, raw, ahead_S_j
+
     def run_round(self, state: EngineState, draft_params, target_params,
                   caps: Optional[np.ndarray] = None,
                   plan: Optional[RoundPlan] = None,
@@ -1264,7 +1313,8 @@ class GoodSpeedEngine:
         the round-(t+1) draft-ahead are in flight together, and the
         deferred reconcile (one round late from the ahead's perspective)
         discards the ahead tail exactly; the host only blocks when it
-        reads the round's stats.
+        reads the round's stats.  The device half is ``dispatch_round``;
+        this wrapper adds the ``RoundStats`` host materialization.
 
         faults: this round's ``RoundFaults`` (``FaultPlan.round_faults``)
         — per-server straggler/uplink multipliers, payload drops and the
@@ -1272,34 +1322,11 @@ class GoodSpeedEngine:
         (one extra compiled variant per phase, shared by every faulted
         round); None keeps the fault-free graph byte-identical to the
         historical round."""
-        if plan is None:
-            plan = self.plan_round(caps)
-        caps_j = jnp.asarray(plan.caps, jnp.int32)
-        if faults is not None:
-            faults = RoundFaults(
-                slow=jnp.asarray(faults.slow, jnp.float32),
-                uplink=jnp.asarray(faults.uplink, jnp.float32),
-                dropped=jnp.asarray(faults.dropped, bool),
-                deadline=jnp.asarray(faults.deadline, jnp.float32))
-        if not plan.overlap:
-            new_state, raw = self._round_fn(
-                state, draft_params, target_params, caps_j, faults)
-            ahead_S = np.zeros((self.n_rows,), np.int32)
-        else:
-            d = self._draft_fn(draft_params, state.draft_cache,
-                               state.pending, state.length, state.est,
-                               state.key, caps_j)
-            v = self._verify_fn(target_params, state.target_cache,
-                                state.pending, state.length, d.toks,
-                                d.qlogits, d.S, d.active, d.k_verify)
-            ahead_cache, ahead_S_j, flag = self._ahead_fn(
-                draft_params, d.cache, d.toks, d.S, d.active,
-                state.length, state.est, caps_j, d.key)
-            new_state, raw = self._reconcile_fn(
-                draft_params, target_params, ahead_cache, v.cache,
-                state.est, state.pending, state.length, state.S, d.toks,
-                d.S, d.active, v, d.k_jit, d.key, flag, faults)
-            ahead_S = np.asarray(ahead_S_j)
+        new_state, raw, ahead_S_j = self.dispatch_round(
+            state, draft_params, target_params, caps=caps, plan=plan,
+            faults=faults)
+        ahead_S = np.zeros((self.n_rows,), np.int32) if ahead_S_j is None \
+            else np.asarray(ahead_S_j)
         (S, m, realized, alpha_hat, goodput, util, wall, emitted, ov,
          missed, arrival) = raw
         stats = RoundStats(
@@ -1436,7 +1463,8 @@ class GoodSpeedEngine:
     def serve_requests(self, key: Array, workload, draft_params,
                        target_params, rounds: int,
                        manager: Optional[RequestManager] = None,
-                       faults: Optional[FaultPlan] = None) -> dict:
+                       faults: Optional[FaultPlan] = None,
+                       strict_compile=False) -> dict:
         """Multi-user serving: drain a request workload with continuous
         batching (the production loop; see module docstring).
 
@@ -1465,6 +1493,18 @@ class GoodSpeedEngine:
         system: the crashed server's seated requests are flagged lost.
         On a scripted rejoin the server's quarantined estimator state is
         re-warmed to the cold init (``_rewarm_estimator``).
+
+        strict_compile: enforce the retrace budget at runtime
+        (serving.guards.TraceGuard).  ``True`` allows each round-phase
+        jit ``1`` new compiled variant over the whole drain (``2`` when
+        a fault plan is active — the traced-faults graph is one extra
+        shared variant); an int sets the budget explicitly, and ``0``
+        is a valid budget — a PRE-WARMED engine re-serving the same
+        bucket shapes must not compile at all (``False``, the default,
+        disables the guard).  The guard checks after EVERY executed
+        round and raises ``RetraceError`` naming the phase and round,
+        instead of the retrace surfacing rounds later as a benchmark
+        regression.
 
         Returns ``{"requests": [...], "rounds": [RoundStats...],
         "summary": {...}}`` with per-request latency (arrival -> finish,
@@ -1500,6 +1540,11 @@ class GoodSpeedEngine:
             return np.concatenate([np.asarray(req.prompt, np.int32),
                                    np.asarray(req.generated, np.int32)])
 
+        guard = None
+        if strict_compile is not False:
+            budget = (1 if faults is None else 2) \
+                if strict_compile is True else int(strict_compile)
+            guard = TraceGuard(self, budget=budget).__enter__()
         # All slots start idle and masked; first admission re-prefills.
         state = self.cold_start(key)
         # requests already active in a caller-supplied manager need their
@@ -1588,6 +1633,8 @@ class GoodSpeedEngine:
             rf = plan.round_faults(r, n) if plan is not None else None
             state, stats = self.run_round(state, draft_params, target_params,
                                           caps=caps, faults=rf)
+            if guard is not None:
+                guard.check(f"round {r}")
             if self.paged_kv:
                 self._check_pool_health(state)
             mgr.record_emitted(stats.emitted)

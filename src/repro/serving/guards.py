@@ -1,0 +1,87 @@
+"""Runtime jit-discipline guards: retrace budgets and the transfer fence.
+
+Static analysis (``repro.analysis.jaxlint``) proves the SHAPE of the
+code; these guards prove the RUN.  Two complementary contracts:
+
+* **Retrace budget** — ``TraceGuard`` promotes the
+  ``GoodSpeedEngine.round_trace_counts()`` telemetry (compiled-variant
+  count per round-phase jit, previously asserted only in
+  ``benchmarks/serve_requests.py``) into an enforced invariant: between
+  ``__enter__`` and each ``check()`` every phase may add at most
+  ``budget`` compiled variants.  One bucket shape compiles each phase
+  exactly once, so ``budget=1`` is the steady-state contract; a fault
+  plan introduces one extra variant per phase (the traced-``RoundFaults``
+  graph, shared by every faulted round), hence ``budget=2`` under
+  faults.  ``GoodSpeedEngine.serve_requests(strict_compile=True)`` wires
+  this around the production loop and checks after every round, so the
+  offending round is named in the error instead of being discovered
+  rounds later in a benchmark assert.
+
+* **Transfer fence** — ``jax.transfer_guard("disallow")`` around
+  ``GoodSpeedEngine.dispatch_round`` (tests/test_trace_guard.py).  Every
+  host->device movement in the dispatch path must be EXPLICIT
+  (``jnp.asarray`` / ``jax.device_put``); a raw numpy array or Python
+  scalar reaching a warm jit is an implicit transfer and raises under
+  the fence.  Host work deliberately OUTSIDE the fence: placement views
+  and admission (host-side orchestration between rounds), and the
+  ``RoundStats`` materialization in ``run_round`` (the round's one
+  sanctioned device->host sync point).  docs/STATIC_ANALYSIS.md has the
+  full region map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+class RetraceError(RuntimeError):
+    """A round-phase jit exceeded its compile budget (retrace in the
+    serving loop — every server stalls for a full XLA compile)."""
+
+
+@dataclasses.dataclass
+class TraceGuard:
+    """Context manager enforcing the one-compile-per-phase-per-bucket
+    contract over any object exposing ``round_trace_counts() -> dict``
+    (the ``GoodSpeedEngine`` protocol).
+
+    ``budget`` is the number of NEW compiled variants each phase may
+    acquire while the guard is active — 1 for a fixed-bucket serve, 2
+    when a fault plan adds the traced-faults variant.  ``check()`` may
+    be called any number of times (serve_requests calls it per round);
+    ``__exit__`` runs a final check unless an exception is already
+    propagating.
+    """
+    engine: object
+    budget: int = 1
+    baseline: Optional[dict] = None
+
+    def __enter__(self) -> "TraceGuard":
+        self.baseline = dict(self.engine.round_trace_counts())
+        return self
+
+    def check(self, where: str = "") -> dict:
+        """Raise ``RetraceError`` if any phase compiled more than
+        ``budget`` new variants since ``__enter__``; returns the current
+        counts otherwise."""
+        assert self.baseline is not None, \
+            "TraceGuard.check() before __enter__"
+        counts = self.engine.round_trace_counts()
+        over = {ph: (c, self.baseline.get(ph, 0)) for ph, c in counts.items()
+                if c - self.baseline.get(ph, 0) > self.budget}
+        if over:
+            detail = ", ".join(
+                f"{ph}: {base}->{c} compiles (budget +{self.budget})"
+                for ph, (c, base) in sorted(over.items()))
+            at = f" at {where}" if where else ""
+            raise RetraceError(
+                f"round-phase retrace{at}: {detail}.  A phase recompiled "
+                f"mid-serve — check for shape drift in the round inputs, "
+                f"weak dtypes, or a fresh jit in the round path "
+                f"(jaxlint JL002).")
+        return counts
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.check("exit")
+        return False

@@ -1,0 +1,476 @@
+"""jaxlint (repro.analysis.jaxlint): fixture tests per rule family —
+each seeds a violation the rule must catch AND shows the corrected form
+it must accept — plus the suppression contract and the self-hosted gate
+(the whole of src/ lints clean; this is the `make lint-check` / CI
+contract as a tier-1 test).
+"""
+import textwrap
+
+import pytest
+
+from repro.analysis.jaxlint import lint_paths, lint_source
+
+
+def codes(src, select=None):
+    return [f.code for f in lint_source(textwrap.dedent(src),
+                                        codes=select)]
+
+
+# ---------------------------------------------------------------------------
+# JL001 donation-after-use
+# ---------------------------------------------------------------------------
+
+class TestDonation:
+    def test_read_after_donate_flagged(self):
+        src = """
+        import jax
+        step = jax.jit(lambda s, x: s, donate_argnums=(0,))
+
+        def loop(state, xs):
+            out = step(state, xs)
+            return state.cache        # read of donated binding
+        """
+        assert codes(src) == ["JL001"]
+
+    def test_donate_and_rebind_accepted(self):
+        src = """
+        import jax
+        step = jax.jit(lambda s, x: s, donate_argnums=(0,))
+
+        def loop(state, xs):
+            state = step(state, xs)   # sanctioned: rebinding clears
+            return state.cache
+        """
+        assert codes(src) == []
+
+    def test_method_donator_via_setattr(self):
+        src = """
+        import jax
+
+        class Engine:
+            def __post_init__(self):
+                object.__setattr__(
+                    self, "_round_fn",
+                    jax.jit(self._round, donate_argnums=(0,)))
+
+            def run(self, state, params):
+                new_state, stats = self._round_fn(state, params)
+                bad = state.pending      # donated buffers are gone
+                return new_state, stats
+        """
+        assert codes(src) == ["JL001"]
+
+    def test_early_return_branch_does_not_leak(self):
+        # the engine's dispatch idiom: the sync branch donates and
+        # RETURNS; the overlap path after the `if` reads state freely
+        src = """
+        import jax
+        step = jax.jit(lambda s, x: s, donate_argnums=(0,))
+
+        def dispatch(state, xs, sync):
+            if sync:
+                return step(state, xs)
+            return state.pending + xs
+        """
+        assert codes(src) == []
+
+    def test_loop_wraparound_read_flagged(self):
+        src = """
+        import jax
+        step = jax.jit(lambda s, x: s, donate_argnums=(0,))
+
+        def loop(state, xs):
+            for x in xs:
+                y = state.pending     # round 2 reads round 1's donation
+                out = step(state, x)
+            return out
+        """
+        assert "JL001" in codes(src)
+
+    def test_transitive_donation_through_wrapper(self):
+        # run_round forwards its state into the donating jit; a caller
+        # of run_round therefore also donates
+        src = """
+        import jax
+        step = jax.jit(lambda s, x: s, donate_argnums=(0,))
+
+        def run_round(state, x):
+            return step(state, x)
+
+        def serve(state, xs):
+            out = run_round(state, xs)
+            return state.cache
+        """
+        assert "JL001" in codes(src)
+
+
+# ---------------------------------------------------------------------------
+# JL002 jit-in-hot-scope
+# ---------------------------------------------------------------------------
+
+class TestJitScope:
+    def test_jit_inside_plain_function_flagged(self):
+        src = """
+        import jax
+
+        def round_step(params, x):
+            f = jax.jit(lambda p, v: v)   # fresh cache every call
+            return f(params, x)
+        """
+        assert codes(src) == ["JL002"]
+
+    def test_module_level_and_post_init_accepted(self):
+        src = """
+        import jax
+        g = jax.jit(lambda x: x)
+
+        class Engine:
+            def __post_init__(self):
+                object.__setattr__(self, "_fn", jax.jit(self._core))
+
+                def make(model):          # factory nested in init scope
+                    return jax.jit(lambda p: model(p))
+                object.__setattr__(self, "_pre", make(self))
+        """
+        assert codes(src) == []
+
+    def test_partial_jit_decorator_in_function_flagged(self):
+        src = """
+        import functools
+        import jax
+
+        def build(x):
+            @functools.partial(jax.jit, static_argnums=(1,))
+            def inner(v, k):
+                return v * k
+            return inner(x, 2)
+        """
+        assert codes(src) == ["JL002"]
+
+    def test_suppression_with_justification(self):
+        src = """
+        import jax
+
+        def main():
+            # jaxlint: disable=JL002 — CLI entry, built once per process
+            f = jax.jit(lambda x: x)
+            return f(1)
+        """
+        assert codes(src) == []
+
+
+# ---------------------------------------------------------------------------
+# JL003 unhashable-static-arg
+# ---------------------------------------------------------------------------
+
+class TestStaticArgs:
+    def test_dict_literal_at_static_position_flagged(self):
+        src = """
+        import jax
+        f = jax.jit(lambda x, cfg: x, static_argnums=(1,))
+
+        def call(x):
+            return f(x, {"s_max": 4})     # unhashable cache key
+        """
+        assert codes(src) == ["JL003"]
+
+    def test_tuple_at_static_position_accepted(self):
+        src = """
+        import jax
+        f = jax.jit(lambda x, cfg: x, static_argnums=(1,))
+
+        def call(x):
+            return f(x, ("s_max", 4))
+        """
+        assert codes(src) == []
+
+    def test_static_argnames_keyword_flagged(self):
+        src = """
+        import jax
+        f = jax.jit(lambda x, shapes=None: x, static_argnames=("shapes",))
+
+        def call(x):
+            return f(x, shapes=[4, 8])
+        """
+        assert codes(src) == ["JL003"]
+
+    def test_mutable_default_on_jit_root_flagged(self):
+        src = """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("buckets",))
+        def step(x, buckets=[8, 16]):
+            return x
+        """
+        assert codes(src) == ["JL003"]
+
+
+# ---------------------------------------------------------------------------
+# JL004 traced-python-branch
+# ---------------------------------------------------------------------------
+
+class TestTracedBranch:
+    def test_if_on_traced_value_flagged(self):
+        src = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            if x.sum() > 0:               # concretizes a tracer
+                return x
+            return -x
+        """
+        assert codes(src) == ["JL004"]
+
+    def test_where_accepted(self):
+        src = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.where(x.sum() > 0, x, -x)
+        """
+        assert codes(src) == []
+
+    def test_is_none_and_key_membership_exempt(self):
+        # structure checks resolved at trace time: `faults is None`
+        # (engine round) and `"prefix_embeds" in batch` (pytree keys)
+        src = """
+        import jax
+
+        @jax.jit
+        def step(batch, faults=None):
+            y = batch["tokens"]
+            if faults is not None:
+                y = y * faults["slow"]
+            if "prefix_embeds" in batch:
+                y = y + batch["prefix_embeds"]
+            return y
+        """
+        assert codes(src) == []
+
+    def test_shape_branch_exempt(self):
+        src = """
+        import jax
+
+        @jax.jit
+        def step(x):
+            if x.shape[0] > 1:            # static metadata: fine
+                return x
+            return x[:1]
+        """
+        assert codes(src) == []
+
+    def test_while_in_reachable_helper_flagged(self):
+        # hotness propagates through the same-module call graph
+        src = """
+        import jax
+        import jax.numpy as jnp
+
+        def helper(x):
+            while x[0] > 0:
+                x = x - 1
+            return x
+
+        @jax.jit
+        def step(x):
+            return helper(x)
+        """
+        assert codes(src) == ["JL004"]
+
+
+# ---------------------------------------------------------------------------
+# JL005 host-sync-in-jit
+# ---------------------------------------------------------------------------
+
+class TestHostSync:
+    def test_item_flagged(self):
+        src = """
+        import jax
+
+        @jax.jit
+        def step(x):
+            return x / x.sum().item()
+        """
+        assert codes(src) == ["JL005"]
+
+    def test_numpy_on_traced_flagged(self):
+        src = """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def step(x):
+            return np.asarray(x) * 2
+        """
+        assert codes(src) == ["JL005"]
+
+    def test_concretizer_and_fstring_flagged(self):
+        src = """
+        import jax
+
+        @jax.jit
+        def step(x):
+            k = int(x[0])
+            msg = f"budget={x}"
+            return x + k
+        """
+        got = codes(src)
+        assert got.count("JL005") == 2
+
+    def test_host_path_not_flagged(self):
+        # the same operations OUTSIDE the jit call tree are the
+        # sanctioned materialization pattern (engine run_round)
+        src = """
+        import numpy as np
+
+        def materialize(raw):
+            return np.asarray(raw), float(raw[0])
+        """
+        assert codes(src) == []
+
+    def test_jnp_equivalent_accepted(self):
+        src = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.asarray(x) / jnp.sum(x)
+        """
+        assert codes(src) == []
+
+
+# ---------------------------------------------------------------------------
+# JL006 sticky-flag-overwrite
+# ---------------------------------------------------------------------------
+
+class TestStickyFlags:
+    def test_plain_replace_flagged(self):
+        src = """
+        def commit(cache, failed):
+            return cache._replace(alloc_failed=failed)   # drops history
+        """
+        assert codes(src) == ["JL006"]
+
+    def test_accumulation_accepted(self):
+        src = """
+        def commit(cache, failed):
+            return cache._replace(
+                alloc_failed=cache.alloc_failed | failed)
+        """
+        assert codes(src) == []
+
+    def test_derived_local_accepted(self):
+        src = """
+        import jax.numpy as jnp
+
+        def commit(cache, needs, cand, p):
+            failed = cache.alloc_failed | jnp.any(needs & (cand >= p))
+            return cache._replace(alloc_failed=failed)
+        """
+        assert codes(src) == []
+
+    def test_sanctioned_reset_accepted(self):
+        src = """
+        import jax.numpy as jnp
+
+        def reset_rows(cache, rows):
+            return cache._replace(
+                overflowed=jnp.where(rows, False, cache.overflowed))
+
+        def fresh(cache):
+            return cache._replace(
+                overflowed=jnp.zeros(cache.overflowed.shape, bool),
+                alloc_failed=False)
+        """
+        assert codes(src) == []
+
+    def test_snapshot_restore_param_name_convention(self):
+        # discard_tail restore: a parameter literally named after the
+        # flag is the sanctioned rollback spelling
+        src = """
+        def restore(cache, alloc_failed, overflowed):
+            return cache._replace(alloc_failed=alloc_failed,
+                                  overflowed=overflowed)
+        """
+        assert codes(src) == []
+
+    def test_attribute_assign_flagged(self):
+        src = """
+        def poke(cache, x):
+            cache.overflowed = x
+            return cache
+        """
+        assert codes(src) == ["JL006"]
+
+
+# ---------------------------------------------------------------------------
+# driver: suppression, selection, syntax errors, self-hosting
+# ---------------------------------------------------------------------------
+
+class TestDriver:
+    def test_suppression_on_line_and_line_above(self):
+        src = """
+        import jax
+
+        def f(x):
+            g = jax.jit(lambda v: v)  # jaxlint: disable=JL002 — run-once
+            # jaxlint: disable=JL002 — run-once
+            h = jax.jit(lambda v: v)
+            return g(x) + h(x)
+        """
+        assert codes(src) == []
+
+    def test_suppression_is_code_specific(self):
+        src = """
+        import jax
+
+        def f(x):
+            g = jax.jit(lambda v: v)  # jaxlint: disable=JL005
+            return g(x)
+        """
+        assert codes(src) == ["JL002"]
+
+    def test_select_filters_families(self):
+        src = """
+        import jax
+
+        def f(x):
+            g = jax.jit(lambda v: v)
+            return g(x)
+        """
+        assert codes(src, select=["JL005"]) == []
+        assert codes(src, select=["JL002"]) == ["JL002"]
+
+    def test_syntax_error_is_jl000(self):
+        assert codes("def f(:\n    pass") == ["JL000"]
+
+    def test_finding_format(self):
+        fs = lint_source("import jax\n\ndef f(x):\n"
+                         "    return jax.jit(lambda v: v)(x)\n",
+                         path="m.py")
+        assert len(fs) == 1
+        assert fs[0].format().startswith("m.py:4:")
+        assert "JL002" in fs[0].format()
+
+    def test_cli_exit_codes(self, tmp_path):
+        from repro.analysis.jaxlint.core import main
+        bad = tmp_path / "bad.py"
+        bad.write_text("import jax\n\ndef f(x):\n"
+                       "    return jax.jit(lambda v: v)(x)\n")
+        ok = tmp_path / "ok.py"
+        ok.write_text("x = 1\n")
+        assert main([str(ok)]) == 0
+        assert main([str(bad)]) == 1
+        assert main([str(bad), "--select", "jl005"]) == 0
+
+
+def test_self_hosted_src_is_clean():
+    """The CI gate: the entire src/ tree lints at zero findings (every
+    violation fixed or carrying a justified inline suppression)."""
+    findings = lint_paths(["src"])
+    assert findings == [], "\n".join(f.format() for f in findings)

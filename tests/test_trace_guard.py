@@ -1,0 +1,198 @@
+"""Runtime jit-discipline guards (serving.guards): the retrace budget
+and the transfer fence — the dynamic complement of the jaxlint static
+rules (docs/STATIC_ANALYSIS.md).
+
+Retrace budget: the mixed admit/retire/EOS drain compiles each round
+phase AT MOST ONCE per bucket shape, across sync x overlap and jnp x
+kernel backends — previously a benchmark-only assertion
+(benchmarks/serve_requests.py), promoted here to tier-1 via
+``serve_requests(strict_compile=...)``.
+
+Transfer fence: ``jax.transfer_guard("disallow")`` around
+``dispatch_round`` proves a steady-state round performs NO implicit
+host->device transfers — every host input (caps, fault arrays) is
+explicitly converted (``jnp.asarray``) before dispatch.  Host work
+deliberately OUTSIDE the fence, by design:
+
+  * ``run_round``'s RoundStats materialization (``np.asarray`` of the
+    raw device tuple) — the round's one sanctioned sync point;
+  * placement views / admission prefill (``_placement_view``,
+    ``_admit_rows``) — between-round orchestration on host buffers;
+  * fault-plan compilation (``FaultPlan.round_faults`` builds numpy
+    arrays; ``dispatch_round`` lifts them explicitly);
+  * pool-health checks (``_check_pool_health`` reads the small
+    allocator fields after the round returns).
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import mixed_trace_requests
+from repro.serving.engine import GoodSpeedEngine
+from repro.serving.faults import FaultEvent, FaultPlan
+from repro.serving.guards import RetraceError, TraceGuard
+
+
+def make_engine(serve_pair, **kw):
+    dm, tm, dp, tp = serve_pair
+    base = dict(draft_model=dm, target_model=tm, n_servers=2, C=8,
+                s_max=4, cache_len=128, kv_block_size=16)
+    base.update(kw)
+    return GoodSpeedEngine(**base), dp, tp
+
+
+# ---------------------------------------------------------------------------
+# retrace budget: one compile per phase per bucket, enforced in-loop
+# ---------------------------------------------------------------------------
+
+class TestRetraceBudget:
+    @pytest.mark.parametrize("overlap", [False, True],
+                             ids=["sync", "overlap"])
+    def test_mixed_drain_compiles_once(self, serve_pair, overlap):
+        """The acceptance drain (admits, cap/EOS retirements, queued
+        successors, idle tail) holds the one-compile-per-phase budget
+        end to end — any shape drift in the round inputs would raise
+        RetraceError at the offending round."""
+        eng, dp, tp = make_engine(serve_pair, overlap=overlap)
+        rep = eng.serve_requests(jax.random.PRNGKey(0),
+                                 mixed_trace_requests(7), dp, tp,
+                                 rounds=60, strict_compile=True)
+        assert rep["summary"]["completed"] == 7
+        counts = eng.round_trace_counts()
+        assert counts and all(v == 1 for v in counts.values()), counts
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("overlap", [False, True],
+                             ids=["sync", "overlap"])
+    def test_mixed_drain_compiles_once_kernel(self, serve_pair, overlap):
+        """Same budget through the Pallas kernel round (paged caches +
+        flash/paged-flash attention)."""
+        eng, dp, tp = make_engine(serve_pair, overlap=overlap,
+                                  paged_kv=True, attn_backend="kernel")
+        rep = eng.serve_requests(jax.random.PRNGKey(0),
+                                 mixed_trace_requests(7), dp, tp,
+                                 rounds=60, strict_compile=True)
+        assert rep["summary"]["completed"] == 7
+        counts = eng.round_trace_counts()
+        assert counts and all(v == 1 for v in counts.values()), counts
+
+    def test_prewarmed_drain_holds_zero_budget(self, serve_pair):
+        """After one drain, a second identical-bucket drain on the SAME
+        engine must not compile anything: strict_compile=0 (a valid
+        budget, distinct from False=off) enforces it per round."""
+        eng, dp, tp = make_engine(serve_pair)
+        eng.serve_requests(jax.random.PRNGKey(0), mixed_trace_requests(3),
+                           dp, tp, rounds=40)
+        rep = eng.serve_requests(jax.random.PRNGKey(1),
+                                 mixed_trace_requests(3), dp, tp,
+                                 rounds=40, strict_compile=0)
+        assert rep["summary"]["completed"] == 3
+
+    def test_cold_engine_trips_zero_budget(self, serve_pair):
+        """The guard actually fires through serve_requests: a cold
+        engine's first compile exceeds budget 0 and the error names the
+        phase and round."""
+        eng, dp, tp = make_engine(serve_pair)
+        with pytest.raises(RetraceError, match=r"round 0.*round:.*budget"):
+            eng.serve_requests(jax.random.PRNGKey(0),
+                               mixed_trace_requests(3), dp, tp,
+                               rounds=10, strict_compile=0)
+
+    def test_trace_guard_context_manager(self, serve_pair):
+        """Direct TraceGuard use: budget 0 around a cold run_round
+        raises on __exit__; budget 1 passes and check() returns the
+        counts."""
+        eng, dp, tp = make_engine(serve_pair, C=6, s_max=3, cache_len=64)
+        prompts = [np.arange(1, 6, dtype=np.int32)] * eng.n_rows
+        state = eng.init(jax.random.PRNGKey(0), prompts, dp, tp)
+        with pytest.raises(RetraceError, match="round-phase retrace"):
+            with TraceGuard(eng, budget=0):
+                state, _ = eng.run_round(state, dp, tp)
+        # warm now; a fresh zero-budget guard over more fixed-shape
+        # rounds is clean, and varying cap VALUES must not retrace
+        with TraceGuard(eng, budget=0) as guard:
+            for r in range(3):
+                caps = np.asarray([3, 2 + (r % 2)], np.int32)
+                state, _ = eng.run_round(state, dp, tp, caps=caps)
+            counts = guard.check("after 3 rounds")
+        assert all(v == 1 for v in counts.values()), counts
+
+    def test_faulted_drain_within_default_budget(self, serve_pair):
+        """A fault plan routes every round through the traced-faults
+        graph; strict_compile=True widens the budget to 2 and the drain
+        stays within it."""
+        eng, dp, tp = make_engine(serve_pair)
+        plan = FaultPlan(events=(
+            FaultEvent(round=1, kind="slowdown", server=0, factor=3.0,
+                       duration=2),))
+        rep = eng.serve_requests(jax.random.PRNGKey(0),
+                                 mixed_trace_requests(3), dp, tp,
+                                 rounds=40, faults=plan,
+                                 strict_compile=True)
+        assert rep["summary"]["completed"] == 3
+        assert all(v <= 2 for v in eng.round_trace_counts().values())
+
+
+# ---------------------------------------------------------------------------
+# transfer fence: no implicit transfers in the dispatch path
+# ---------------------------------------------------------------------------
+
+class TestTransferFence:
+    def test_fence_fires_on_this_backend(self):
+        """Meta-test guarding against a vacuous pass: an implicit
+        host->device transfer (raw numpy argument into a warm jit) must
+        raise under the fence on this backend."""
+        f = jax.jit(lambda x: x * 2)
+        xn = np.arange(8, dtype=np.int32)
+        f(xn)                                      # warm outside
+        with pytest.raises(Exception, match="isallowed host-to-device"):
+            with jax.transfer_guard("disallow"):
+                f(xn)
+
+    @pytest.mark.parametrize("overlap", [False, True],
+                             ids=["sync", "overlap"])
+    def test_steady_state_dispatch_is_transfer_clean(self, serve_pair,
+                                                     overlap):
+        """Steady-state rounds dispatch with zero implicit transfers:
+        after warmup, dispatch_round runs under
+        ``jax.transfer_guard("disallow")`` — host caps enter via the
+        explicit ``jnp.asarray`` and every other operand is already a
+        device buffer (the donated state round-trips on device).  The
+        stats materialization stays outside the fence (the sanctioned
+        sync point; see module docstring for the full outside-by-design
+        list)."""
+        eng, dp, tp = make_engine(serve_pair, overlap=overlap, C=6,
+                                  s_max=3, cache_len=64)
+        prompts = [np.arange(1, 6, dtype=np.int32)] * eng.n_rows
+        state = eng.init(jax.random.PRNGKey(0), prompts, dp, tp)
+        state, _ = eng.run_round(state, dp, tp)    # warmup + first sync
+        with jax.transfer_guard("disallow"):
+            for r in range(3):
+                caps = np.asarray([3, 2 + (r % 2)], np.int32)
+                state, raw, ahead = eng.dispatch_round(state, dp, tp,
+                                                       caps=caps)
+        # materialize OUTSIDE the fence; the round loop stayed healthy
+        state, stats = eng.run_round(state, dp, tp)
+        assert stats.S.shape == (eng.n_rows,)
+        assert all(v == 1 for v in eng.round_trace_counts().values())
+
+    def test_faulted_dispatch_is_transfer_clean(self, serve_pair):
+        """Fault arrays are host numpy (FaultPlan.round_faults); the
+        dispatch lifts them explicitly, so a faulted round is as
+        transfer-clean as a nominal one."""
+        eng, dp, tp = make_engine(serve_pair, C=6, s_max=3, cache_len=64)
+        plan = FaultPlan(events=(
+            FaultEvent(round=0, kind="slowdown", server=0, factor=2.0,
+                       duration=8),))
+        prompts = [np.arange(1, 6, dtype=np.int32)] * eng.n_rows
+        state = eng.init(jax.random.PRNGKey(0), prompts, dp, tp)
+        state, _ = eng.run_round(state, dp, tp,
+                                 faults=plan.round_faults(0, eng.n_servers))
+        with jax.transfer_guard("disallow"):
+            for r in range(1, 3):
+                rf = plan.round_faults(r, eng.n_servers)
+                state, raw, ahead = eng.dispatch_round(state, dp, tp,
+                                                       faults=rf)
+        state, stats = eng.run_round(
+            state, dp, tp, faults=plan.round_faults(3, eng.n_servers))
+        assert stats.S.shape == (eng.n_rows,)
